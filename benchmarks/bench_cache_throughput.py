@@ -1,0 +1,51 @@
+"""Fig 11 (cache performance), Fig 12 (avg/peak throughput + per-source load).
+
+Paper: miss rates 70% (1GB) -> 4-5.5% (4GB); average throughput 4 Gb/s (FA)
+to 13.9 Gb/s (best DD), peak up to ~100 Gb/s; GPFS load 4 -> 0.4 Gb/s.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from .paper_experiments import run
+
+
+def fig11(num_tasks: int) -> List[Tuple[str, float, str]]:
+    rows = []
+    for name in ("gcc-1g", "gcc-1.5g", "gcc-2g", "gcc-4g", "mch-4g", "mcu-4g"):
+        res, wall = run(name, num_tasks)
+        rows.append((
+            f"fig11/cache/{name}",
+            wall * 1e6 / max(1, res.tasks_done),
+            f"hit_local={res.hit_rate_local:.3f};hit_remote={res.hit_rate_remote:.3f};"
+            f"miss={res.miss_rate:.3f}",
+        ))
+    return rows
+
+
+def fig12(num_tasks: int) -> List[Tuple[str, float, str]]:
+    rows = []
+    for name in ("fa", "gcc-1g", "gcc-1.5g", "gcc-2g", "gcc-4g", "mch-4g", "mcu-4g"):
+        res, wall = run(name, num_tasks)
+        total = sum(res.bytes_by_source.values()) or 1.0
+        gpfs_share = res.bytes_by_source["gpfs"] / total
+        remote_share = res.bytes_by_source["remote"] / total
+        rows.append((
+            f"fig12/throughput/{name}",
+            wall * 1e6 / max(1, res.tasks_done),
+            f"avg_gbps={res.avg_throughput_gbps:.1f};"
+            f"peak_gbps={res.peak_throughput_gbps():.1f};"
+            f"gpfs_load_gbps={res.avg_throughput_gbps * gpfs_share:.2f};"
+            f"network_gbps={res.avg_throughput_gbps * remote_share:.2f}",
+        ))
+    return rows
+
+
+def main(num_tasks: int = 25_000) -> List[Tuple[str, float, str]]:
+    return fig11(num_tasks) + fig12(num_tasks)
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,79 @@
+"""Fig 13 (performance index + speedup) and Fig 14 (slowdown vs arrival rate)
+and Fig 15 (average response time).
+
+Paper: speedup up to 3.5X; PI ratio DD/FA up to 34X; static-64 PI 0.33 of
+best; FA saturates at 59 tasks/s; response 3.1 s (best DD) vs 1870 s (GPFS).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from .paper_experiments import run
+
+
+NAMES = ("fa", "gcc-1g", "gcc-1.5g", "gcc-2g", "gcc-4g", "mch-4g", "mcu-4g",
+         "gcc-4g-static")
+
+
+def fig13(num_tasks: int) -> List[Tuple[str, float, str]]:
+    base, _ = run("fa", num_tasks)
+    raw = {}
+    for name in NAMES:
+        res, _ = run(name, num_tasks)
+        raw[name] = res.performance_index_raw(base.wet_s)
+    top = max(raw.values()) or 1.0
+    rows = []
+    for name in NAMES:
+        res, wall = run(name, num_tasks)
+        sp = res.speedup_vs(base.wet_s)
+        pi = raw[name] / top
+        rows.append((
+            f"fig13/pi/{name}", wall * 1e6 / max(1, res.tasks_done),
+            f"speedup={sp:.2f};pi={pi:.2f};cpu_h={res.cpu_time_hours:.1f};"
+            f"pi_vs_fa={raw[name] / max(raw['fa'], 1e-9):.1f}x",
+        ))
+    return rows
+
+
+def fig14(num_tasks: int) -> List[Tuple[str, float, str]]:
+    rows = []
+    for name in ("fa", "gcc-1g", "gcc-1.5g", "gcc-4g"):
+        res, wall = run(name, num_tasks)
+        sl = res.slowdown_by_interval()
+        keys = sorted(sl)
+        profile = ";".join(f"i{k}={sl[k]:.1f}" for k in keys[:: max(1, len(keys) // 6)])
+        saturated = next((k for k in keys if sl[k] > 2.0), None)
+        rows.append((
+            f"fig14/slowdown/{name}", wall * 1e6 / max(1, res.tasks_done),
+            f"max_slowdown={max(sl.values()):.1f};"
+            f"saturation_interval={saturated};{profile}",
+        ))
+    return rows
+
+
+def fig15(num_tasks: int) -> List[Tuple[str, float, str]]:
+    rows = []
+    base, _ = run("fa", num_tasks)
+    best = None
+    for name in NAMES:
+        res, wall = run(name, num_tasks)
+        rows.append((
+            f"fig15/response/{name}", wall * 1e6 / max(1, res.tasks_done),
+            f"avg_response_s={res.avg_response_s:.2f}",
+        ))
+        if name != "fa":
+            best = min(best or 1e18, res.avg_response_s)
+    ratio = base.avg_response_s / max(best, 1e-9)
+    rows.append(("fig15/response/improvement", 0.0,
+                 f"fa_over_best_dd={ratio:.0f}x(paper:>500x)"))
+    return rows
+
+
+def main(num_tasks: int = 25_000) -> List[Tuple[str, float, str]]:
+    return fig13(num_tasks) + fig14(num_tasks) + fig15(num_tasks)
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

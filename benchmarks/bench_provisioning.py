@@ -1,0 +1,35 @@
+"""Figs 4-10: summary views of the 250K-task ramp under each policy/cache.
+
+One row per experiment: WET, efficiency, hit rates, peak queue, CPU-hours —
+the numbers behind every summary-view figure — validated against the
+paper's reported values where available.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from .paper_experiments import PAPER_WET, run
+
+
+def main(num_tasks: int = 25_000, names=None) -> List[Tuple[str, float, str]]:
+    from .paper_experiments import EXPERIMENTS
+    rows = []
+    for name in (names or EXPERIMENTS):
+        res, wall = run(name, num_tasks)
+        scale = num_tasks / 250_000
+        paper = PAPER_WET.get(name)
+        derived = (
+            f"wet_s={res.wet_s:.0f};eff={res.efficiency:.2f};"
+            f"hit_local={res.hit_rate_local:.2f};hit_remote={res.hit_rate_remote:.2f};"
+            f"miss={res.miss_rate:.2f};peak_queue={res.peak_queue};"
+            f"cpu_h={res.cpu_time_hours:.1f};util={res.avg_cpu_util:.2f};"
+            f"paper_wet_s={paper if paper else 'n/a'}{'@full-scale' if scale < 1 else ''}"
+        )
+        rows.append((f"fig4-10/{name}", wall * 1e6 / max(1, res.tasks_done), derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,58 @@
+"""Roofline report: reads the dry-run artifacts (launch/dryrun.py output) and
+prints per-(arch x shape x mesh) terms + dominant bottleneck.
+
+This benchmark does not recompile — compiling all 66 cells takes ~40 min and
+is done once by ``python -m repro.launch.dryrun --all --both-meshes``;
+artifacts live in artifacts/dryrun/*.json.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(art_dir: str = ART):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main(num_tasks: int = 0) -> List[Tuple[str, float, str]]:
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline/missing", 0.0,
+                 f"no dry-run artifacts in {ART}; run python -m repro.launch.dryrun --all")]
+    ok = [c for c in cells if c.get("ok")]
+    fail = [c for c in cells if not c.get("ok")]
+    for c in ok:
+        t = c["roofline_terms_s"]
+        step = max(t.values())
+        mfu_bound = (c["model_flops_per_device"] / 197e12) / step if step else 0.0
+        rows.append((
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            0.0,
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};dominant={c['dominant_term']};"
+            f"peak_gib={c['memory']['peak_device_gib']};"
+            f"useful_flops={c['useful_flops_ratio']:.2f};"
+            f"roofline_mfu_bound={mfu_bound:.3f}",
+        ))
+    for c in fail:
+        rows.append((f"roofline/FAILED/{c['arch']}/{c['shape']}/{c['mesh']}", 0.0,
+                     c.get("error", "?")[:120]))
+    rows.append(("roofline/summary", 0.0,
+                 f"cells_ok={len(ok)};cells_failed={len(fail)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

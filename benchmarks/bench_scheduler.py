@@ -1,0 +1,80 @@
+"""Fig 3: data-aware scheduler performance (scheduling decisions/second).
+
+Measures the REAL ``core.scheduler`` implementation under the paper's
+microbenchmark setup: tasks over 10K 1-byte files (uniform random), 32 nodes
+(64 executors), window 3200.  Paper (Java, 2008 Xeon): 2981/s
+first-available down to 1322/s max-cache-hit.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (
+    CentralizedIndex,
+    DataAwareScheduler,
+    ExecutorState,
+    Task,
+)
+
+POLICIES = ("first-available", "max-compute-util", "max-cache-hit",
+            "good-cache-compute")
+
+
+def bench_policy(policy: str, num_tasks: int = 25_000, num_files: int = 10_000,
+                 executors: int = 64, window: int = 3200, seed: int = 0):
+    rng = random.Random(seed)
+    idx = CentralizedIndex()
+    s = DataAwareScheduler(policy=policy, window=window, index=idx)
+    for i in range(executors):
+        s.register_executor(f"e{i}")
+    # warm caches like the steady state: each executor holds ~150 files
+    files = [f"f{i:05d}" for i in range(num_files)]
+    for e in range(executors):
+        for f in rng.sample(files, 150):
+            idx.add(f, f"e{e}")
+    tasks = [Task(i, (files[rng.randrange(num_files)],), 0.0)
+             for i in range(num_tasks)]
+
+    names = [f"e{i}" for i in range(executors)]
+    t0 = time.perf_counter()
+    decisions = 0
+    submitted = 0
+    ti = iter(tasks)
+    while decisions < num_tasks and (submitted < num_tasks or s.queue_length()):
+        # keep a backlog of ~window tasks like the saturated service
+        while submitted < num_tasks and s.queue_length() < window:
+            s.submit(next(ti))
+            submitted += 1
+        before = decisions
+        # notification wave (phase 1) until the policy stalls
+        while s.notify() is not None:
+            decisions += 1
+        # pull wave (phase 2): free executors ask for work
+        for e in names:
+            if s.executor_state(e) == ExecutorState.FREE and s.queue_length():
+                s.set_state(e, ExecutorState.PENDING)
+                decisions += len(s.pick_tasks(e, m=1))
+        # completion wave: all running tasks finish
+        for e in names:
+            s.set_state(e, ExecutorState.FREE)
+        if decisions == before:
+            break  # policy refuses everything remaining (shouldn't happen)
+    wall = time.perf_counter() - t0
+    return decisions / wall, wall, decisions
+
+
+def main(num_tasks: int = 25_000) -> List[Tuple[str, float, str]]:
+    rows = []
+    for pol in POLICIES:
+        rate, wall, n = bench_policy(pol, num_tasks=num_tasks)
+        rows.append((f"fig3/scheduler/{pol}", 1e6 / rate,
+                     f"decisions_per_s={rate:.0f};n={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default scale runs the DES
+experiments at 25K tasks (minutes); ``--full`` reproduces the paper's 250K
+(the EXPERIMENTS.md numbers).  ``--quick`` drops to 6K for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper scale (250K tasks)")
+    ap.add_argument("--quick", action="store_true", help="CI scale (6K tasks)")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    n = 250_000 if args.full else (6_000 if args.quick else 25_000)
+    n_model = 20_000 if args.full else (2_000 if args.quick else 6_000)
+    n_sched = 250_000 if args.full else (6_000 if args.quick else 25_000)
+
+    from . import (
+        bench_cache_throughput,
+        bench_model_error,
+        bench_pi_speedup,
+        bench_provisioning,
+        bench_roofline,
+        bench_scale,
+        bench_scheduler,
+    )
+
+    suites = [
+        ("scheduler", lambda: bench_scheduler.main(n_sched)),
+        ("provisioning", lambda: bench_provisioning.main(n)),
+        ("cache_throughput", lambda: bench_cache_throughput.main(n)),
+        ("pi_speedup", lambda: bench_pi_speedup.main(n)),
+        ("model_error", lambda: bench_model_error.main(n_model)),
+        ("scale", lambda: bench_scale.main(8_000 if not args.full else 40_000)),
+        ("roofline", lambda: bench_roofline.main()),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# suite {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving demo: KV-prefix-cache-affinity routing (the paper's data-aware
+dispatch applied to LLM serving) vs locality-blind routing.
+
+Sessions issue follow-up requests; a replica that already holds a session's
+KV cache decodes immediately (local hit), others replay the prompt (the
+"fetch from persistent storage" cost). The DRP grows the replica pool with
+queue length.
+
+  PYTHONPATH=src python examples/serve_diffusion.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.runtime import DiffusionServer
+
+cfg = get_arch("internlm2-1.8b").reduced()
+rng = np.random.default_rng(0)
+SESSIONS = {f"user{i}": rng.integers(0, cfg.vocab_size, size=(24,)) for i in range(8)}
+ROUNDS = 5
+
+
+def run(policy: str):
+    # max_sessions=3 per replica: the 8 sessions do not all fit anywhere —
+    # locality-blind routing causes KV-cache thrash (prefill replays).
+    srv = DiffusionServer(cfg, policy=policy, max_replicas=4, min_replicas=4,
+                          cache_cap=64, max_sessions=3, seed=1)
+    order_rng = np.random.default_rng(7)
+    t0 = time.time()
+    for _ in range(ROUNDS):
+        sids = list(SESSIONS)
+        order_rng.shuffle(sids)          # arrival order varies per round
+        for sid in sids:
+            srv.submit(sid, SESSIONS[sid], max_new_tokens=4)
+            srv.step()                   # request-at-a-time (online arrival)
+    return srv, time.time() - t0
+
+
+for policy in ("first-available", "max-compute-util", "good-cache-compute"):
+    srv, wall = run(policy)
+    s = srv.stats
+    print(f"{policy:20s} served={s.served:3d} prefix_hit={s.hit_rate:5.0%} "
+          f"prefills={s.prefills:3d} decode_steps={s.decode_steps:3d} "
+          f"replicas={len(srv.replicas)} avg_resp={s.avg_response_s * 1e3:6.1f}ms "
+          f"wall={wall:.1f}s")
+
+print("\nprefix-affinity routing turns session follow-ups into cache hits —")
+print("the paper's max-cache-hit/good-cache-compute policies, 18 years later.")

@@ -1,0 +1,70 @@
+"""End-to-end training driver: ~100M-parameter llama-style model, a few
+hundred steps on CPU, fed by the diffusion-scheduled data pipeline, with
+async checkpoints and a mid-run failure + restart.
+
+  PYTHONPATH=src python examples/train_100m.py              # full (~100M, 300 steps)
+  PYTHONPATH=src python examples/train_100m.py --tiny       # 2-minute demo
+"""
+
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, TrainConfig, Trainer
+
+
+def model_100m() -> ArchConfig:
+    """~100M dense decoder (llama3 family topology)."""
+    return dataclasses.replace(
+        get_arch("llama3-8b"),
+        name="llama3-100m",
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=32_000, head_dim=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = model_100m().reduced()
+        shape = ShapeConfig("train", "train", 128, 4)
+        steps = args.steps or 60
+    else:
+        cfg = model_100m()
+        shape = ShapeConfig("train", "train", 256, 4)
+        steps = args.steps or 300
+    print(f"model: {cfg.param_count() / 1e6:.0f}M params | seq {shape.seq_len} "
+          f"batch {shape.global_batch} | {steps} steps")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(
+            cfg, shape,
+            TrainConfig(total_steps=steps, log_every=max(10, steps // 10),
+                        checkpoint_every=max(20, steps // 5),
+                        checkpoint_dir=ckpt_dir, num_hosts=4,
+                        opt=AdamWConfig(lr=1e-3)),
+            failure_injector=FailureInjector({steps // 2: ["host3"]}),
+        )
+        res = trainer.run(start_fresh=True)
+        print(f"\nloss {np.mean(res.losses[:5]):.3f} -> {np.mean(res.losses[-5:]):.3f} "
+              f"| pipeline hit-rate {res.pipeline_hit_rate:.0%} "
+              f"| restarts (failure recovery): {res.restarts} "
+              f"| wall {res.wall_s:.0f}s")
+        assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5]), "no learning?"
+        print("OK: loss decreased through a worker failure + checkpoint restart.")
+
+
+if __name__ == "__main__":
+    main()

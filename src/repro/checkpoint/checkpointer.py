@@ -1,0 +1,189 @@
+"""Sharded, atomic, async checkpointing with resharding restore.
+
+Layout:  <dir>/step_<n>/
+           manifest.json       — tree structure, shapes, dtypes, file map
+           arrays_<i>.npz      — flattened leaf payloads (split by size)
+           _COMMITTED          — atomic commit marker (written last)
+
+Properties needed at 1000+-node scale, realized here single-process:
+  * atomic commit (readers only trust _COMMITTED checkpoints);
+  * async save (a writer thread snapshots device arrays off the step path);
+  * restore-with-resharding: arrays are saved unsharded-logical and
+    re-placed under the CURRENT mesh's shardings at load — an elastic
+    restart onto a different device count just works;
+  * integrity: per-file sha256 in the manifest, verified on load.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+MAX_FILE_BYTES = 1 << 28  # 256 MiB per npz member group
+
+
+def _to_raw(arr: np.ndarray) -> np.ndarray:
+    """npz-safe byte view (npz mangles ml_dtypes like bfloat16)."""
+    return np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+
+
+def _from_raw(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
+    return raw.view(np.dtype(dtype)).reshape(shape)
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+             for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *, blocking: bool = True):
+    """Write checkpoint for ``step``. Returns the checkpoint path."""
+    paths, leaves, _ = _tree_flatten_with_paths(tree)
+    host_leaves = [np.asarray(l) for l in leaves]  # device -> host snapshot
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        manifest: Dict[str, Any] = {"step": step, "leaves": [], "files": {}}
+        file_idx, file_bytes, bucket = 0, 0, {}
+
+        def flush():
+            nonlocal file_idx, file_bytes, bucket
+            if not bucket:
+                return
+            fname = f"arrays_{file_idx}.npz"
+            fpath = os.path.join(tmp, fname)
+            np.savez(fpath, **bucket)
+            with open(fpath, "rb") as f:
+                manifest["files"][fname] = hashlib.sha256(f.read()).hexdigest()
+            file_idx += 1
+            file_bytes = 0
+            bucket = {}
+
+        for i, (path, leaf) in enumerate(zip(paths, host_leaves)):
+            key = f"a{i}"
+            manifest["leaves"].append(
+                {"path": path, "key": key, "file": file_idx,
+                 "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+            )
+            bucket[key] = _to_raw(leaf)
+            file_bytes += leaf.nbytes
+            if file_bytes >= MAX_FILE_BYTES:
+                flush()
+        flush()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+            f.write(str(time.time()))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+
+    if blocking:
+        return write()
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return t
+
+
+class AsyncCheckpointer:
+    """Serializes async saves; ``wait()`` joins the in-flight write."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._inflight: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        self._inflight = save_checkpoint(self.directory, step, tree, blocking=False)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+
+    def _gc(self) -> None:
+        steps = sorted(list_checkpoints(self.directory))
+        for s in steps[: -self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def list_checkpoints(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        full = os.path.join(directory, name)
+        if name.startswith("step_") and os.path.exists(os.path.join(full, "_COMMITTED")):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> Optional[int]:
+    steps = list_checkpoints(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree,
+                       shardings=None, verify: bool = True):
+    """Restore into the structure of ``target_tree``; optionally re-place
+    every leaf under ``shardings`` (same pytree structure) — this is the
+    elastic-resharding path (new mesh != save-time mesh)."""
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(ckpt, "_COMMITTED")):
+        raise FileNotFoundError(f"no committed checkpoint at {ckpt}")
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)
+    if verify:
+        for fname, digest in manifest["files"].items():
+            with open(os.path.join(ckpt, fname), "rb") as f:
+                actual = hashlib.sha256(f.read()).hexdigest()
+            if actual != digest:
+                raise IOError(f"checksum mismatch in {fname}")
+
+    by_file: Dict[int, List[dict]] = {}
+    for entry in manifest["leaves"]:
+        by_file.setdefault(entry["file"], []).append(entry)
+    path_to_arr: Dict[str, np.ndarray] = {}
+    for fidx, entries in by_file.items():
+        data = np.load(os.path.join(ckpt, f"arrays_{fidx}.npz"))
+        for e in entries:
+            path_to_arr[e["path"]] = _from_raw(data[e["key"]], e["dtype"], e["shape"])
+
+    paths, leaves, treedef = _tree_flatten_with_paths(target_tree)
+    sh_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None) if shardings is not None else
+        [None] * len(leaves))
+    out = []
+    for path, leaf, sh in zip(paths, leaves, sh_leaves):
+        if path not in path_to_arr:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = path_to_arr[path]
+        want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        if arr.dtype != want_dtype:
+            arr = arr.astype(want_dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)

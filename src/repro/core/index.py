@@ -1,0 +1,102 @@
+"""Centralized + local cache-location indices (paper Section 3.1.1).
+
+The dispatcher maintains a centralized index recording the location of every
+cached data object, kept *loosely coherent* with executor caches via periodic
+update messages.  Each executor additionally keeps a local index of its own
+cache.  Data structures follow the paper's scheduler definitions:
+
+  I_map : file logical name -> sorted set of executors caching it
+  E_map : executor name     -> sorted set of logical file names cached there
+
+Both are hash maps of sorted sets, which is what makes the O(|T_i| +
+replicationFactor + min(|Q|, W)) scheduling cost cheap in practice (paper
+Section 3.2).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Deque, Dict, Iterable, List, Set, Tuple
+
+
+class CentralizedIndex:
+    """Dispatcher-side index. Supports loose coherence via an update queue."""
+
+    def __init__(self, coherence_delay_s: float = 0.0):
+        self.i_map: Dict[str, Set[str]] = defaultdict(set)
+        self.e_map: Dict[str, Set[str]] = defaultdict(set)
+        self.coherence_delay_s = coherence_delay_s
+        # (apply_at_time, op, file, executor) — drained by the simulator clock;
+        # runtime consumers use delay 0 (synchronous in-process updates).
+        # Constant delay => appends arrive in time order => deque pop-left.
+        self._pending: Deque[Tuple[float, str, str, str]] = deque()
+
+    # -- synchronous mutation (coherent view) --------------------------------
+    version: int = 0  # bumped on every mutation (scheduler scan memoization)
+
+    def add(self, file: str, executor: str) -> None:
+        self.version += 1
+        self.i_map[file].add(executor)
+        self.e_map[executor].add(file)
+
+    def remove(self, file: str, executor: str) -> None:
+        self.version += 1
+        self.i_map.get(file, set()).discard(executor)
+        self.e_map.get(executor, set()).discard(file)
+
+    def drop_executor(self, executor: str) -> None:
+        """Executor released/failed: forget all its cache contents."""
+        for f in self.e_map.pop(executor, set()):
+            self.i_map.get(f, set()).discard(executor)
+
+    # -- loose coherence ------------------------------------------------------
+    def enqueue_update(self, now: float, op: str, file: str, executor: str) -> None:
+        self._pending.append((now + self.coherence_delay_s, op, file, executor))
+
+    def apply_updates(self, now: float) -> int:
+        """Apply all pending updates due at or before ``now`` (O(applied))."""
+        applied = 0
+        while self._pending and self._pending[0][0] <= now:
+            _, op, f, e = self._pending.popleft()
+            (self.add if op == "add" else self.remove)(f, e)
+            applied += 1
+        return applied
+
+    # -- queries used by the scheduler ----------------------------------------
+    def locations(self, file: str) -> Set[str]:
+        return self.i_map.get(file, set())
+
+    def cached_at(self, executor: str) -> Set[str]:
+        return self.e_map.get(executor, set())
+
+    def cache_hits(self, files: Iterable[str], executor: str) -> int:
+        """|files(T_i) ∩ E_map(executor)| — the part-2 scoring function."""
+        cached = self.e_map.get(executor, set())
+        return sum(1 for f in files if f in cached)
+
+    def candidate_executors(self, files: Iterable[str]) -> Dict[str, int]:
+        """Part-1 candidate tally: executor -> number of needed files cached."""
+        candidates: Dict[str, int] = defaultdict(int)
+        for f in files:
+            for e in self.i_map.get(f, set()):
+                candidates[e] += 1
+        return candidates
+
+    def replication_factor(self, file: str) -> int:
+        return len(self.i_map.get(file, set()))
+
+
+class LocalIndex:
+    """Executor-side index of its own cached objects (trivial wrapper)."""
+
+    def __init__(self):
+        self.files: Set[str] = set()
+
+    def add(self, file: str) -> None:
+        self.files.add(file)
+
+    def remove(self, file: str) -> None:
+        self.files.discard(file)
+
+    def __contains__(self, file: str) -> bool:
+        return file in self.files

@@ -1,0 +1,552 @@
+"""Discrete-event simulator of the data-diffusion system (paper Section 5).
+
+Runs the *real* scheduler (`core/scheduler.py`), index, caches, and
+provisioner components against an event-driven model of the hardware: a
+persistent store with a contended aggregate link (GPFS), per-node transient
+stores (local disk + NIC for peer reads), executors (one per CPU, 2 per
+node), and GRAM4-like allocation latency.  The paper itself planned this DES
+("we also plan to do a thorough validation of the model through
+discrete-event simulations") — here it doubles as the reproduction vehicle
+for Figures 4–15 and the calibration source for the abstract model (Fig 2).
+
+Hardware profiles:
+  * ``teragrid_profile``  — ANL/UC TeraGrid calibration: GPFS aggregate
+    ~4.55 Gb/s contended ceiling (measured plateau 4.4 Gb/s in Fig 4), node
+    local reads ~1.6 Gb/s (page-cache-assisted; peak aggregate 100 Gb/s over
+    64 nodes, Fig 12), 1 Gb/s NIC, 2 executors/node, 30–60 s allocation.
+  * ``tpu_pod_profile``   — the TPU adaptation: object store 100 GB/s
+    aggregate, host DRAM cache reads 40 GB/s, 25 GB/s DCN NIC, 4 hosts/alloc,
+    10 s elastic-rescale latency. Used by the beyond-paper scale study.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+import random as _random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .index import CentralizedIndex
+from .provisioner import DynamicResourceProvisioner, ProvisionRequest
+from .scheduler import DataAwareScheduler
+from .store import BandwidthResource, PersistentStore, TransientStore
+from .task import ExecutorState, Task, TaskState
+from .workload import Workload
+
+GBIT = 1e9 / 8.0  # bytes/s per Gb/s
+
+
+@dataclass
+class HardwareProfile:
+    name: str
+    executors_per_node: int = 2
+    persistent_bw_bytes: float = 4.55 * GBIT       # GPFS aggregate ceiling
+    disk_bw_bytes: float = 1.6 * GBIT              # per-node local cache read
+    nic_bw_bytes: float = 1.0 * GBIT               # per-node peer-transfer NIC
+    dispatch_latency_s: float = 0.002              # service<->executor RTT leg
+    delivery_time_s: float = 0.0005                # result delivery D_T
+    # Per-policy dispatcher decision cost (from paper Fig 3 throughputs).
+    decision_cost_s: Dict[str, float] = field(
+        default_factory=lambda: {
+            "first-available": 1.0 / 2981,
+            "first-cache-available": 1.0 / 1800,
+            "max-cache-hit": 1.0 / 1322,
+            "max-compute-util": 1.0 / 1666,
+            "good-cache-compute": 1.0 / 1600,
+        }
+    )
+
+
+def teragrid_profile() -> HardwareProfile:
+    return HardwareProfile(name="teragrid")
+
+
+def tpu_pod_profile() -> HardwareProfile:
+    return HardwareProfile(
+        name="tpu-pod",
+        executors_per_node=4,                  # chips per host acting as lanes
+        persistent_bw_bytes=100e9,             # object-store aggregate
+        disk_bw_bytes=40e9,                    # host DRAM shard cache
+        nic_bw_bytes=25e9,                     # DCN peer transfer
+        dispatch_latency_s=0.0002,
+        delivery_time_s=0.0001,
+    )
+
+
+@dataclass
+class SimConfig:
+    policy: str = "good-cache-compute"
+    cache_size_per_node_bytes: float = 4 * 1024**3
+    max_nodes: int = 64
+    min_nodes: int = 0
+    eviction: str = "lru"
+    window: int = 3200
+    cpu_util_threshold: float = 0.8
+    max_replicas: int = 4
+    provisioner_policy: str = "watermark"
+    tasks_per_node_target: float = 32.0
+    coherence_delay_s: float = 5.0   # loose index coherence (paper Sec 3.1.1)
+    allocation_latency_s: Tuple[float, float] = (30.0, 60.0)
+    idle_release_s: float = 120.0
+    static_nodes: Optional[int] = None      # static provisioning (no DRP)
+    pickup_batch: int = 1                   # m tasks per pickup
+    sample_dt_s: float = 10.0
+    seed: int = 0
+    # fault injection: (time_s, node_index) pairs -> node fails at time
+    failures: Tuple[Tuple[float, int], ...] = ()
+
+
+@dataclass
+class Node:
+    name: str
+    store: TransientStore
+    executors: List[str]
+    idle_since: float = 0.0
+    lost: bool = False
+
+
+@dataclass
+class TimePoint:
+    t: float
+    queue_len: int
+    nodes: int
+    busy: int
+    registered_execs: int
+    throughput_bytes: Dict[str, float]      # bucket bytes by source
+    ideal_bytes: float                      # arrival_rate * file_size * dt
+    cpu_util: float
+
+
+@dataclass
+class SimResult:
+    config: SimConfig
+    profile: HardwareProfile
+    workload_name: str
+    wet_s: float                            # workload execution time
+    ideal_wet_s: float
+    tasks_done: int
+    hits_local: int
+    hits_remote: int
+    misses: int
+    cpu_time_hours: float                   # integral of registered executors
+    avg_response_s: float
+    peak_queue: int
+    series: List[TimePoint]
+    bytes_by_source: Dict[str, float]
+    interval_completion: Dict[int, float]   # arrival-interval -> last done t
+    avg_cpu_util: float
+    scheduler_decisions: int
+
+    # -- derived metrics (paper Section 5.2.x definitions) -------------------
+    @property
+    def efficiency(self) -> float:
+        return self.ideal_wet_s / self.wet_s if self.wet_s > 0 else 0.0
+
+    @property
+    def hit_rate_local(self) -> float:
+        tot = self.hits_local + self.hits_remote + self.misses
+        return self.hits_local / tot if tot else 0.0
+
+    @property
+    def hit_rate_remote(self) -> float:
+        tot = self.hits_local + self.hits_remote + self.misses
+        return self.hits_remote / tot if tot else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        tot = self.hits_local + self.hits_remote + self.misses
+        return self.misses / tot if tot else 0.0
+
+    @property
+    def avg_throughput_gbps(self) -> float:
+        total = sum(self.bytes_by_source.values())
+        return total * 8 / 1e9 / self.wet_s if self.wet_s > 0 else 0.0
+
+    def peak_throughput_gbps(self, pct: float = 0.99) -> float:
+        rates = sorted(
+            sum(tp.throughput_bytes.values()) * 8 / 1e9 / max(1e-9, self.config.sample_dt_s)
+            for tp in self.series
+        )
+        if not rates:
+            return 0.0
+        return rates[min(len(rates) - 1, int(pct * len(rates)))]
+
+    def speedup_vs(self, baseline_wet_s: float) -> float:
+        return baseline_wet_s / self.wet_s if self.wet_s > 0 else 0.0
+
+    def performance_index_raw(self, baseline_wet_s: float) -> float:
+        sp = self.speedup_vs(baseline_wet_s)
+        return sp / self.cpu_time_hours if self.cpu_time_hours > 0 else 0.0
+
+    def slowdown_by_interval(self, interval_s: float = 60.0) -> Dict[int, float]:
+        """SL per arrival interval: completion span / ideal span (>=1)."""
+        out = {}
+        for i, t_done in sorted(self.interval_completion.items()):
+            start = i * interval_s
+            out[i] = max(1.0, (t_done - start) / interval_s)
+        return out
+
+
+class Simulator:
+    """Event-driven executor of a Workload under a SimConfig + profile."""
+
+    # event kinds ordered deterministically via a sequence counter
+    def __init__(self, workload: Workload, config: SimConfig, profile: HardwareProfile):
+        self.wl = workload
+        self.cfg = config
+        self.hw = profile
+        self.now = 0.0
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._eseq = 0
+        self._rng = _random.Random(config.seed)
+
+        self.gpfs = PersistentStore("gpfs", profile.persistent_bw_bytes)
+        for obj in workload.objects:
+            self.gpfs.add(obj)
+        self.obj_size = {o.name: o.size_bytes for o in workload.objects}
+
+        self.index = CentralizedIndex(coherence_delay_s=config.coherence_delay_s)
+        self.sched = DataAwareScheduler(
+            policy=config.policy,
+            window=config.window,
+            cpu_util_threshold=config.cpu_util_threshold,
+            max_replicas=config.max_replicas,
+            index=self.index,
+        )
+        self.drp = DynamicResourceProvisioner(
+            max_nodes=config.max_nodes,
+            min_nodes=config.min_nodes,
+            policy=config.provisioner_policy,
+            tasks_per_node_target=config.tasks_per_node_target,
+            allocation_latency_s=config.allocation_latency_s,
+            idle_release_s=config.idle_release_s,
+            seed=config.seed,
+        )
+
+        self.nodes: Dict[str, Node] = {}
+        self.exec_node: Dict[str, str] = {}
+        self._node_counter = 0
+        # accounting
+        self.hits_local = 0
+        self.hits_remote = 0
+        self.misses = 0
+        self.done = 0
+        self.peak_queue = 0
+        self.exec_seconds = 0.0
+        self._last_acct_t = 0.0
+        self._responses_sum = 0.0
+        self.bytes_by_source = {"local": 0.0, "remote": 0.0, "gpfs": 0.0}
+        self._bucket_bytes = {"local": 0.0, "remote": 0.0, "gpfs": 0.0}
+        self._busy_util_integral = 0.0
+        self._series: List[TimePoint] = []
+        self.interval_completion: Dict[int, float] = {}
+        self._failures = sorted(config.failures)
+
+    # ----------------------------------------------------------- event infra
+    def _push(self, t: float, kind: str, payload: object = None) -> None:
+        heapq.heappush(self._events, (t, self._eseq, kind, payload))
+        self._eseq += 1
+
+    def _account(self, t: float) -> None:
+        """Integrate executor-seconds and utilization up to time t."""
+        dt = t - self._last_acct_t
+        if dt > 0:
+            n = self.sched.registered()
+            self.exec_seconds += n * dt
+            self._busy_util_integral += self.sched.utilization() * n * dt
+            self._last_acct_t = t
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        for task in self.wl.tasks:
+            self._push(task.submit_time_s, "arrive", task)
+        for (t, node_idx) in self._failures:
+            self._push(t, "fail_node", node_idx)
+        if self.cfg.static_nodes:
+            self._add_nodes(self.cfg.static_nodes)
+            self.drp.registered = self.cfg.static_nodes
+        next_sample = 0.0
+        total = len(self.wl.tasks)
+        while self._events and self.done < total:
+            t, _, kind, payload = heapq.heappop(self._events)
+            # emit samples for every bucket boundary crossed
+            while next_sample <= t:
+                self._sample(next_sample)
+                next_sample += self.cfg.sample_dt_s
+            self._account(t)
+            self.now = t
+            self.index.apply_updates(t)   # loose coherence drain
+            getattr(self, f"_on_{kind}")(payload)
+        self._sample(self.now)
+        return self._result()
+
+    # ---------------------------------------------------------------- events
+    def _on_arrive(self, task: Task) -> None:
+        self.sched.submit(task)
+        self.peak_queue = max(self.peak_queue, self.sched.queue_length())
+        if not self.cfg.static_nodes:
+            req = self.drp.on_queue_change(self.now, self.sched.queue_length())
+            if req is not None:
+                self._push(req.ready_time_s, "provision_ready", req)
+        self._try_notify()
+
+    def _on_provision_ready(self, req: ProvisionRequest) -> None:
+        n = self.drp.complete(req)
+        self._add_nodes(n)
+        self._try_notify()
+
+    def _add_nodes(self, n: int) -> None:
+        for _ in range(n):
+            name = f"n{self._node_counter:04d}"
+            self._node_counter += 1
+            store = TransientStore(
+                name,
+                self.cfg.cache_size_per_node_bytes,
+                self.hw.disk_bw_bytes,
+                self.hw.nic_bw_bytes,
+                eviction=self.cfg.eviction,
+            )
+            executors = [f"{name}.e{i}" for i in range(self.hw.executors_per_node)]
+            self.nodes[name] = Node(name, store, executors, idle_since=self.now)
+            for e in executors:
+                self.exec_node[e] = name
+                self.sched.register_executor(e)
+
+    def _on_fail_node(self, node_idx: int) -> None:
+        """Fault injection: node dies; running tasks replay (paper's replay
+        policy); cached data is lost; index entries dropped."""
+        name = f"n{node_idx:04d}"
+        node = self.nodes.get(name)
+        if node is None or node.lost:
+            return
+        node.lost = True
+        for e in node.executors:
+            self.sched.deregister_executor(e)
+        self.drp.registered = max(0, self.drp.registered - 1)
+        if not self.cfg.static_nodes:
+            req = self.drp.on_queue_change(self.now, max(1, self.sched.queue_length()))
+            if req is not None:
+                self._push(req.ready_time_s, "provision_ready", req)
+
+    def _try_notify(self) -> None:
+        while True:
+            pair = self.sched.notify()
+            if pair is None:
+                return
+            executor, task = pair
+            self._push(self.now + self.hw.dispatch_latency_s, "exec_tasks",
+                       (executor, [task]))
+
+    def _on_pickup(self, executor: str) -> None:
+        """Executor pull path (after task completion): window-scored batch."""
+        if executor not in self.exec_node or self.exec_node[executor] not in self.nodes:
+            return  # executor lost between notify and pickup
+        tasks = self.sched.pick_tasks(executor, m=self.cfg.pickup_batch)
+        if not tasks:
+            self._try_notify()
+            return
+        self._on_exec_tasks((executor, tasks))
+
+    def _on_exec_tasks(self, payload) -> None:
+        executor, tasks = payload
+        node = self.nodes.get(self.exec_node.get(executor, ""), None)
+        if node is None or node.lost:
+            for task in tasks:  # replay policy: node died before execution
+                self.sched.requeue(task)
+            self._try_notify()
+            return
+        self.sched.set_state(executor, ExecutorState.BUSY)
+        t_start = self.now
+        engaged: List[Tuple[BandwidthResource, float]] = []
+        total_time = 0.0
+        for task in tasks:
+            task.dispatch_time_s = self.now
+            task.state = TaskState.RUNNING
+            dur, eng = self._service_time(task, node)
+            total_time += dur
+            engaged.extend(eng)
+        for res, nbytes in engaged:
+            res.begin()
+        self._push(t_start + total_time, "tasks_done", (executor, tasks, engaged))
+
+    def _service_time(
+        self, task: Task, node: Node
+    ) -> Tuple[float, List[Tuple[BandwidthResource, float]]]:
+        """Dispatch + data access + compute + delivery for one task."""
+        hw, cfg = self.hw, self.cfg
+        o = (
+            hw.decision_cost_s.get(cfg.policy, 0.0006)
+            + 2 * hw.dispatch_latency_s
+            + hw.delivery_time_s
+        )
+        data_t = 0.0
+        engaged: List[Tuple[BandwidthResource, float]] = []
+        use_cache = cfg.policy != "first-available"
+        for f in task.files:
+            size = self.obj_size[f]
+            if use_cache and node.store.cache.access(f):
+                rate = node.store.disk.available()
+                data_t += size / max(rate, 1e-9)
+                engaged.append((node.store.disk, size))
+                task.hits_local += 1
+                self.hits_local += 1
+                self._bucket_bytes["local"] += size
+                continue
+            src_node = self._find_peer(f, exclude=node.name) if use_cache else None
+            if src_node is not None:
+                rate = min(src_node.store.nic.available(), node.store.nic.available())
+                data_t += size / max(rate, 1e-9)
+                engaged.append((src_node.store.nic, size))
+                engaged.append((node.store.nic, 0.0))
+                task.hits_remote += 1
+                self.hits_remote += 1
+                self._bucket_bytes["remote"] += size
+            else:
+                rate = self.gpfs.link.available()
+                data_t += size / max(rate, 1e-9)
+                engaged.append((self.gpfs.link, size))
+                task.misses += 1
+                self.misses += 1
+                self._bucket_bytes["gpfs"] += size
+            if use_cache:
+                self._insert_cached(node, f, size)
+        return o + data_t + task.compute_time_s, engaged
+
+    def _find_peer(self, f: str, exclude: str) -> Optional[Node]:
+        """Least-NIC-loaded live node holding f (per the data fetch policy)."""
+        best: Optional[Node] = None
+        best_load = None
+        for e in self.index.locations(f):
+            nname = self.exec_node.get(e)
+            if nname is None or nname == exclude:
+                continue
+            nd = self.nodes.get(nname)
+            if nd is None or nd.lost:
+                continue
+            if best is None or nd.store.nic.omega < best_load:
+                best, best_load = nd, nd.store.nic.omega
+        return best
+
+    def _insert_cached(self, node: Node, f: str, size: float) -> None:
+        """Cache insert; index updates flow via loose-coherence messages."""
+        evicted = node.store.cache.insert(f, size)
+        for ev in evicted:
+            for e in node.executors:
+                self.index.enqueue_update(self.now, "remove", ev, e)
+        if f in node.store.cache:
+            for e in node.executors:
+                self.index.enqueue_update(self.now, "add", f, e)
+
+    def _on_tasks_done(self, payload) -> None:
+        executor, tasks, engaged = payload
+        for res, nbytes in engaged:
+            res.end(nbytes)
+        for task in tasks:
+            task.finish_time_s = self.now
+            task.state = TaskState.DONE
+            self.done += 1
+            self._responses_sum += task.response_time_s
+            interval = int(task.submit_time_s // self.wl.interval_duration_s)
+            self.interval_completion[interval] = max(
+                self.interval_completion.get(interval, 0.0), self.now
+            )
+        node = self.nodes.get(self.exec_node.get(executor, ""), None)
+        if node is None or node.lost:
+            return
+        self.sched.set_state(executor, ExecutorState.FREE)
+        node.idle_since = self.now
+        # Executor immediately asks for more work (Falkon pickup path).
+        if self.sched.queue_length() > 0:
+            self.sched.set_state(executor, ExecutorState.PENDING)
+            self._push(self.now + self.hw.dispatch_latency_s, "pickup", executor)
+        else:
+            self._maybe_release(node)
+        self._try_notify()
+
+    def _maybe_release(self, node: Node) -> None:
+        if self.cfg.static_nodes or self.cfg.idle_release_s <= 0:
+            return
+        self._push(self.now + self.cfg.idle_release_s + 1e-6, "idle_check", node.name)
+
+    def _on_idle_check(self, node_name: str) -> None:
+        node = self.nodes.get(node_name)
+        if node is None or node.lost:
+            return
+        all_free = all(
+            self.sched.executor_state(e) == ExecutorState.FREE
+            for e in node.executors
+            if e in self.sched._executors
+        )
+        if (
+            all_free
+            and self.sched.queue_length() == 0
+            and self.drp.should_release(node.idle_since, self.now)
+        ):
+            node.lost = True
+            for e in node.executors:
+                self.sched.deregister_executor(e)
+            self.drp.release(1)
+
+    # --------------------------------------------------------------- metrics
+    def _arrival_rate_at(self, t: float) -> float:
+        i = int(t // self.wl.interval_duration_s)
+        rates = self.wl.interval_rates
+        if not rates:
+            return 0.0
+        return rates[min(i, len(rates) - 1)] if t <= self.wl.ideal_span_s else 0.0
+
+    def _sample(self, t: float) -> None:
+        self._account(t)
+        file_size = self.wl.objects[0].size_bytes if self.wl.objects else 0.0
+        live_nodes = sum(1 for nd in self.nodes.values() if not nd.lost)
+        self._series.append(
+            TimePoint(
+                t=t,
+                queue_len=self.sched.queue_length(),
+                nodes=live_nodes,
+                busy=sum(
+                    1
+                    for s in self.sched._executors.values()
+                    if s == ExecutorState.BUSY
+                ),
+                registered_execs=self.sched.registered(),
+                throughput_bytes=dict(self._bucket_bytes),
+                ideal_bytes=self._arrival_rate_at(t) * file_size * self.cfg.sample_dt_s,
+                cpu_util=self.sched.utilization(),
+            )
+        )
+        for k in self._bucket_bytes:
+            self.bytes_by_source[k] += self._bucket_bytes[k]
+            self._bucket_bytes[k] = 0.0
+
+    def _result(self) -> SimResult:
+        self._account(self.now)
+        avg_util = (
+            self._busy_util_integral / self.exec_seconds if self.exec_seconds > 0 else 0.0
+        )
+        return SimResult(
+            config=self.cfg,
+            profile=self.hw,
+            workload_name=self.wl.name,
+            wet_s=self.now,
+            ideal_wet_s=self.wl.ideal_span_s,
+            tasks_done=self.done,
+            hits_local=self.hits_local,
+            hits_remote=self.hits_remote,
+            misses=self.misses,
+            cpu_time_hours=self.exec_seconds / 3600.0,
+            avg_response_s=self._responses_sum / max(1, self.done),
+            peak_queue=self.peak_queue,
+            series=self._series,
+            bytes_by_source=dict(self.bytes_by_source),
+            interval_completion=dict(self.interval_completion),
+            avg_cpu_util=avg_util,
+            scheduler_decisions=self.sched.stats.decisions,
+        )
+
+
+def run_experiment(
+    workload: Workload, config: SimConfig, profile: Optional[HardwareProfile] = None
+) -> SimResult:
+    return Simulator(workload, config, profile or teragrid_profile()).run()

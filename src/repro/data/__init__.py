@@ -1,0 +1,13 @@
+from .pipeline import (
+    DiffusionDataPipeline,
+    HostShardCache,
+    ObjectStoreEmulator,
+    PipelineConfig,
+    PrefetchingPipeline,
+    ShardSpec,
+)
+
+__all__ = [
+    "DiffusionDataPipeline", "HostShardCache", "ObjectStoreEmulator",
+    "PipelineConfig", "PrefetchingPipeline", "ShardSpec",
+]

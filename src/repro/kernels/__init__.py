@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel directory contains <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper), and ref.py (pure-jnp oracle).  Kernels target
+TPU; tests run them with interpret=True on CPU against the oracle.
+"""
+
+from .flash_attention.ops import attention_ref, flash_attention
+from .moe_gmm.ops import gmm_ref, moe_gmm
+from .rglru_scan.ops import rglru_ref, rglru_scan
+from .rwkv6_scan.ops import wkv6, wkv6_ref
+
+__all__ = [
+    "flash_attention", "attention_ref",
+    "moe_gmm", "gmm_ref",
+    "rglru_scan", "rglru_ref",
+    "wkv6", "wkv6_ref",
+]

@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention: tiled online-softmax GQA with causal skip.
+
+Grid (B, H, Sq/BQ, Skv/BK); the KV axis is the minor (sequential) dimension —
+running max/sum/accumulator live in VMEM scratch across KV iterations for a
+fixed (b, h, q-block).  Blocks fully above the causal diagonal (and fully
+outside the sliding window) are skipped with ``pl.when`` — this is the
+schedule that removes the 2x causal FLOP waste of the chunked-jnp lowering
+path, and the VMEM residency that removes its HBM score traffic.
+
+VMEM working set per program:  q (BQ x D) + k,v (BK x D each) + acc (BQ x D
+f32) + m/l — with BQ=BK=512, D=128 in bf16: 0.5 MiB in + 0.26 MiB scratch,
+comfortably inside the ~16 MiB VMEM budget, MXU-aligned (multiples of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q + q_offset     # absolute positions of this q block
+    k_start = ik * block_k
+
+    # Block-level skip: fully-masked KV blocks never touch the MXU.
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                            # [BQ, BK]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    block_q: int = 512, block_k: int = 512, interpret: bool = False,
+):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    q_offset = Skv - Sq  # aligned ends: query i attends to kv <= i + offset
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+    )
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+    except (AttributeError, TypeError):  # older naming
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512, block_k=512,
+                    interpret=False):
+    """Tiled online-softmax GQA attention (TPU Pallas; interpret=True on CPU).
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] with H % Hkv == 0.
+    """
+    assert q.ndim == 4 and k.ndim == 4 and v.ndim == 4
+    assert q.shape[2] % k.shape[2] == 0, "H must be a multiple of Hkv"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, optional window)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D]; returns [B, Sq, H, D].
+
+    Direct softmax attention in f32 — the correctness oracle for the Pallas
+    kernel (materializes the full score matrix; small shapes only).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kpos <= qpos + (Skv - Sq)  # aligned ends (prefill convention)
+    if window:
+        ok &= kpos > qpos + (Skv - Sq) - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the grouped expert matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .moe_gmm import gmm_pallas
+from .ref import gmm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+def moe_gmm(x, w, *, block_c=256, block_f=256, block_d=512, interpret=False):
+    """Grouped expert GEMM. x: [E, C, D]; w: [E, D, F] -> [E, C, F]."""
+    assert x.ndim == 3 and w.ndim == 3 and x.shape[0] == w.shape[0]
+    assert x.shape[2] == w.shape[1]
+    return gmm_pallas(x, w, block_c=block_c, block_f=block_f,
+                      block_d=block_d, interpret=interpret)
+
+
+__all__ = ["moe_gmm", "gmm_ref"]

@@ -1,0 +1,12 @@
+"""Oracle for the grouped expert matmul: plain batched einsum."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w):
+    """x: [E, C, D]; w: [E, D, F] -> [E, C, F] (f32 accumulation)."""
+    return jnp.einsum(
+        "ecd,edf->ecf", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import rglru_ref
+from .rglru_scan import rglru_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
+def rglru_scan(a, b, *, block_w=512, chunk=256, interpret=False):
+    """Gated diagonal recurrence h_t = a_t h_{t-1} + b_t. a, b: [B, T, W]."""
+    assert a.shape == b.shape and a.ndim == 3
+    return rglru_pallas(a, b, block_w=block_w, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["rglru_scan", "rglru_ref"]

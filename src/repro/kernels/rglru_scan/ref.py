@@ -1,0 +1,25 @@
+"""Oracle for the RG-LRU diagonal recurrence: exact per-step scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t.  a, b: [B, T, W]; h0: [B, W] or None.
+
+    Returns (y [B, T, W] f32, hT [B, W] f32).
+    """
+    B, T, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0))
+    hT, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

@@ -1,0 +1,67 @@
+"""Pallas TPU RG-LRU scan kernel (diagonal gated linear recurrence).
+
+The recurrence  h_t = a_t * h_{t-1} + b_t  is elementwise per channel — there
+is no MXU work; the kernel's value is VMEM residency: gates/inputs stream
+HBM->VMEM once per chunk and the hidden state never leaves VMEM (the jnp
+lowering writes h to HBM every step of the lax.scan).
+
+Grid (B, W/BW, T/CT), time sequential (minor); h lives in VMEM scratch.
+Within a chunk, a fori loop steps rows — VPU-bound by design; the roofline
+for this block is the memory term.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, chunk: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        at = a_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        h = at * h + bt
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[0])
+    h_ref[0] = h
+
+
+def rglru_pallas(a, b, *, block_w: int = 512, chunk: int = 256,
+                 interpret: bool = False):
+    """a, b: [B, T, W] -> y: [B, T, W] (f32). h0 = 0."""
+    B, T, W = a.shape
+    block_w = min(block_w, W)
+    chunk = min(chunk, T)
+    assert W % block_w == 0 and T % chunk == 0
+    grid = (B, W // block_w, T // chunk)
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except (AttributeError, TypeError):
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda ib, iw, it: (ib, it, iw)),
+            pl.BlockSpec((1, chunk, block_w), lambda ib, iw, it: (ib, it, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_w), lambda ib, iw, it: (ib, it, iw)),
+        out_shape=jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the chunked WKV6 kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import wkv6_ref
+from .rwkv6_scan import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk=128, interpret=False):
+    """Chunked WKV6 linear attention. r,k,v,w: [B,T,H,N]; u: [H,N]."""
+    assert r.shape == k.shape == v.shape == w.shape
+    assert u.shape == r.shape[2:]
+    return wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["wkv6", "wkv6_ref"]

@@ -1,0 +1,27 @@
+"""Oracle for the WKV6 recurrence: exact per-step scan (jnp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w: [B, T, H, N]; u: [H, N]; s0: [B, H, N, N] or None.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T;  out_t = r_t (S_{t-1} + u k_t v_t^T).
+    Returns (out [B,T,H,N] f32, sT [B,H,N,N] f32).
+    """
+    B, T, H, N = r.shape
+    S = jnp.zeros((B, H, N, N), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    sT, out = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(out, 0, 1), sT

@@ -1,0 +1,119 @@
+"""Pallas TPU chunked WKV6 kernel (data-dependent decay linear attention).
+
+Grid (B*H, T/CT) with the time axis sequential; the [N, N] state lives in
+VMEM scratch across chunk iterations.  Within a chunk the recurrence is
+evaluated in matmul form on the MXU:
+
+    L_t   = cumsum(log w)           (per key channel)
+    A_ts  = (r_t e^{L_{t-1}}) . (k_s e^{-L_s}),  s < t   (strictly lower)
+    out_t = A @ v + (r_t . u k_t) v_t + (r_t e^{L_{t-1}}) @ S
+    S'    = diag(e^{L_CT}) S + (k e^{L_CT - L})^T @ v
+
+Numerics: the chunk is processed in SUB-chunks of 16 steps with exact local
+log-space exponents — no clamping.  Within 16 steps, |cumsum(log w)| stays
+inside f32's exp range for any w >= ~0.003 (per-step decay of 99.7%); below
+that, a channel's cross-step contribution is < 0.3% of scale and underflows
+harmlessly to 0.  The exact-scan oracle (ref.py) bounds the error in tests,
+including a strong-decay case.
+
+VMEM per program (CT=128, N=64): chunks 4 x CT x N f32 = 128 KiB, per-sub
+A (16 x 16), S (N x N) 16 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUB = 16  # sub-chunk length: exactness window for strong decays
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # [CT, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)            # [N]
+    n = r.shape[-1]
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    ti = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 1)
+    lower = si < ti
+
+    def sub_body(i, carry):
+        S, out = carry
+        start = i * SUB
+        rs = jax.lax.dynamic_slice(r, (start, 0), (SUB, n))
+        ks = jax.lax.dynamic_slice(k, (start, 0), (SUB, n))
+        vs = jax.lax.dynamic_slice(v, (start, 0), (SUB, n))
+        lw = jax.lax.dynamic_slice(logw, (start, 0), (SUB, n))
+        L = jnp.cumsum(lw, axis=0)              # local reference: exact
+        Lprev = L - lw
+        a = rs * jnp.exp(Lprev)
+        b = ks * jnp.exp(-L)
+        A = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        A = jnp.where(lower, A, 0.0)
+        intra = jax.lax.dot_general(A, vs, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        diag = jnp.sum(rs * u[None, :] * ks, axis=-1, keepdims=True) * vs
+        inter = jax.lax.dot_general(a, S, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        out = jax.lax.dynamic_update_slice(out, intra + diag + inter, (start, 0))
+        l_last = L[-1:, :]
+        kdec = ks * jnp.exp(l_last - L)
+        S = jnp.exp(l_last).T * S + jax.lax.dot_general(
+            kdec, vs, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return (S, out)
+
+    S0 = s_ref[...]
+    out0 = jnp.zeros((chunk, n), jnp.float32)
+    S, out = jax.lax.fori_loop(0, chunk // SUB, sub_body, (S0, out0))
+    o_ref[0] = out.astype(o_ref.dtype)
+    s_ref[...] = S
+
+
+def wkv6_pallas(r, k, v, w, u, *, chunk: int = 128, interpret: bool = False):
+    """r,k,v,w: [B, T, H, N]; u: [H, N] -> out [B, T, H, N] (f32)."""
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    # flatten (B, H) into the grid's parallel axis; time is sequential
+    def flat(a):
+        return jnp.moveaxis(a, 2, 1).reshape(B * H, T, N)
+
+    rf, kf, vf, wf = (flat(a) for a in (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    grid = (B * H, T // chunk)
+    try:
+        cparams = pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+    except (AttributeError, TypeError):
+        cparams = pltpu.TPUCompilerParams(dimension_semantics=("parallel", "arbitrary"))
+    out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda bh, it: (bh, it, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, it: (bh, it, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, it: (bh, it, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, it: (bh, it, 0)),
+            pl.BlockSpec((1, N), lambda bh, it: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, N), lambda bh, it: (bh, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return jnp.moveaxis(out.reshape(B, H, T, N), 1, 2)

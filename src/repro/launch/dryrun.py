@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   Dry-run ONLY — tests and benchmarks see the real single CPU device.
+if os.environ.get("REPRO_XLA_EXTRA"):
+    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  build the production mesh, ShapeDtypeStruct inputs with
+shardings attached, ``jax.jit(step).lower(...).compile()``, then record
+``memory_analysis()`` (fits-per-device proof), ``cost_analysis()`` (XLA's
+view), and the trip-count-aware HLO analysis (FLOPs / bytes / collective
+bytes — see hlo_analysis.py) plus the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from ..configs import SHAPES, all_archs, cells, get_arch
+from ..models import (
+    init_opt_state,
+    input_specs,
+    make_step,
+    param_specs,
+)
+from ..models.sharding import tree_param_specs
+from .hlo_analysis import analyze_hlo_text
+from .mesh import make_ctx, make_production_mesh
+from .shardings import batch_specs, opt_state_specs, step_out_shardings, with_shardings
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12         # bf16
+HBM_BW = 819e9              # bytes/s
+ICI_BW = 50e9               # bytes/s per link
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (global): 6*N*D train, 2*N*D inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+
+    pspecs = param_specs(cfg)
+    pshard = tree_param_specs(ctx, pspecs)
+    params_in = with_shardings(ctx, pspecs, pshard)
+
+    bspecs = input_specs(cfg, shape)
+    bshard = batch_specs(ctx, cfg, shape, bspecs)
+    batch_in = with_shardings(ctx, bspecs, bshard)
+
+    step = make_step(cfg, shape, ctx)
+    if shape.kind == "train":
+        ospecs = jax.eval_shape(lambda p: init_opt_state(p, cfg), pspecs)
+        oshard = opt_state_specs(ctx, pspecs, ospecs)
+        opt_in = with_shardings(ctx, ospecs, oshard)
+        args = (params_in, opt_in, batch_in)
+    else:
+        args = (params_in, batch_in)
+    out_shapes = jax.eval_shape(step, *args)
+    out_sh = step_out_shardings(ctx, shape.kind, out_shapes)
+    donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+    fn = jax.jit(step, donate_argnums=donate, out_shardings=out_sh)
+    return cfg, shape, mesh, fn, args
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg, shape, mesh, fn, args = build_cell(arch_name, shape_name, multi_pod)
+    n_dev = mesh.devices.size
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else (ca or {})
+    hlo = analyze_hlo_text(compiled.as_text())
+
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    peak_dev_bytes = arg_b + out_b + tmp_b - alias_b
+
+    mf = model_flops(cfg, shape)
+    # compute term uses MXU (dot) FLOPs: elementwise work is bandwidth-bound
+    # and therefore accounted by the memory term, not the compute term.
+    terms = {
+        "compute_s": hlo.dot_flops / PEAK_FLOPS,
+        "memory_s": hlo.bytes / HBM_BW,
+        "collective_s": hlo.total_collective_bytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(n_dev),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": arg_b, "output_bytes": out_b,
+            "temp_bytes": tmp_b, "alias_bytes": alias_b,
+            "peak_device_bytes": peak_dev_bytes,
+            "peak_device_gib": round(peak_dev_bytes / 2**30, 3),
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed", "transcendentals") if k in ca},
+        "hlo_analysis": hlo.to_dict(),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / max(1.0, hlo.dot_flops),
+        "roofline_terms_s": terms,
+        "dominant_term": dominant,
+        "step_time_bound_s": max(terms.values()),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"== {arch_name} x {shape_name} @ {result['mesh']} "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"   memory_analysis: {mem}")
+        print(f"   cost_analysis: flops={ca.get('flops')}, "
+              f"bytes accessed={ca.get('bytes accessed')}")
+        print(f"   hlo: flops={hlo.flops:.3e} bytes={hlo.bytes:.3e} "
+              f"coll={hlo.total_collective_bytes:.3e} "
+              f"({dict(hlo.collective_count)})")
+        print(f"   terms: compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"collective={terms['collective_s']:.4f}s -> {dominant}")
+        print(f"   useful_flops_ratio={result['useful_flops_ratio']:.3f} "
+              f"peak_dev={result['memory']['peak_device_gib']} GiB")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = []
+    if args.all:
+        for name, cfg in all_archs().items():
+            for s in cells(cfg):
+                todo.append((name, s.name))
+    else:
+        todo.append((args.arch, args.shape))
+
+    failures = 0
+    for arch_name, shape_name in todo:
+        for mp in meshes:
+            tag = f"{arch_name}_{shape_name}_{'mp' if mp else 'sp'}".replace(".", "_")
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"skip {tag} (exists)")
+                continue
+            try:
+                res = run_cell(arch_name, shape_name, mp)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                res = {"arch": arch_name, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"!! FAIL {tag}: {res['error']}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            jax.clear_caches()
+            import gc
+            gc.collect()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

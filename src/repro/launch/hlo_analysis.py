@@ -1,0 +1,544 @@
+"""Post-SPMD HLO analyzer: FLOPs, memory traffic, and collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (verified empirically), which under-reports every scanned layer
+stack.  This analyzer parses ``compiled.as_text()`` (the per-device,
+partitioned module) and:
+
+  * multiplies ``while`` body/condition costs by ``known_trip_count`` from
+    the op's backend_config (present for lax.scan/fori with static bounds);
+  * computes dot FLOPs from operand/result shapes (2*M*N*K);
+  * models memory traffic as sum(operands + outputs) over top-level ops —
+    the same fusion-boundary model XLA itself uses (fusion internals free);
+  * sums collective operand bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), trip-multiplied.
+
+All numbers are PER DEVICE (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_NAMED_ATTR_RE = re.compile(r"(body|condition|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",") if d) if dims else ()
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                       # operand list + attrs (raw tail)
+    operands: List[str] = field(default_factory=list)
+    trip_count: int = 1
+    refs: Dict[str, str] = field(default_factory=dict)  # body/cond/calls
+    op_name: str = ""               # jax named_scope path (metadata)
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    dot_flops: float = 0.0
+    # bytes under TPU-native dtype accounting: XLA:CPU promotes bf16 matmul
+    # I/O to f32 (no native bf16 dot on CPU); tensors that are f32 only
+    # because of that promotion (detected via adjacent bf16 converts) are
+    # counted at 2 bytes/elem here.  TPU keeps them bf16 end to end.
+    bytes_bf16_native: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "bytes_bf16_native": self.bytes_bf16_native,
+            "dot_flops": self.dot_flops,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "total_collective_bytes": self.total_collective_bytes,
+        }
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._symtab: Dict[str, Dict[str, Instr]] = {
+            c: {i.name: i for i in instrs} for c, instrs in self.computations.items()
+        }
+        self._memo: Dict[str, CostSummary] = {}
+        self._promo_memo: Dict[Tuple[str, str], bool] = {}
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if line.rstrip().endswith("{") and ("->" in line):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            _, name, type_str, opcode, rest = m.groups()
+            instr = Instr(name=name, type_str=type_str, opcode=opcode, rest=rest)
+            om = _OPNAME_RE.search(line)
+            if om:
+                instr.op_name = om.group(1)
+            tm = _TRIP_RE.search(line)
+            if tm:
+                instr.trip_count = int(tm.group(1))
+            for key, ref in _NAMED_ATTR_RE.findall(line):
+                instr.refs[key] = ref
+            # operand names: %tokens in the call parens, excluding named refs
+            paren = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+            ops = re.findall(r"%([\w\.\-]+)", paren)
+            named = set(instr.refs.values())
+            instr.operands = [o for o in ops if o not in named]
+            self.computations[cur].append(instr)
+
+    # ----------------------------------------------------------- cost math
+    def _operand_bytes(self, comp: str, instr: Instr) -> float:
+        table = self._symtab[comp]
+        total = 0.0
+        for o in instr.operands:
+            d = table.get(o)
+            if d is not None:
+                total += shape_bytes(d.type_str)
+        return total
+
+    def _is_promoted(self, comp: str, name: str, depth: int = 2) -> bool:
+        """True if tensor ``name`` is f32 only due to CPU bf16-dot promotion
+        (producer is a bf16 convert / bf16-fed fusion / bf16-fed dot)."""
+        key = (comp, name)
+        cached = self._promo_memo.get(key)
+        if cached is not None:
+            return cached
+        d = self._symtab[comp].get(name)
+        result = False
+        if d is not None and "f32" in d.type_str:
+            if d.opcode == "convert" and d.operands:
+                src = self._symtab[comp].get(d.operands[0])
+                result = src is not None and "bf16" in src.type_str
+            elif d.opcode == "fusion":
+                called = d.refs.get("calls")
+                fused = self.computations.get(called, [])
+                result = any(i.opcode == "parameter" and "bf16" in i.type_str
+                             for i in fused)
+            elif d.opcode in ("dot", "multiply", "add", "subtract", "copy",
+                              "transpose", "reshape", "broadcast") and depth > 0:
+                result = any(self._is_promoted(comp, o, depth - 1)
+                             for o in d.operands)
+        self._promo_memo[key] = result
+        return result
+
+    def _corrected(self, comp: str, name: str, nbytes: float) -> float:
+        return nbytes * 0.5 if self._is_promoted(comp, name) else nbytes
+
+    def _corrected_out(self, comp: str, instr: Instr) -> float:
+        b = shape_bytes(instr.type_str)
+        return self._corrected(comp, instr.name, b)
+
+    def _corrected_operands(self, comp: str, instr: Instr) -> float:
+        total = 0.0
+        for o in instr.operands:
+            d = self._symtab[comp].get(o)
+            if d is not None:
+                total += self._corrected(comp, o, shape_bytes(d.type_str))
+        return total
+
+    def _collective_operand_bytes(self, comp: str, instr: Instr) -> float:
+        """Collective operand bytes with CPU-backend dtype correction.
+
+        XLA:CPU has no native bf16 dot, so it promotes bf16 matmul I/O to f32;
+        GSPMD then moves f32 across collectives that a TPU lowering would move
+        as bf16.  When a collective's f32 operand is produced by (or feeds
+        only) a convert from/to bf16, charge 2 bytes/elem instead of 4.
+        """
+        table = self._symtab[comp]
+        total = 0.0
+        for o in instr.operands:
+            d = table.get(o)
+            if d is None:
+                continue
+            b = shape_bytes(d.type_str)
+            if "f32" in d.type_str:
+                prod = d
+                if prod.opcode == "convert" and prod.operands:
+                    src = table.get(prod.operands[0])
+                    if src is not None and "bf16" in src.type_str:
+                        b *= 0.5
+                elif prod.opcode == "fusion":
+                    called = prod.refs.get("calls")
+                    fused = self.computations.get(called, [])
+                    if fused and fused[-1].opcode == "convert":
+                        b *= 0.5  # fusion root converts — boundary cast
+            total += b
+        return total
+
+    def _fusion_traffic(self, comp: str, instr: Instr) -> float:
+        """Traffic of a fusion: slice-only params charged at slice size; a
+        dynamic-update-slice root writes only the update region."""
+        called = instr.refs.get("calls")
+        if not called or called not in self.computations:
+            return shape_bytes(instr.type_str) + self._operand_bytes(comp, instr)
+        fused = self.computations[called]
+        name_to_param: Dict[str, int] = {}
+        for ins in fused:
+            if ins.opcode == "parameter":
+                m = re.match(r"(\d+)\)", ins.rest)
+                if m:
+                    name_to_param[ins.name] = int(m.group(1))
+        # classify each fused parameter by how it is consumed
+        full_params = set()
+        slice_bytes: Dict[int, float] = defaultdict(float)
+        dus_targets = set()
+        for ins in fused:
+            if ins.opcode == "parameter":
+                continue
+            for o in ins.operands:
+                pidx = name_to_param.get(o)
+                if pidx is None:
+                    continue
+                if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                    slice_bytes[pidx] += shape_bytes(ins.type_str)
+                elif ins.opcode == "dynamic-update-slice" and ins.operands[0] == o:
+                    dus_targets.add(pidx)  # in-place: write accounted at root
+                else:
+                    full_params.add(pidx)
+        total = 0.0
+        for o_i, oname in enumerate(instr.operands):
+            d = self._symtab[comp].get(oname)
+            if d is None:
+                continue
+            full = shape_bytes(d.type_str)
+            if o_i in full_params:
+                total += full
+            elif o_i in slice_bytes:
+                total += min(full, slice_bytes[o_i])
+            # else: DUS in-place target or unused — no read traffic
+        # output: dynamic-update-slice roots write only the update region.
+        dus_upd_bytes = sum(
+            shape_bytes((self._symtab[called].get(i.operands[1]) or i).type_str)
+            for i in fused
+            if i.opcode == "dynamic-update-slice" and len(i.operands) > 1
+        )
+        root = fused[-1] if fused else None
+        root_is_dus_like = root is not None and (
+            root.opcode == "dynamic-update-slice"
+            or (root.opcode == "tuple" and dus_upd_bytes > 0)
+            or (dus_targets and dus_upd_bytes > 0
+                and shape_bytes(instr.type_str) > 4 * dus_upd_bytes)
+        )
+        if root_is_dus_like:
+            total += dus_upd_bytes
+        else:
+            total += shape_bytes(instr.type_str)
+        return total
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        out_dims = _shape_dims(instr.type_str)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        k = 1
+        if m and instr.operands:
+            lhs = self._symtab[comp].get(instr.operands[0])
+            if lhs is not None:
+                lhs_dims = _shape_dims(lhs.type_str)
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def cost(self, comp: Optional[str] = None) -> CostSummary:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = CostSummary()
+        skip = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+                "after-all", "partition-id", "replica-id", "iota"}
+        for instr in self.computations.get(comp, []):
+            op = instr.opcode
+            base = op.replace("-start", "").replace("-done", "")
+            if op in skip:
+                continue
+            if op == "while":
+                trip = instr.trip_count
+                body = self.cost(instr.refs.get("body", ""))
+                cond = self.cost(instr.refs.get("condition", ""))
+                total.flops += trip * (body.flops + cond.flops)
+                total.bytes += trip * (body.bytes + cond.bytes)
+                total.bytes_bf16_native += trip * (body.bytes_bf16_native
+                                                   + cond.bytes_bf16_native)
+                total.dot_flops += trip * (body.dot_flops + cond.dot_flops)
+                for k, v in body.collective_bytes.items():
+                    total.collective_bytes[k] += trip * v
+                    total.collective_count[k] += trip * body.collective_count[k]
+                continue
+            if op in ("call", "conditional"):
+                for ref in instr.refs.values():
+                    sub = self.cost(ref)
+                    total.flops += sub.flops
+                    total.bytes += sub.bytes
+                    total.bytes_bf16_native += sub.bytes_bf16_native
+                    total.dot_flops += sub.dot_flops
+                    for k, v in sub.collective_bytes.items():
+                        total.collective_bytes[k] += v
+                        total.collective_count[k] += sub.collective_count[k]
+                continue
+            # memory traffic at fusion boundaries; slicing/indexing ops touch
+            # only the slice, not the full operand.
+            out_b = shape_bytes(instr.type_str)
+            out_b2 = self._corrected_out(comp, instr)
+            if op in ("dynamic-slice", "slice", "gather"):
+                total.bytes += 2.0 * out_b
+                total.bytes_bf16_native += 2.0 * out_b2
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = 0.0
+                if len(instr.operands) > 1:
+                    d = self._symtab[comp].get(instr.operands[1])
+                    if d is not None:
+                        upd = shape_bytes(d.type_str)
+                total.bytes += 2.0 * max(upd, 1.0)
+                total.bytes_bf16_native += 2.0 * max(upd, 1.0)
+            elif op == "fusion":
+                ft = self._fusion_traffic(comp, instr)
+                total.bytes += ft
+                # fusion correction: scale by the promoted-output heuristic
+                scale = 0.5 if self._is_promoted(comp, instr.name) else 1.0
+                total.bytes_bf16_native += ft * scale
+            else:
+                total.bytes += out_b + self._operand_bytes(comp, instr)
+                total.bytes_bf16_native += out_b2 + self._corrected_operands(comp, instr)
+            if base in COLLECTIVES:
+                total.collective_bytes[base] += self._collective_operand_bytes(comp, instr)
+                total.collective_count[base] += 1
+                continue
+            if op == "fusion":
+                called = instr.refs.get("calls")
+                if called:
+                    sub = self.cost(called)
+                    total.flops += sub.flops  # dots inside fusions (CPU)
+                    total.dot_flops += sub.dot_flops
+                continue
+            if op == "dot":
+                f = self._dot_flops(comp, instr)
+                total.flops += f
+                total.dot_flops += f
+                continue
+            if op == "convolution":
+                out_dims = _shape_dims(instr.type_str)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                kshape = ()
+                if len(instr.operands) > 1:
+                    k = self._symtab[comp].get(instr.operands[1])
+                    if k is not None:
+                        kshape = _shape_dims(k.type_str)
+                kelems = 1
+                for d in kshape[:-1]:
+                    kelems *= d
+                total.flops += 2.0 * out_elems * kelems
+                continue
+            # elementwise / reduce etc: 1 flop per output element (coarse)
+            out_elems = 1
+            for d in _shape_dims(instr.type_str):
+                out_elems *= d
+            total.flops += out_elems
+            if op in ("exponential", "tanh", "logistic", "rsqrt", "log", "power"):
+                total.transcendentals += out_elems
+        self._memo[comp] = total
+        return total
+
+
+def analyze_hlo_text(text: str) -> CostSummary:
+    return HloModule(text).cost()
+
+
+def region_costs(text: str, regions: List[str]) -> Dict[str, CostSummary]:
+    """Attribute per-device costs to jax.named_scope regions.
+
+    Ops whose op_name contains a region marker accrue to that region;
+    everything else lands in 'other'.  Trip-count multiplied.  Used by the
+    §Perf kernel-substitution analysis (e.g. subtract 'attn_scores' and add
+    the Pallas flash-attention cost model)."""
+    mod = HloModule(text)
+    out: Dict[str, CostSummary] = {r: CostSummary() for r in regions}
+    out["other"] = CostSummary()
+
+    def bucket(op_name: str) -> str:
+        for r in regions:
+            if r in op_name:
+                return r
+        return "other"
+
+    def walk(comp: str, mult: float, scope: Optional[str]) -> None:
+        for ins in mod.computations.get(comp, []):
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                continue
+            sc = scope or (bucket(ins.op_name) if ins.op_name else None)
+            if op == "while":
+                inner = bucket(ins.op_name) if ins.op_name else scope
+                walk(ins.refs.get("body", ""), mult * ins.trip_count,
+                     inner if inner != "other" else None)
+                walk(ins.refs.get("condition", ""), mult * ins.trip_count,
+                     inner if inner != "other" else None)
+                continue
+            if op in ("call", "conditional"):
+                for r in ins.refs.values():
+                    walk(r, mult, sc if sc != "other" else None)
+                continue
+            tgt = out[sc if sc in out else "other"]
+            out_b = shape_bytes(ins.type_str)
+            b2 = None
+            if op in ("dynamic-slice", "slice", "gather"):
+                b = 2.0 * out_b
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = 0.0
+                if len(ins.operands) > 1:
+                    d = mod._symtab[comp].get(ins.operands[1])
+                    if d is not None:
+                        upd = shape_bytes(d.type_str)
+                b = 2.0 * max(upd, 1.0)
+            elif op == "fusion":
+                b = mod._fusion_traffic(comp, ins)
+                b2 = b * (0.5 if mod._is_promoted(comp, ins.name) else 1.0)
+            else:
+                b = out_b + mod._operand_bytes(comp, ins)
+                b2 = (mod._corrected_out(comp, ins)
+                      + mod._corrected_operands(comp, ins))
+            base = op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                tgt.collective_bytes[base] += mult * mod._collective_operand_bytes(comp, ins)
+                tgt.collective_count[base] += int(mult)
+            tgt.bytes += mult * b
+            tgt.bytes_bf16_native += mult * (b2 if b2 is not None else b)
+            if op == "dot":
+                f = mod._dot_flops(comp, ins)
+                tgt.flops += mult * f
+                tgt.dot_flops += mult * f
+            elif op == "fusion":
+                called = ins.refs.get("calls")
+                if called:
+                    sub = mod.cost(called)
+                    tgt.flops += mult * sub.flops
+                    tgt.dot_flops += mult * sub.dot_flops
+
+    walk(mod.entry, 1.0, None)
+    return out
+
+
+def traffic_breakdown(text: str, top: int = 20) -> List[Tuple[str, float, int]]:
+    """Top traffic contributors as (opcode|shape, bytes, count) — the §Perf
+    profiling view (trip-count multiplied)."""
+    mod = HloModule(text)
+    agg: Dict[str, float] = defaultdict(float)
+    cnt: Dict[str, int] = defaultdict(int)
+
+    def walk(comp: str, mult: float) -> None:
+        for ins in mod.computations.get(comp, []):
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                continue
+            if op == "while":
+                walk(ins.refs.get("body", ""), mult * ins.trip_count)
+                walk(ins.refs.get("condition", ""), mult * ins.trip_count)
+                continue
+            if op in ("call", "conditional"):
+                for r in ins.refs.values():
+                    walk(r, mult)
+                continue
+            out_b = shape_bytes(ins.type_str)
+            if op in ("dynamic-slice", "slice", "gather"):
+                b = 2.0 * out_b
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = 0.0
+                if len(ins.operands) > 1:
+                    d = mod._symtab[comp].get(ins.operands[1])
+                    if d is not None:
+                        upd = shape_bytes(d.type_str)
+                b = 2.0 * max(upd, 1.0)
+            elif op == "fusion":
+                b = mod._fusion_traffic(comp, ins)
+            else:
+                b = out_b + mod._operand_bytes(comp, ins)
+            key = f"{op} {ins.type_str[:48]}"
+            agg[key] += mult * b
+            cnt[key] += int(mult)
+
+    walk(mod.entry, 1.0)
+    return sorted(((k, v, cnt[k]) for k, v in agg.items()), key=lambda t: -t[1])[:top]
+
+
+def analyze_compiled(compiled) -> CostSummary:
+    return analyze_hlo_text(compiled.as_text())

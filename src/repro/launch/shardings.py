@@ -1,0 +1,122 @@
+"""Input/state sharding assignment for dry-run and runtime jit entry points.
+
+Params: FSDP('dp') x tensor('tp') via models.sharding rules.
+Optimizer moments: same spec as their parameter; step counter replicated.
+Batches: tokens/batched inputs on 'dp'.
+Decode caches: KV seq dim on 'tp' (always divides), batch on 'dp'; recurrent
+states batch on 'dp', width on 'tp'.  All assignments pass through the
+divisibility guard (ShardCtx), so e.g. global_batch=1 cells replicate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.sharding import ShardCtx, tree_param_specs
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def cache_leaf_spec(ctx: ShardCtx, path: str, shape) -> P:
+    """Sharding rule for one decode-cache leaf by its key name."""
+    rank = len(shape)
+    name = path.rsplit("/", 1)[-1]
+    logical = [None] * rank
+    if name in ("k", "v", "ck", "cv"):          # [..., B, cap, Hkv, Dh]
+        logical[-4] = "dp"
+        logical[-3] = "tp"
+    elif name == "S":                            # [..., B, H, K, V]
+        logical[-4] = "dp"
+    elif name in ("shift_tm", "shift_cm"):       # [..., B, D]
+        logical[-2] = "dp"
+        logical[-1] = "tp"
+    elif name == "h":                            # [..., B, W]
+        logical[-2] = "dp"
+        logical[-1] = "tp"
+    elif name == "conv":                         # [..., B, cw-1, W]
+        logical[-3] = "dp"
+        logical[-1] = "tp"
+    return ctx.spec(logical, shape)
+
+
+def batch_specs(ctx: ShardCtx, cfg: ArchConfig, shape: ShapeConfig, specs: Dict[str, Any]):
+    """PartitionSpec pytree for ``input_specs(cfg, shape)``."""
+
+    def one(path, leaf):
+        pstr = _leaf_path_str(path)
+        s = tuple(leaf.shape)
+        if "caches" in pstr:
+            return cache_leaf_spec(ctx, pstr, s)
+        name = pstr.rsplit("/", 1)[-1]
+        if name == "tokens":
+            return ctx.spec(["dp", None], s)
+        if name == "token":
+            return ctx.spec(["dp"], s)
+        if name == "pos":
+            return P()
+        if name in ("audio_embeds", "patch_embeds"):
+            return ctx.spec(["dp", None, None], s)
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def opt_state_specs(ctx: ShardCtx, params_shapes, opt_shapes):
+    """Opt-state shardings mirroring the parameter rules.
+
+    Works for both plain AdamW ({m, v, step}) and 8-bit AdamW
+    ({m, v, ms, vs, step}) — each subtree has the same paths as params, so
+    the same path rules apply; scale tensors (last dim 1) are left unsharded
+    on that dim by the divisibility guard."""
+    out = {}
+    for k, sub in opt_shapes.items():
+        out[k] = P() if k == "step" else tree_param_specs(ctx, sub)
+    return out
+
+
+def step_out_specs(ctx: ShardCtx, kind: str, out_shapes):
+    """PartitionSpec pytree for a step function's outputs.
+
+    train: (params, opt_state, metrics) -> (param rules, opt rules, replicated)
+    prefill/decode: (logits, caches) -> (['dp','tp'], cache rules)
+    """
+    if kind == "train":
+        params_s, opt_s, metrics_s = out_shapes
+        ps = tree_param_specs(ctx, params_s)
+        os_ = opt_state_specs(ctx, params_s, opt_s)
+        ms = jax.tree_util.tree_map(lambda _: P(), metrics_s)
+        return (ps, os_, ms)
+    logits_s, caches_s = out_shapes
+
+    def one(path, leaf):
+        return cache_leaf_spec(ctx, _leaf_path_str(path), tuple(leaf.shape))
+
+    return (
+        ctx.spec(["dp", "tp"], logits_s.shape),
+        jax.tree_util.tree_map_with_path(one, caches_s),
+    )
+
+
+def step_out_shardings(ctx: ShardCtx, kind: str, out_shapes):
+    specs = step_out_specs(ctx, kind, out_shapes)
+    return jax.tree_util.tree_map(
+        lambda s: ctx.named(s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def with_shardings(ctx: ShardCtx, shapes, specs):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=ctx.named(spec))
+
+    return jax.tree_util.tree_map(
+        one, shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )

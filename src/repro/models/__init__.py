@@ -1,0 +1,22 @@
+from .api import (
+    cache_init,
+    init_opt_state,
+    init_params,
+    input_specs,
+    is_encdec,
+    make_decode_step,
+    make_loss_fn,
+    make_prefill_step,
+    make_step,
+    make_train_step,
+    param_specs,
+    synth_inputs,
+)
+from .sharding import ShardCtx, spec_for_param, tree_param_specs, tree_shardings
+
+__all__ = [
+    "cache_init", "init_opt_state", "init_params", "input_specs", "is_encdec",
+    "make_decode_step", "make_loss_fn", "make_prefill_step", "make_step",
+    "make_train_step", "param_specs", "synth_inputs",
+    "ShardCtx", "spec_for_param", "tree_param_specs", "tree_shardings",
+]

@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Conv audio frontend is a STUB: the input is precomputed frame embeddings
+[B, S_audio, D] (per assignment instructions).  Encoder: bidirectional
+attention, learned positional embeddings.  Decoder: causal self-attention +
+cross-attention over encoder output, text length = S_audio // 8 for
+train/prefill (DESIGN.md §5).  Decode shapes run the decoder with a
+seq_len-capacity self-attn KV cache + cross-attn KV over seq_len frames.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    F32,
+    attention_block,
+    attn_init,
+    dense_init,
+    logits_head,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope,
+    softmax_xent,
+)
+from .sharding import ShardCtx
+
+TEXT_RATIO = 8  # decoder text length = audio frames // 8 (train/prefill)
+
+
+def text_len(seq_len: int) -> int:
+    return max(8, seq_len // TEXT_RATIO)
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model), "norm2": rmsnorm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model), "norm2": rmsnorm_init(cfg.d_model),
+        "norm3": rmsnorm_init(cfg.d_model),
+        "self_attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "cross_attn": attn_init(ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_init(key, cfg: ArchConfig, max_pos: int = 1 << 16):
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), in_axis=1),
+        "pos_embed_enc": dense_init(ks[1], (max_pos, cfg.d_model), in_axis=1),
+        "pos_embed_dec": dense_init(ks[2], (max_pos, cfg.d_model), in_axis=1),
+        "enc": jax.vmap(lambda k: _enc_block_init(k, cfg))(
+            jax.random.split(ks[3], cfg.encoder_layers)
+        ),
+        "dec": jax.vmap(lambda k: _dec_block_init(k, cfg))(
+            jax.random.split(ks[4], cfg.decoder_layers)
+        ),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "lm_head": dense_init(ks[5], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def encode(params, audio_embeds, cfg: ArchConfig, ctx: ShardCtx = ShardCtx(), chunk=1024):
+    B, S, D = audio_embeds.shape
+    h = audio_embeds.astype(jnp.bfloat16) + params["pos_embed_enc"][:S][None]
+    h = ctx.cstr(h, "dp", "tp", None)
+    positions = jnp.arange(S)
+
+    def body(h, bp):
+        hn = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        attn_out, _ = attention_block(
+            bp["attn"], hn, cfg=cfg, positions=positions, causal=False,
+            use_rope=False, ctx=ctx, chunk=chunk,
+        )
+        h = h + attn_out
+        h2 = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+        h = h + mlp(bp["ffn"], h2, ctx=ctx)
+        return ctx.cstr(h, "dp", "tp", None), None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, params["enc"])
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decoder_stack(params, h, enc_out, cfg, ctx, mode, caches=None, pos=None, chunk=1024):
+    """Decoder scan. caches (decode): {'k','v' self [L,B,cap,..], 'ck','cv' cross}."""
+    B = h.shape[0]
+    S = h.shape[1]
+    positions = jnp.arange(S) if mode != "decode" else jnp.full((1,), pos, jnp.int32)
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def body(carry, xs):
+        h = carry
+        bp = xs[0] if caches is not None else xs
+        bc = xs[1] if caches is not None else None
+        hn = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        new_cache = {}
+        if mode == "decode":
+            k_new = (hn @ bp["self_attn"]["wk"]).reshape(B, 1, Hkv, Dh)
+            v_new = (hn @ bp["self_attn"]["wv"]).reshape(B, 1, Hkv, Dh)
+            cap = bc["k"].shape[1]
+            slot = jnp.minimum(pos, cap - 1)
+            k_buf = jax.lax.dynamic_update_slice_in_dim(bc["k"], k_new, slot, axis=1)
+            v_buf = jax.lax.dynamic_update_slice_in_dim(bc["v"], v_new, slot, axis=1)
+            attn_out, _ = attention_block(
+                bp["self_attn"], hn, cfg=cfg, positions=positions, causal=True,
+                use_rope=False, kv_override=(k_buf, v_buf, jnp.arange(cap)),
+                ctx=ctx, chunk=chunk,
+            )
+            new_cache.update(k=k_buf, v=v_buf, ck=bc["ck"], cv=bc["cv"])
+            cross_kv = (bc["ck"], bc["cv"], jnp.arange(bc["ck"].shape[1]))
+        else:
+            attn_out, (k_self, v_self) = attention_block(
+                bp["self_attn"], hn, cfg=cfg, positions=positions, causal=True,
+                use_rope=False, ctx=ctx, chunk=chunk,
+            )
+            if mode == "prefill":
+                new_cache.update(k=k_self, v=v_self)
+            Se = enc_out.shape[1]
+            ck = (enc_out @ bp["cross_attn"]["wk"]).reshape(B, Se, Hkv, Dh)
+            cv = (enc_out @ bp["cross_attn"]["wv"]).reshape(B, Se, Hkv, Dh)
+            if mode == "prefill":
+                new_cache.update(ck=ck, cv=cv)
+            cross_kv = (ck, cv, jnp.arange(Se))
+        h = h + attn_out
+        h2 = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+        cross_out, _ = attention_block(
+            bp["cross_attn"], h2, cfg=cfg, positions=positions, causal=False,
+            use_rope=False, kv_override=cross_kv, ctx=ctx, chunk=chunk,
+        )
+        h = h + cross_out
+        h3 = rmsnorm(bp["norm3"], h, cfg.norm_eps)
+        h = h + mlp(bp["ffn"], h3, ctx=ctx)
+        return ctx.cstr(h, "dp", "tp", None), (new_cache if new_cache else None)
+
+    body_fn = jax.checkpoint(body) if mode == "train" else body
+    xs = params["dec"] if caches is None else (params["dec"], caches)
+    h, caches_out = jax.lax.scan(body_fn, h, xs)
+    return h, caches_out
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, ctx: ShardCtx = ShardCtx(), chunk=1024):
+    """batch: {audio_embeds [B,Sa,D], tokens [B,St]}."""
+    enc_out = encode(params, batch["audio_embeds"], cfg, ctx, chunk)
+    tok = batch["tokens"]
+    h = params["embed"][tok].astype(jnp.bfloat16) + params["pos_embed_dec"][: tok.shape[1]][None]
+    h, _ = _decoder_stack(params, h, enc_out, cfg, ctx, "train", chunk=chunk)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    from .layers import chunked_lm_loss
+    loss = chunked_lm_loss(params, h[:, :-1, :], tok[:, 1:], cfg.vocab_size, ctx=ctx)
+    return loss, {"loss": loss}
+
+
+def encdec_prefill(params, batch, cfg: ArchConfig, ctx: ShardCtx = ShardCtx(), chunk=1024):
+    enc_out = encode(params, batch["audio_embeds"], cfg, ctx, chunk)
+    tok = batch["tokens"]
+    h = params["embed"][tok].astype(jnp.bfloat16) + params["pos_embed_dec"][: tok.shape[1]][None]
+    h, caches = _decoder_stack(params, h, enc_out, cfg, ctx, "prefill", chunk=chunk)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_head(params, h[:, -1:, :], cfg.vocab_size)
+    return logits[:, 0, :], caches
+
+
+def encdec_decode(params, batch, cfg: ArchConfig, ctx: ShardCtx = ShardCtx()):
+    """batch: {token [B], pos, caches {k,v,ck,cv each [L,B,cap,..]}}."""
+    tok, pos, caches = batch["token"], batch["pos"], batch["caches"]
+    h = params["embed"][tok][:, None, :].astype(jnp.bfloat16)
+    h = h + params["pos_embed_dec"][pos][None, None, :]
+    h, new_caches = _decoder_stack(params, h, None, cfg, ctx, "decode", caches=caches, pos=pos)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_head(params, h[:, 0, :], cfg.vocab_size)
+    return logits, new_caches
+
+
+def encdec_cache_init(cfg: ArchConfig, batch: int, cap: int, enc_len: int):
+    L = cfg.decoder_layers
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    z = lambda *s: jnp.zeros(s, jnp.bfloat16)
+    return {
+        "k": z(L, batch, cap, Hkv, Dh), "v": z(L, batch, cap, Hkv, Dh),
+        "ck": z(L, batch, enc_len, Hkv, Dh), "cv": z(L, batch, enc_len, Hkv, Dh),
+    }

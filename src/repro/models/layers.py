@@ -1,0 +1,269 @@
+"""Shared model layers: norms, RoPE, GQA attention (chunked online-softmax),
+SwiGLU MLP, embeddings.
+
+Design constraints (see DESIGN.md §6):
+  * everything lowers through ``lax.scan`` / ``lax.fori`` so 32k–500k
+    sequences never materialize S×S score matrices;
+  * all activations carry logical shardings via ``ShardCtx`` with
+    divisibility guards, so every assigned architecture (heads 4..64, kv 1..16)
+    lowers on a 16-way model axis;
+  * attention math accumulates in f32 (``preferred_element_type``), params and
+    activations are bf16.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import ShardCtx
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(np.prod([shape[a] for a in in_axis]))
+    return (jax.random.normal(key, shape, F32) / math.sqrt(max(1, fan_in))).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.bfloat16)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [S] or [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)          # [half]
+    ang = positions.astype(F32)[..., None] * freqs                       # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over the heads dim: [..., S, 1, half]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------- attention (GQA)
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim)),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim)),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim)),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model)),
+    }
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int):
+    """[Sq, Skv] additive mask (0 allowed / NEG_INF blocked)."""
+    ok = kpos[None, :] >= 0
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(F32)
+
+
+def _repeat_kv(x, rep: int):
+    if rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, rep, d)).reshape(b, s, h * rep, d)
+
+
+def attention_core(
+    q, k, v, qpos, kpos, *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    ctx: ShardCtx = ShardCtx(),
+    head_sharded: bool = True,
+):
+    """Chunked online-softmax attention.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Skv, Hkv, Dh]; qpos: [Sq]; kpos: [Skv].
+    Never materializes [Sq, Skv]; peak transient is [B, H, Sq, chunk] f32.
+    For Sq == 1 (decode) a direct full-KV path is used — one query against a
+    sharded KV reduces to partial-softmax + small cross-shard combines, which
+    GSPMD lowers to flash-decode-style collectives.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = Dh ** -0.5
+
+    q_l = ("dp", None, "tp", None) if head_sharded else ("dp", "tp", None, None)
+    q = ctx.cstr(q, *q_l)
+    if Sq > 1 and Skv > chunk:
+        # Keep K/V replicated over 'tp' so per-chunk dynamic slices are local
+        # (a seq-sharded KV would force involuntary full rematerialization).
+        k = ctx.cstr(k, "dp", None, None, None)
+        v = ctx.cstr(v, "dp", None, None, None)
+
+    if Sq == 1 or Skv <= chunk:
+        with jax.named_scope("attn_scores"):
+            kk, vv = _repeat_kv(k, rep), _repeat_kv(v, rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=F32) * scale
+            s = s + _mask_bias(qpos, kpos, causal, window)[None, None]
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vv,
+                           preferred_element_type=F32)
+            return o.astype(q.dtype)
+
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+    q32 = q
+
+    @jax.named_scope("attn_scores")  # region marker for roofline attribution
+    def body(carry, i):
+        o, m, l = carry
+        start = i * chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, chunk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, start, chunk, axis=0)
+        kc, vc = _repeat_kv(kc, rep), _repeat_kv(vc, rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kc, preferred_element_type=F32) * scale
+        s = s + _mask_bias(qpos, kp, causal, window)[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc, preferred_element_type=F32
+        )
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, H, Sq, Dh), F32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, F32)
+    l0 = jnp.zeros((B, H, Sq), F32)
+    # checkpoint per chunk: backward recomputes scores blockwise (flash-style)
+    # instead of saving stacked [n_chunks, B, H, Sq, chunk] f32 residuals.
+    (o, m, l), _ = jax.lax.scan(jax.checkpoint(body), (o0, m0, l0), jnp.arange(n_chunks))
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return jnp.transpose(out, (0, 2, 1, 3))  # [B, Sq, H, Dh]
+
+
+def attention_block(
+    p, x, *, cfg, positions, causal=True, window=0,
+    kv_override: Optional[Tuple] = None,      # (k, v, kpos) e.g. cross-attn / cache
+    use_rope=True, ctx: ShardCtx = ShardCtx(), chunk=1024,
+):
+    """Projections + RoPE + attention + output proj.  x: [B, S, D]."""
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    head_sharded_q = (H % max(1, ctx.tp) == 0) and S > 1
+    q_layout = ("dp", None, "tp", None) if head_sharded_q else ("dp", "tp", None, None)
+    # Reshard BEFORE RoPE so the boundary moves bf16 (RoPE upcasts to f32).
+    q = ctx.cstr((x @ p["wq"]).reshape(B, S, H, Dh), *q_layout)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    if kv_override is None:
+        k = ctx.cstr((x @ p["wk"]).reshape(B, S, Hkv, Dh), "dp", None, None, None)
+        v = ctx.cstr((x @ p["wv"]).reshape(B, S, Hkv, Dh), "dp", None, None, None)
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        kpos = positions
+    else:
+        k, v, kpos = kv_override
+    head_sharded = (H % max(1, ctx.tp) == 0)
+    o = attention_core(
+        q, k, v, positions, kpos, causal=causal, window=window,
+        chunk=chunk, ctx=ctx, head_sharded=head_sharded,
+    )
+    out = o.reshape(B, S, H * Dh) @ p["wo"]
+    return out, (k, v)
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff)),
+        "w_up": dense_init(ks[1], (d_model, d_ff)),
+        "w_down": dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def mlp(p, x, ctx: ShardCtx = ShardCtx()):
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    h = ctx.cstr(h, "dp", None, "tp")
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------- embeddings
+def embed_init(key, vocab: int, d_model: int):
+    return {"embed": dense_init(key, (vocab, d_model), in_axis=1)}
+
+
+def embed_lookup(p, tokens):
+    return p["embed"][tokens]
+
+
+def pos_embed_init(key, max_pos: int, d_model: int):
+    return {"pos_embed": dense_init(key, (max_pos, d_model), in_axis=1)}
+
+
+def logits_head(p, x, vocab_size: int):
+    """LM head with padded-vocab masking."""
+    logits = (x @ p["lm_head"]).astype(F32)
+    pad = logits.shape[-1] - vocab_size
+    if pad > 0:
+        mask = (jnp.arange(logits.shape[-1]) < vocab_size)
+        logits = jnp.where(mask, logits, NEG_INF)
+    return logits
+
+
+def softmax_xent(logits, labels, vocab_size: int):
+    """Mean token cross entropy; labels: int32 same leading shape."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_lm_loss(params, h, labels, vocab_size: int, *, chunk: int = 256,
+                    ctx=None):
+    """Next-token xent without materializing full [B, S, V] logits.
+
+    Scans sequence chunks: per chunk compute logits -> xent -> accumulate;
+    the chunk body is rematerialized so backward recomputes chunk logits
+    instead of saving them (the full-logit path holds multiple
+    [B, S, V/ tp] f32 buffers — 2.5 GB each at qwen3/gemma3 vocab sizes).
+    h: [B, S, D] (positions predicting labels [B, S])."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    rem = S % chunk
+    n = S // chunk
+
+    def body(acc, i):
+        start = i * chunk
+        hc = jax.lax.dynamic_slice_in_dim(h, start, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, start, chunk, axis=1)
+        logits = logits_head(params, hc, vocab_size)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    acc, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), F32), jnp.arange(n))
+    if rem:
+        logits = logits_head(params, h[:, n * chunk:], vocab_size)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, labels[:, n * chunk:][..., None], axis=-1)[..., 0]
+        acc = acc + jnp.sum(logz - gold)
+    return acc / (B * S)

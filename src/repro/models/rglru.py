@@ -1,0 +1,86 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU
+(arXiv:2402.19427).
+
+Block: x -> (linear to rnn_width -> causal conv1d(4) -> RG-LRU) gated by a
+parallel GeLU branch -> output projection.  RG-LRU per channel:
+
+    r_t = sigmoid(W_a xi_t),  i_t = sigmoid(W_x xi_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Gate matmuls run OUTSIDE the time scan (batched, MXU-friendly); the scan body
+is elementwise.  The Pallas ``rglru_scan`` kernel is the blocked TPU-target
+version of the same recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32, dense_init
+from .sharding import ShardCtx
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int = 4):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d_model, width)),
+        "w_gate_branch": dense_init(ks[1], (d_model, width)),
+        "conv": dense_init(ks[2], (conv_width, width)),
+        "w_a": dense_init(ks[3], (width, width)),
+        "w_x": dense_init(ks[4], (width, width)),
+        "lam": jnp.full((width,), 0.65, jnp.float32),   # Lambda (softplus-domain)
+        "out_proj": dense_init(ks[5], (width, d_model)),
+    }
+
+
+def causal_conv1d(x, kernel, prev):
+    """x: [B,T,W]; kernel: [Cw,W]; prev: [B,Cw-1,W] carry-in. Depthwise."""
+    cw = kernel.shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)                     # [B, T+Cw-1, W]
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(cw):  # small static unroll (conv_width = 4)
+        out = out + xp[:, i : i + x.shape[1], :].astype(F32) * kernel[cw - 1 - i].astype(F32)
+    return out.astype(x.dtype), xp[:, -(cw - 1):, :]
+
+
+def rglru_scan(xi, r, i_gate, lam, h0):
+    """xi, r, i_gate: [B,T,W]; lam: [W]; h0: [B,W] -> (y [B,T,W], hT)."""
+    log_a = (-RGLRU_C * jax.nn.softplus(lam))[None, None, :] * r.astype(F32)  # [B,T,W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i_gate.astype(F32) * xi.astype(F32))
+
+    @jax.named_scope("rglru_rec")  # region marker for roofline attribution
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0))
+    hT, ys = jax.lax.scan(step, h0.astype(F32), xs)
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def rglru_block_apply(p, x, state, ctx: ShardCtx = ShardCtx()):
+    """x: [B,T,D]; state: {h:[B,W], conv:[B,Cw-1,W]}. Returns (out, state)."""
+    xi = x @ p["w_in"]
+    xi = ctx.cstr(xi, "dp", None, "tp")
+    xi, conv_state = causal_conv1d(xi, p["conv"], state["conv"])
+    r = jax.nn.sigmoid((xi @ p["w_a"]).astype(F32))
+    i_gate = jax.nn.sigmoid((xi @ p["w_x"]).astype(F32))
+    y, hT = rglru_scan(xi, r, i_gate, p["lam"], state["h"])
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(F32))
+    out = (y * gate).astype(x.dtype) @ p["out_proj"]
+    return out, {"h": hT, "conv": conv_state}
+
+
+def rglru_state_init(batch: int, width: int, conv_width: int = 4):
+    return {
+        "h": jnp.zeros((batch, width), F32),
+        "conv": jnp.zeros((batch, conv_width - 1, width), jnp.bfloat16),
+    }

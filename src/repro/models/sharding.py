@@ -1,0 +1,125 @@
+"""Logical-axis sharding for all model code.
+
+Models annotate activations with *logical* dims ('dp' batch-ish, 'tp'
+tensor-ish, None); the context maps them to mesh axes and silently drops any
+assignment that does not divide the dim (e.g. batch=1 for long_500k, heads=4
+on a 16-way model axis) — GSPMD then replicates that dim.  Param shardings
+are derived from tree paths (FSDP over 'dp' x Megatron col/row over 'tp').
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Maps logical dims to mesh axes; None mesh = no-op (single device)."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)     # ('pod','data') on multi-pod
+    tp_axis: str = "model"
+
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size(self.dp_axes)
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.tp_axis)
+
+    def _resolve(self, logical, size: int):
+        """logical in {None,'dp','tp','dptp'} -> mesh axes or None (guarded)."""
+        if logical is None or self.mesh is None:
+            return None
+        if logical == "dp":
+            axes: Tuple[str, ...] = tuple(self.dp_axes)
+        elif logical == "tp":
+            axes = (self.tp_axis,)
+        elif logical == "dptp":
+            axes = tuple(self.dp_axes) + (self.tp_axis,)
+        else:
+            raise ValueError(f"unknown logical axis {logical!r}")
+        if size % self.axis_size(axes) != 0:
+            return None  # would not divide: replicate instead
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_dims: Sequence, shape: Sequence[int]) -> P:
+        return P(*[self._resolve(l, s) for l, s in zip(logical_dims, shape)])
+
+    def cstr(self, x, *logical_dims):
+        """with_sharding_constraint by logical dims (no-op w/o mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(logical_dims, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        return None if self.mesh is None else NamedSharding(self.mesh, spec)
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding by tree path (FSDP on dp x tensor-parallel on tp).
+# --------------------------------------------------------------------------
+
+_LAST2_RULES = (
+    # (path regex, (logical for dim -2, logical for dim -1))
+    (r"embed",            ("tp", "dp")),    # [V, D] vocab-sharded
+    (r"lm_head",          ("dp", "tp")),    # [D, V]
+    (r"pos_embed",        (None, "dp")),    # [maxpos, D]
+    (r"(wo|w_down|out_proj|w2)$", ("tp", "dp")),  # row-parallel
+    (r"router",           ("dp", None)),
+    (r"conv",             (None, "tp")),
+    (r".*",               ("dp", "tp")),    # default column-parallel
+)
+
+
+def spec_for_param(ctx: ShardCtx, path: str, shape: Tuple[int, ...]) -> P:
+    if len(shape) == 0:
+        return P()
+    if len(shape) == 1:
+        return P(None)
+    for pat, (a, b) in _LAST2_RULES:
+        if re.search(pat, path):
+            lead = [None] * (len(shape) - 2)
+            # MoE 3D weights: shard experts dim (axis -3) on tp, switch the
+            # matmul dims to (dp, None)/(None, dp).
+            if len(shape) >= 3 and re.search(r"(w1|w2|w3|wi|wg)$", path) and "experts" in path:
+                lead = [None] * (len(shape) - 3) + ["tp"]
+                a2, b2 = ("dp", None) if path.endswith(("w1", "w3", "wi", "wg")) else (None, "dp")
+                return ctx.spec(lead + [a2, b2], shape)
+            return ctx.spec(lead + [a, b], shape)
+    return P(*([None] * len(shape)))
+
+
+def tree_param_specs(ctx: ShardCtx, params) -> object:
+    """PartitionSpec pytree mirroring ``params`` (which may be shapes)."""
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        shape = leaf.shape if hasattr(leaf, "shape") else np.shape(leaf)
+        return spec_for_param(ctx, pstr, tuple(shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def tree_shardings(ctx: ShardCtx, params) -> object:
+    specs = tree_param_specs(ctx, params)
+    return jax.tree_util.tree_map(lambda s: ctx.named(s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))

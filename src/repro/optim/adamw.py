@@ -1,0 +1,146 @@
+"""AdamW (decoupled weight decay) with bf16 params + f32 moments.
+
+Hand-rolled (no optax dependency): moments live in f32 sharded identically to
+their parameters (FSDP), update math in f32, params cast back to their
+storage dtype.  Global-norm clipping included (standard at scale).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(F32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+# ------------------------------------------------------------ 8-bit moments
+# Dettmers-style quantized optimizer state (arXiv:2110.02861): m in int8 and
+# v in uint8 with per-row (last-axis) f32 absmax scales — 2 bytes/param of
+# state instead of 8.  This is what makes qwen3-235B's AdamW state fit v5e:
+# 9.2 GB/chip (f32 m+v) -> 2.8 GB/chip.
+
+
+def _row_scale(x, eps=1e-12):
+    return jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True), eps)
+
+
+def _q_m(m):
+    s = _row_scale(m) / 127.0
+    return jnp.clip(jnp.round(m / s), -127, 127).astype(jnp.int8), s.astype(F32)
+
+
+def _q_v(v):
+    s = _row_scale(v) / 255.0
+    return jnp.clip(jnp.round(v / s), 0, 255).astype(jnp.uint8), s.astype(F32)
+
+
+def adamw8bit_init(params) -> Dict[str, Any]:
+    def zm(p):
+        return jnp.zeros(p.shape, jnp.int8)
+
+    def zv(p):
+        return jnp.zeros(p.shape, jnp.uint8)
+
+    def zs(p):
+        return jnp.zeros(p.shape[:-1] + (1,) if p.ndim else (1,), F32)
+
+    t = jax.tree_util.tree_map
+    return {"m": t(zm, params), "v": t(zv, params),
+            "ms": t(zs, params), "vs": t(zs, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw8bit_update(grads, opt_state, params, cfg: AdamWConfig, lr_scale=1.0):
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, mq, vq, ms, vs, p):
+        g = g.astype(F32) * clip
+        m = mq.astype(F32) * ms
+        v = vq.astype(F32) * vs
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        delta = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+        mq2, ms2 = _q_m(m)
+        vq2, vs2 = _q_v(v)
+        return new_p, mq2, vq2, ms2, vs2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    parts = [tdef.flatten_up_to(grads)] + [
+        tdef.flatten_up_to(opt_state[k]) for k in ("m", "v", "ms", "vs")
+    ]
+    out = [upd(g, mq, vq, ms, vs, p)
+           for g, mq, vq, ms, vs, p in zip(*parts, flat_p)]
+    unf = lambda i: tdef.unflatten([o[i] for o in out])
+    return unf(0), {"m": unf(1), "v": unf(2), "ms": unf(3), "vs": unf(4),
+                    "step": step}, {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    s = step.astype(F32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(1, warmup))
+    prog = jnp.clip((s - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

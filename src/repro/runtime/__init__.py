@@ -1,0 +1,25 @@
+from .compression import (
+    compressed_psum,
+    init_error_state,
+    int8_dequantize,
+    int8_quantize,
+    topk_compress,
+)
+from .elastic import ElasticController, ScaleEvent
+from .fault_tolerance import (
+    FailureInjector,
+    HeartbeatMonitor,
+    RecoveryActions,
+    recover,
+)
+from .serve_loop import DiffusionServer, Replica, Request, ServeStats
+from .train_loop import TrainConfig, Trainer, TrainResult
+
+__all__ = [
+    "compressed_psum", "init_error_state", "int8_dequantize", "int8_quantize",
+    "topk_compress",
+    "ElasticController", "ScaleEvent",
+    "FailureInjector", "HeartbeatMonitor", "RecoveryActions", "recover",
+    "DiffusionServer", "Replica", "Request", "ServeStats",
+    "TrainConfig", "Trainer", "TrainResult",
+]

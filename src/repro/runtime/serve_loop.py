@@ -1,0 +1,244 @@
+"""Serving runtime: cache-affinity request routing + elastic replica pool.
+
+The paper's data-aware dispatch, reincarnated for LLM serving: a request's
+data objects are its session's KV-cache segments (prefix blocks).  Replicas
+that already hold a session's state serve it from "local cache" (decode
+continues in place); a replica without it pays the "copy" cost (replaying
+the prefix = the paper's persistent-store fetch; migrating state from a peer
+replica = the peer-cache fetch).  The DRP grows/shrinks the replica pool
+with queue length.  Policies are the paper's five, unchanged — the scheduler
+*is* ``core.scheduler.DataAwareScheduler``.
+
+Runs for real on CPU with a reduced-config model (examples/serve_diffusion.py);
+the decode step is the same ``make_decode_step`` the dry-run lowers at scale.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.index import CentralizedIndex
+from ..core.provisioner import DynamicResourceProvisioner
+from ..core.scheduler import DataAwareScheduler
+from ..core.task import ExecutorState, Task
+from ..models import cache_init, init_params, make_decode_step, make_prefill_step
+from ..models.sharding import ShardCtx
+
+
+@dataclass
+class Request:
+    request_id: int
+    session_id: str
+    prompt: np.ndarray              # token ids
+    max_new_tokens: int = 8
+    submit_time_s: float = 0.0
+    finish_time_s: Optional[float] = None
+    replica: Optional[str] = None
+    prefix_hit: bool = False
+
+    @property
+    def response_time_s(self) -> Optional[float]:
+        if self.finish_time_s is None:
+            return None
+        return self.finish_time_s - self.submit_time_s
+
+
+class Replica:
+    """One model replica: params + per-session KV caches (bounded count)."""
+
+    def __init__(self, name: str, cfg: ArchConfig, params, cap: int,
+                 max_sessions: int = 8):
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.cap = cap
+        self.max_sessions = max_sessions
+        self.sessions: Dict[str, Dict[str, Any]] = {}  # sid -> {caches, pos}
+
+    def has_session(self, sid: str) -> bool:
+        return sid in self.sessions
+
+    def admit(self, sid: str, caches, pos: int) -> Optional[str]:
+        evicted = None
+        if sid not in self.sessions and len(self.sessions) >= self.max_sessions:
+            evicted = next(iter(self.sessions))
+            del self.sessions[evicted]
+        self.sessions[sid] = {"caches": caches, "pos": pos}
+        return evicted
+
+
+@dataclass
+class ServeStats:
+    served: int = 0
+    prefix_hits: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    response_times: List[float] = field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.prefix_hits / self.served if self.served else 0.0
+
+    @property
+    def avg_response_s(self) -> float:
+        return float(np.mean(self.response_times)) if self.response_times else 0.0
+
+
+class DiffusionServer:
+    """Single-process serving demo with the paper's routing policies."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        policy: str = "good-cache-compute",
+        max_replicas: int = 4,
+        min_replicas: int = 1,
+        cache_cap: int = 128,
+        max_sessions: int = 8,
+        ctx: ShardCtx = ShardCtx(),
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.cap = cache_cap
+        self.max_sessions = max_sessions
+        self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        shape = ShapeConfig("serve", "prefill", cache_cap, 1)
+        self.prefill_fn = jax.jit(make_prefill_step(cfg, shape, ctx))
+        self.decode_fn = jax.jit(make_decode_step(cfg, ctx))
+        self.index = CentralizedIndex()
+        self.sched = DataAwareScheduler(policy=policy, window=64, index=self.index)
+        self.drp = DynamicResourceProvisioner(
+            max_nodes=max_replicas, min_nodes=min_replicas, policy="watermark",
+            tasks_per_node_target=4.0, allocation_latency_s=(0.0, 0.0),
+        )
+        self.replicas: Dict[str, Replica] = {}
+        self._next_replica = 0
+        for _ in range(min_replicas):
+            self._add_replica()
+        self.drp.registered = min_replicas
+        self.queue: deque = deque()
+        self.stats = ServeStats()
+        self._req_id = 0
+
+    # ---------------------------------------------------------- replicas
+    def _add_replica(self) -> str:
+        name = f"replica{self._next_replica}"
+        self._next_replica += 1
+        self.replicas[name] = Replica(name, self.cfg, self.params, self.cap,
+                                      max_sessions=self.max_sessions)
+        self.sched.register_executor(name)
+        return name
+
+    def _remove_replica(self, name: str) -> None:
+        self.replicas.pop(name, None)
+        self.sched.deregister_executor(name)
+
+    def scale_to(self, n: int) -> None:
+        while len(self.replicas) < n:
+            self._add_replica()
+        while len(self.replicas) > n:
+            self._remove_replica(next(reversed(self.replicas)))
+
+    # ------------------------------------------------------------ submit
+    def submit(self, session_id: str, prompt: np.ndarray,
+               max_new_tokens: int = 8) -> Request:
+        req = Request(self._req_id, session_id, prompt, max_new_tokens,
+                      submit_time_s=time.time())
+        self._req_id += 1
+        self.queue.append(req)
+        # DRP watches the queue (allocation latency 0 in the demo).
+        r = self.drp.on_queue_change(time.time(), len(self.queue))
+        if r is not None:
+            self.drp.complete(r)
+            for _ in range(r.nodes):
+                self._add_replica()
+        return req
+
+    # ------------------------------------------------------------- serve
+    def _run_request(self, replica: Replica, req: Request) -> None:
+        sid = req.session_id
+        state = replica.sessions.get(sid)
+        req.prefix_hit = state is not None
+        if state is None:
+            # "copy from persistent storage": replay the prompt (prefill).
+            self.stats.prefills += 1
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            batch = {"tokens": prompt}
+            _, pre_caches = self.prefill_fn(self.params, batch)
+            # prefill caches are full-seq; re-home into a decode cache buffer
+            caches = cache_init(self.cfg, 1, self.cap)
+            caches = _merge_prefill_caches(caches, pre_caches, self.cfg)
+            pos = req.prompt.shape[0]
+            evicted = replica.admit(sid, caches, pos)
+            self.index.add(sid, replica.name)
+            if evicted is not None:
+                self.index.remove(evicted, replica.name)
+        else:
+            self.stats.prefix_hits += 1
+            caches, pos = state["caches"], state["pos"]
+
+        state = replica.sessions[sid]
+        caches, pos = state["caches"], state["pos"]
+        token = jnp.asarray([int(req.prompt[-1]) % self.cfg.vocab_size], jnp.int32)
+        for _ in range(req.max_new_tokens):
+            if pos >= self.cap - 1:
+                break
+            logits, caches = self.decode_fn(
+                self.params, {"token": token, "pos": jnp.asarray(pos, jnp.int32),
+                              "caches": caches}
+            )
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pos += 1
+            self.stats.decode_steps += 1
+        replica.sessions[sid] = {"caches": caches, "pos": pos}
+        req.finish_time_s = time.time()
+        self.stats.served += 1
+        self.stats.response_times.append(req.response_time_s)
+
+    def step(self) -> int:
+        """Drain the queue through the data-aware scheduler. Returns served."""
+        served = 0
+        while self.queue:
+            req = self.queue.popleft()
+            task = Task(req.request_id, (req.session_id,), compute_time_s=0.0)
+            self.sched.submit(task)
+            pair = self.sched.notify()
+            if pair is None:
+                # policy delayed (preferred replica busy) — in this
+                # synchronous demo every replica frees between requests, so
+                # force the head onto any replica.
+                name = next(iter(self.replicas))
+                self.sched._dispatch(task, name)
+            else:
+                name, task = pair
+            replica = self.replicas[name]
+            req.replica = name
+            self._run_request(replica, req)
+            self.sched.set_state(name, ExecutorState.FREE)
+            served += 1
+        return served
+
+
+def _merge_prefill_caches(decode_caches, prefill_caches, cfg: ArchConfig):
+    """Copy prefill K/V (length S) into the decode cache buffers (cap >= S)."""
+
+    def merge(dst, src):
+        if dst.ndim >= 3 and src.ndim == dst.ndim and src.shape != dst.shape:
+            # K/V buffers: [.., B, S, H, D] into [.., B, cap, H, D]
+            s = src.shape[-3]
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=dst.ndim - 3
+            ) if s <= dst.shape[-3] else dst
+        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+
+    return jax.tree_util.tree_map(merge, decode_caches, prefill_caches)

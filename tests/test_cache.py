@@ -1,0 +1,90 @@
+"""Unit + property tests for cache eviction policies."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import Cache, EVICTION_POLICIES
+
+
+def test_lru_evicts_least_recent():
+    c = Cache(3, policy="lru")
+    for name in "abc":
+        c.insert(name, 1)
+    c.access("a")  # refresh a
+    evicted = c.insert("d", 1)
+    assert evicted == ["b"]
+    assert "a" in c and "c" in c and "d" in c
+
+
+def test_fifo_evicts_first_inserted():
+    c = Cache(3, policy="fifo")
+    for name in "abc":
+        c.insert(name, 1)
+    c.access("a")  # no effect under FIFO
+    assert c.insert("d", 1) == ["a"]
+
+
+def test_lfu_evicts_least_frequent():
+    c = Cache(3, policy="lfu")
+    for name in "abc":
+        c.insert(name, 1)
+    for _ in range(3):
+        c.access("a")
+    c.access("b")
+    assert c.insert("d", 1) == ["c"]
+
+
+def test_random_evicts_member():
+    c = Cache(2, policy="random", rng=random.Random(0))
+    c.insert("a", 1)
+    c.insert("b", 1)
+    ev = c.insert("c", 1)
+    assert len(ev) == 1 and ev[0] in ("a", "b")
+
+
+def test_oversize_object_not_cached():
+    c = Cache(10, policy="lru")
+    assert c.insert("big", 11) == []
+    assert "big" not in c
+    assert c.used_bytes == 0
+
+
+def test_hit_miss_stats():
+    c = Cache(10, policy="lru")
+    c.insert("a", 5)
+    assert c.access("a") and not c.access("b")
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert c.stats.hit_rate == 0.5
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    policy=st.sampled_from(EVICTION_POLICIES),
+    capacity=st.integers(1, 50),
+    ops=st.lists(
+        st.tuples(st.sampled_from("ai"), st.integers(0, 30), st.integers(1, 10)),
+        max_size=200,
+    ),
+)
+def test_capacity_invariant(policy, capacity, ops):
+    """used_bytes never exceeds capacity; contents match bookkeeping."""
+    c = Cache(capacity, policy=policy, rng=random.Random(1))
+    for op, key, size in ops:
+        name = f"k{key}"
+        if op == "a":
+            c.access(name)
+        else:
+            c.insert(name, size)
+        assert c.used_bytes <= c.capacity_bytes
+        assert c.used_bytes == sum(c.size_of(n) for n in c.contents())
+
+
+@settings(max_examples=50, deadline=None)
+@given(policy=st.sampled_from(EVICTION_POLICIES), keys=st.lists(st.integers(0, 5), min_size=1))
+def test_insert_then_contains(policy, keys):
+    c = Cache(1000, policy=policy)
+    for k in keys:
+        c.insert(f"k{k}", 1)
+        assert f"k{k}" in c

@@ -1,0 +1,98 @@
+"""Checkpoint: roundtrip, atomicity, async, corruption, resharding-shape."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"w": jnp.ones((5,), jnp.bfloat16), "s": jnp.zeros((), jnp.int32)},
+        "c": [jnp.full((2, 2), 3.0), jnp.asarray(7, jnp.int8)],
+    }
+
+
+def assert_tree_equal(x, y):
+    for a, b in zip(jax.tree_util.tree_leaves(x), jax.tree_util.tree_leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    assert list_checkpoints(str(tmp_path)) == [3]
+    restored = restore_checkpoint(str(tmp_path), 3, jax.tree_util.tree_map(jnp.zeros_like, t))
+    assert_tree_equal(t, restored)
+    # dtypes preserved (incl. bfloat16 through the raw-byte path)
+    assert restored["b"]["w"].dtype == jnp.bfloat16
+
+
+def test_uncommitted_checkpoints_invisible(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    os.remove(tmp_path / "step_00000001" / "_COMMITTED")
+    assert list_checkpoints(str(tmp_path)) == []
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), 1, t)
+
+
+def test_corruption_detected(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    f = tmp_path / "step_00000001" / "arrays_0.npz"
+    data = f.read_bytes()
+    f.write_bytes(data[:-3] + b"XXX")
+    with pytest.raises(IOError):
+        restore_checkpoint(str(tmp_path), 1, t)
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    ck.wait()
+    steps = list_checkpoints(str(tmp_path))
+    assert steps[-1] == 4 and len(steps) <= 3
+    assert latest_checkpoint(str(tmp_path)) == 4
+
+
+def test_restore_casts_dtype(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, t)
+    target = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    restored = restore_checkpoint(str(tmp_path), 1, target)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), 1, {"w2": jnp.ones((4,))})
+
+
+def test_elastic_restore_into_model(tmp_path):
+    """Save a reduced model's state, restore into a fresh instance."""
+    from repro.configs import get_arch
+    from repro.models import init_opt_state, init_params
+    cfg = get_arch("internlm2-1.8b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, cfg)
+    save_checkpoint(str(tmp_path), 7, {"params": params, "opt": opt})
+    fresh = {"params": init_params(cfg, jax.random.PRNGKey(1)),
+             "opt": init_opt_state(init_params(cfg, jax.random.PRNGKey(1)), cfg)}
+    restored = restore_checkpoint(str(tmp_path), 7, fresh)
+    assert_tree_equal(restored["params"], params)

@@ -1,0 +1,139 @@
+"""Abstract model (paper Section 4) formula + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.model import (
+    ModelInputs,
+    average_overhead_time,
+    computational_intensity,
+    efficiency,
+    efficiency_bound_holds,
+    optimize_resources,
+    predict_wet_ramp,
+    speedup,
+    workload_execution_time,
+    workload_execution_time_with_overheads,
+    working_set_fits,
+    zeta,
+)
+from repro.core.workload import paper_ramp_rates, provisioning_workload
+
+GBIT = 1e9 / 8
+
+
+def base_inputs(**kw):
+    d = dict(
+        num_tasks=10_000, arrival_rate=100.0, avg_compute_s=0.01,
+        dispatch_overhead_s=0.005, num_executors=64,
+        object_size_bytes=10 * 1024 * 1024, hit_rate_local=0.9,
+        hit_rate_remote=0.05, local_bw=1.6 * GBIT, remote_bw=1 * GBIT,
+        persistent_bw=4.4 * GBIT,
+    )
+    d.update(kw)
+    return ModelInputs(**d)
+
+
+def test_intensity_definition():
+    m = base_inputs(arrival_rate=200.0, avg_compute_s=0.01)
+    assert computational_intensity(m) == pytest.approx(2.0)
+
+
+def test_v_is_arrival_limited_when_capacity_ample():
+    m = base_inputs()
+    # B/|T| = 0.01/64 << 1/A = 0.01 -> V = |K|/A
+    assert workload_execution_time(m) == pytest.approx(10_000 / 100.0)
+
+
+def test_w_geq_v_and_e_leq_1():
+    m = base_inputs()
+    v = workload_execution_time(m)
+    w = workload_execution_time_with_overheads(m)
+    assert w >= v - 1e-9
+    assert 0 < efficiency(m) <= 1.0
+
+
+def test_full_hit_rate_faster_than_all_miss():
+    # the miss path sees *contended* persistent-store bandwidth:
+    # eta(nu, omega) = 4.4 Gb/s / 64 concurrent readers
+    contended = 4.4 * GBIT / 64
+    hit = base_inputs(hit_rate_local=1.0, hit_rate_remote=0.0,
+                      persistent_bw=contended)
+    miss = base_inputs(hit_rate_local=0.0, hit_rate_remote=0.0,
+                       persistent_bw=contended)
+    assert average_overhead_time(hit) < average_overhead_time(miss)
+    assert efficiency(hit) >= efficiency(miss)
+
+
+def test_efficiency_bound_claim():
+    """Paper: E > 0.5 when mu > o + zeta."""
+    m = base_inputs(avg_compute_s=0.2, hit_rate_local=0.0, hit_rate_remote=0.0,
+                    arrival_rate=10_000.0, num_executors=4)
+    if efficiency_bound_holds(m):
+        assert efficiency(m) > 0.5
+
+
+def test_working_set_claim():
+    assert working_set_fits(128e9, 100e9)
+    assert not working_set_fits(64e9, 100e9)
+
+
+def test_optimize_resources_monotone_objective():
+    m = base_inputs(arrival_rate=1000.0)
+    t, obj = optimize_resources(m, 128)
+    assert 1 <= t <= 128 and obj > 0
+
+
+def test_speedup_scales_with_executors_until_arrival_bound():
+    lo = base_inputs(num_executors=2, arrival_rate=1e9)
+    hi = base_inputs(num_executors=64, arrival_rate=1e9)
+    assert speedup(hi) > speedup(lo)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    hit=st.floats(0, 1), rem=st.floats(0, 1),
+    mu=st.floats(1e-4, 10), o=st.floats(1e-5, 1),
+    t=st.integers(1, 512), a=st.floats(0.1, 10_000),
+)
+def test_efficiency_bounds_property(hit, rem, mu, o, t, a):
+    if hit + rem > 1:
+        hit, rem = hit / (hit + rem), rem / (hit + rem)
+    m = base_inputs(hit_rate_local=hit, hit_rate_remote=rem, avg_compute_s=mu,
+                    dispatch_overhead_s=o, num_executors=t, arrival_rate=a)
+    e = efficiency(m)
+    assert 0.0 <= e <= 1.0
+    assert speedup(m) <= t + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(bw1=st.floats(1e6, 1e12), bw2=st.floats(1e6, 1e12), size=st.floats(1, 1e10))
+def test_zeta_monotone_in_bandwidth(bw1, bw2, size):
+    lo, hi = min(bw1, bw2), max(bw1, bw2)
+    assert zeta(size, hi) <= zeta(size, lo)
+
+
+# ---------------------------------------------------------------- workload
+def test_paper_ramp_shape():
+    rates = paper_ramp_rates()
+    assert rates[0] == 1 and rates[-1] == 1000 and len(rates) == 24
+    assert rates == sorted(rates)
+    # the documented sequence prefix
+    assert rates[:8] == [1, 2, 3, 4, 6, 8, 11, 15]
+
+
+def test_ideal_span_close_to_paper():
+    wl = provisioning_workload(num_tasks=250_000)
+    # paper: ideal workload execution time 1415 s
+    assert abs(wl.ideal_span_s - 1415) < 30
+
+
+def test_predict_wet_ramp_matches_ideal_when_fast():
+    wl = provisioning_workload(num_tasks=25_000)
+    m = base_inputs(num_tasks=25_000, hit_rate_local=1.0, hit_rate_remote=0.0,
+                    avg_compute_s=0.001, dispatch_overhead_s=0.0001,
+                    num_executors=1024)
+    wet = predict_wet_ramp(m, wl.interval_rates, wl.interval_duration_s)
+    assert wet == pytest.approx(wl.ideal_span_s, rel=0.1)

@@ -1,0 +1,165 @@
+"""Data pipeline + runtime (trainer/serving/compression/fault-tolerance)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data import DiffusionDataPipeline, ObjectStoreEmulator, PipelineConfig, ShardSpec
+from repro.runtime import (
+    DiffusionServer,
+    FailureInjector,
+    HeartbeatMonitor,
+    TrainConfig,
+    Trainer,
+    init_error_state,
+    int8_dequantize,
+    int8_quantize,
+    recover,
+    topk_compress,
+)
+
+
+# ----------------------------------------------------------------- pipeline
+def test_object_store_deterministic():
+    store = ObjectStoreEmulator(vocab_size=101)
+    s = ShardSpec(3, 1024, seed=9)
+    a, b = store.fetch(s), store.fetch(s)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 101
+
+
+def test_pipeline_locality_gives_hits():
+    cfg = PipelineConfig(num_shards=16, locality=8, cache_bytes_per_host=1 << 22)
+    p = DiffusionDataPipeline(cfg, num_hosts=4)
+    for _ in range(64):
+        batch, info = p.next_batch()
+        assert batch.shape == (cfg.global_batch, cfg.seq_len + 1)
+    assert p.hit_rate > 0.5  # locality=8 -> at least 7/8 could hit
+
+
+def test_pipeline_no_locality_low_hits():
+    hi = DiffusionDataPipeline(
+        PipelineConfig(num_shards=64, locality=16, cache_bytes_per_host=1 << 21), 2)
+    lo = DiffusionDataPipeline(
+        PipelineConfig(num_shards=64, locality=1, cache_bytes_per_host=1 << 21), 2)
+    for _ in range(64):
+        hi.next_batch()
+        lo.next_batch()
+    assert hi.hit_rate > lo.hit_rate
+
+
+def test_pipeline_elastic_hosts():
+    p = DiffusionDataPipeline(PipelineConfig(num_shards=8), num_hosts=2)
+    p.add_host("host2")
+    assert p.num_hosts() == 3
+    p.remove_host("host0")
+    assert p.num_hosts() == 2
+    for _ in range(8):
+        p.next_batch()  # still serves
+
+
+# ------------------------------------------------------------- compression
+def test_int8_quant_bounded_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)), jnp.float32)
+    q, s = int8_quantize(x)
+    err = jnp.abs(int8_dequantize(q, s) - x).max()
+    assert float(err) <= float(s) + 1e-6
+
+
+def test_topk_error_feedback_conserves_mass():
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(64, 64)), jnp.float32)}
+    e = init_error_state(g)
+    sent, e2 = topk_compress(g, e, k_ratio=0.1)
+    # sent + residual == original
+    np.testing.assert_allclose(
+        np.asarray(sent["w"], np.float32) + np.asarray(e2["w"]),
+        np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+    sparsity = float((sent["w"] == 0).mean())
+    assert sparsity > 0.85
+
+
+def test_topk_error_reenters():
+    g = {"w": jnp.ones((10,), jnp.float32)}
+    e = init_error_state(g)
+    _, e1 = topk_compress(g, e, k_ratio=0.1)
+    sent2, _ = topk_compress(g, e1, k_ratio=0.1)
+    # accumulated residual raises magnitude of what is sent next round
+    assert float(jnp.abs(sent2["w"]).max()) >= 1.0
+
+
+# --------------------------------------------------------- fault tolerance
+def test_heartbeat_timeout_marks_lost():
+    mon = HeartbeatMonitor(timeout_s=1.0)
+    mon.register("w0", now=0.0)
+    mon.register("w1", now=0.0)
+    mon.heartbeat("w1", now=5.0)
+    lost = mon.check(now=5.1)
+    assert lost == ["w0"]
+    assert mon.alive() == ["w1"]
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(straggler_factor=2.0)
+    for w in ("a", "b", "c"):
+        mon.register(w)
+    for _ in range(10):
+        mon.heartbeat("a", step_time_s=1.0)
+        mon.heartbeat("b", step_time_s=1.0)
+        mon.heartbeat("c", step_time_s=5.0)
+    assert mon.stragglers() == ["c"]
+
+
+def test_recover_ladder():
+    from repro.core.provisioner import DynamicResourceProvisioner
+    from repro.core.scheduler import DataAwareScheduler
+    mon = HeartbeatMonitor(timeout_s=1.0)
+    sched = DataAwareScheduler()
+    drp = DynamicResourceProvisioner(max_nodes=8, allocation_latency_s=(0, 0))
+    drp.registered = 4
+    for w in ("w0", "w1"):
+        mon.register(w, now=0.0)
+        sched.register_executor(w)
+    lost = mon.check(now=10.0)
+    act = recover(mon, sched, drp, latest_ckpt_step=42, lost=lost, now=10.0)
+    assert set(act.lost_workers) == {"w0", "w1"}
+    assert act.restart_from_step == 42
+    assert act.provision_requested >= 1
+    assert sched.registered() == 0
+
+
+# ------------------------------------------------------------ train + serve
+def test_trainer_failure_injection_restarts(tmp_path):
+    cfg = get_arch("internlm2-1.8b").reduced()
+    shape = ShapeConfig("t", "train", 64, 4)
+    inj = FailureInjector({12: ["host1"]})
+    tr = Trainer(cfg, shape,
+                 TrainConfig(total_steps=20, log_every=100, checkpoint_every=5,
+                             checkpoint_dir=str(tmp_path), num_hosts=3),
+                 failure_injector=inj)
+    res = tr.run(start_fresh=True)
+    assert res.restarts == 1
+    assert tr.pipeline.num_hosts() == 2
+    assert np.isfinite(res.final_loss)
+
+
+def test_server_prefix_affinity_beats_first_available():
+    cfg = get_arch("internlm2-1.8b").reduced()
+    rng = np.random.default_rng(0)
+    prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(12,)) for i in range(6)}
+
+    def run(policy):
+        srv = DiffusionServer(cfg, policy=policy, max_replicas=3, cache_cap=48, seed=1)
+        srv.scale_to(3)
+        for _ in range(4):
+            for sid, p in prompts.items():
+                srv.submit(sid, p, max_new_tokens=2)
+            srv.step()
+        return srv.stats
+
+    aff = run("good-cache-compute")
+    fa = run("first-available")
+    assert aff.hit_rate >= fa.hit_rate
+    assert aff.hit_rate > 0.5

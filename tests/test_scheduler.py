@@ -1,0 +1,162 @@
+"""Data-aware scheduler policy tests (paper Section 3.2 semantics)."""
+
+import pytest
+
+from repro.core.index import CentralizedIndex
+from repro.core.scheduler import POLICIES, DataAwareScheduler
+from repro.core.task import ExecutorState, Task
+
+
+def make_sched(policy, n_exec=4, **kw):
+    s = DataAwareScheduler(policy=policy, **kw)
+    for i in range(n_exec):
+        s.register_executor(f"e{i}")
+    return s
+
+
+def test_first_available_ignores_locality():
+    s = make_sched("first-available")
+    s.index.add("f1", "e3")  # e3 caches f1 — FA must not care
+    s.submit(Task(0, ("f1",), 0.1))
+    name, task = s.notify()
+    assert name == "e0"  # first free, not the holder
+    assert task.task_id == 0
+    assert not s.provides_location_info()
+
+
+def test_max_compute_util_prefers_holder():
+    s = make_sched("max-compute-util")
+    s.index.add("f1", "e2")
+    s.submit(Task(0, ("f1",), 0.1))
+    name, _ = s.notify()
+    assert name == "e2"
+
+
+def test_max_compute_util_falls_back_when_holder_busy():
+    s = make_sched("max-compute-util")
+    s.index.add("f1", "e2")
+    s.set_state("e2", ExecutorState.BUSY)
+    s.submit(Task(0, ("f1",), 0.1))
+    name, _ = s.notify()
+    assert name is not None and name != "e2"  # any free executor
+
+
+def test_max_cache_hit_delays_for_busy_holder():
+    s = make_sched("max-cache-hit")
+    s.index.add("f1", "e2")
+    s.set_state("e2", ExecutorState.BUSY)
+    s.submit(Task(0, ("f1",), 0.1))
+    assert s.notify() is None           # dispatch delayed (paper semantics)
+    assert s.queue_length() == 1
+    assert s.stats.delayed == 1
+    s.set_state("e2", ExecutorState.FREE)
+    name, _ = s.notify()
+    assert name == "e2"
+
+
+def test_max_cache_hit_dispatches_cold_tasks_anywhere():
+    s = make_sched("max-cache-hit")
+    s.submit(Task(0, ("cold",), 0.1))
+    name, _ = s.notify()                 # nothing cached: next free executor
+    assert name is not None
+
+
+def test_gcc_uses_mcu_below_threshold():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.8)
+    s.index.add("f1", "e2")
+    s.set_state("e2", ExecutorState.BUSY)  # util 25% < 80%
+    s.submit(Task(0, ("f1",), 0.1))
+    name, _ = s.notify()
+    assert name is not None              # MCU mode: dispatch anywhere
+
+
+def test_gcc_delays_above_threshold_at_max_replicas():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=1)
+    s.index.add("f1", "e0")
+    s.set_state("e0", ExecutorState.BUSY)
+    s.set_state("e1", ExecutorState.BUSY)
+    s.set_state("e2", ExecutorState.BUSY)  # util 75% >= 50%
+    s.submit(Task(0, ("f1",), 0.1))
+    assert s.notify() is None            # cache mode + replication cap: delay
+
+
+def test_gcc_replicates_when_under_replica_cap():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=4)
+    s.index.add("f1", "e0")
+    s.set_state("e0", ExecutorState.BUSY)
+    s.set_state("e1", ExecutorState.BUSY)
+    s.set_state("e2", ExecutorState.BUSY)
+    s.submit(Task(0, ("f1",), 0.1))
+    name, _ = s.notify()
+    assert name == "e3"                  # allowed to create replica #2
+
+
+def test_pick_tasks_prefers_perfect_hits():
+    s = make_sched("max-compute-util", window=100)
+    s.index.add("fA", "e0")
+    for i, f in enumerate(["fB", "fA", "fC"]):
+        s.submit(Task(i, (f,), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    picked = s.pick_tasks("e0", m=1)
+    assert [t.task_id for t in picked] == [1]  # the fA task, not FIFO head
+
+
+def test_pick_tasks_respects_window():
+    s = make_sched("max-compute-util", window=2)
+    s.index.add("fZ", "e0")
+    s.submit(Task(0, ("a",), 0.1))
+    s.submit(Task(1, ("b",), 0.1))
+    s.submit(Task(2, ("fZ",), 0.1))  # outside window of 2
+    s.set_state("e0", ExecutorState.PENDING)
+    picked = s.pick_tasks("e0", m=1)
+    assert picked[0].task_id == 0    # falls back to head (fZ not in window)
+
+
+def test_mch_pick_returns_executor_to_pool_without_hits():
+    s = make_sched("max-cache-hit")
+    s.submit(Task(0, ("cold",), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    assert s.pick_tasks("e0") == []
+    assert s.executor_state("e0") == ExecutorState.FREE
+    assert s.queue_length() == 1
+
+
+def test_deregister_drops_index_entries():
+    s = make_sched("max-compute-util")
+    s.index.add("f1", "e1")
+    s.deregister_executor("e1")
+    assert "e1" not in s.index.locations("f1")
+    s.submit(Task(0, ("f1",), 0.1))
+    name, _ = s.notify()
+    assert name != "e1"
+
+
+def test_requeue_preserves_task():
+    s = make_sched("first-available")
+    t = Task(0, ("f",), 0.1)
+    s.submit(t)
+    name, task = s.notify()
+    s.requeue(task)
+    assert s.queue_length() == 1
+    assert task.attempts == 1
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_all_policies_drain_queue(policy):
+    s = make_sched(policy, n_exec=2)
+    for i in range(10):
+        s.submit(Task(i, (f"f{i % 3}",), 0.1))
+    done = 0
+    for _ in range(100):
+        pair = s.notify()
+        if pair is None:
+            # free everything (simulate completions) and retry
+            for e in list(s._executors):
+                s.set_state(e, ExecutorState.FREE)
+            pair = s.notify()
+            if pair is None:
+                break
+        name, task = pair
+        done += 1
+        s.set_state(name, ExecutorState.FREE)
+    assert done == 10

@@ -1,0 +1,117 @@
+"""DES integration + invariant tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SimConfig,
+    provisioning_workload,
+    run_experiment,
+    teragrid_profile,
+)
+
+GB = 1024**3
+
+
+@pytest.fixture(scope="module")
+def small_wl():
+    return provisioning_workload(num_tasks=4000)
+
+
+def test_all_tasks_complete(small_wl):
+    res = run_experiment(small_wl, SimConfig(policy="first-available", max_nodes=16))
+    assert res.tasks_done == 4000
+
+
+def test_access_conservation(small_wl):
+    res = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                             cache_size_per_node_bytes=2 * GB,
+                                             max_nodes=16))
+    assert res.hits_local + res.hits_remote + res.misses == 4000
+    assert res.hit_rate_local + res.hit_rate_remote + res.miss_rate == pytest.approx(1.0)
+
+
+def test_first_available_never_caches(small_wl):
+    res = run_experiment(small_wl, SimConfig(policy="first-available", max_nodes=16))
+    assert res.hits_local == 0 and res.hits_remote == 0
+    assert res.miss_rate == 1.0
+
+
+def test_caching_beats_no_caching():
+    # stressed workload: arrival 200/s > GPFS capacity (~55/s at 10MB/task),
+    # small working set (500 files) so caches absorb it.
+    wl = provisioning_workload(num_tasks=6000, num_files=500,
+                               rates=[200.0], interval_duration_s=30.0)
+    fa = run_experiment(wl, SimConfig(policy="first-available", max_nodes=16))
+    dd = run_experiment(wl, SimConfig(policy="good-cache-compute",
+                                      cache_size_per_node_bytes=4 * GB,
+                                      max_nodes=16))
+    assert dd.wet_s < fa.wet_s
+    assert dd.hit_rate_local > 0.3
+
+
+def test_static_provisioning_uses_more_cpu_hours(small_wl):
+    dyn = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                             cache_size_per_node_bytes=4 * GB,
+                                             max_nodes=16))
+    sta = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                             cache_size_per_node_bytes=4 * GB,
+                                             max_nodes=16, static_nodes=16))
+    assert sta.cpu_time_hours > dyn.cpu_time_hours
+    # speedup roughly identical (paper Fig 13: same speedup, worse PI)
+    assert sta.wet_s == pytest.approx(dyn.wet_s, rel=0.25)
+
+
+def test_bigger_cache_never_hurts_hits(small_wl):
+    small = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                               cache_size_per_node_bytes=1 * GB,
+                                               max_nodes=16))
+    big = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                             cache_size_per_node_bytes=4 * GB,
+                                             max_nodes=16))
+    assert big.hit_rate_local >= small.hit_rate_local - 0.05
+
+
+def test_node_failure_recovers(small_wl):
+    res = run_experiment(
+        small_wl,
+        SimConfig(policy="good-cache-compute", cache_size_per_node_bytes=2 * GB,
+                  max_nodes=16, failures=((30.0, 0), (60.0, 1))),
+    )
+    assert res.tasks_done == 4000  # replayed tasks still finish
+
+
+def test_mch_lower_utilization_than_gcc(small_wl):
+    mch = run_experiment(small_wl, SimConfig(policy="max-cache-hit",
+                                             cache_size_per_node_bytes=4 * GB,
+                                             max_nodes=16))
+    gcc = run_experiment(small_wl, SimConfig(policy="good-cache-compute",
+                                             cache_size_per_node_bytes=4 * GB,
+                                             max_nodes=16))
+    assert mch.tasks_done == 4000
+    assert mch.avg_cpu_util <= gcc.avg_cpu_util + 0.1
+
+
+def test_series_monotone_time(small_wl):
+    res = run_experiment(small_wl, SimConfig(policy="first-available", max_nodes=8))
+    times = [tp.t for tp in res.series]
+    assert times == sorted(times)
+    assert all(tp.queue_len >= 0 and tp.nodes >= 0 for tp in res.series)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    policy=st.sampled_from(["first-available", "good-cache-compute", "max-compute-util"]),
+    nodes=st.integers(2, 12),
+    cache_gb=st.sampled_from([0.5, 2.0]),
+)
+def test_property_conservation_and_bounds(policy, nodes, cache_gb):
+    wl = provisioning_workload(num_tasks=800)
+    res = run_experiment(wl, SimConfig(policy=policy,
+                                       cache_size_per_node_bytes=cache_gb * GB,
+                                       max_nodes=nodes))
+    assert res.tasks_done == 800
+    assert res.hits_local + res.hits_remote + res.misses == 800
+    assert res.wet_s >= wl.ideal_span_s * 0.5
+    assert 0 <= res.avg_cpu_util <= 1.0 + 1e-9
+    assert res.cpu_time_hours >= 0

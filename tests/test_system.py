@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system: the qualitative claims
+of Section 5 must hold in the DES at reduced scale."""
+
+import pytest
+
+from repro.core import (
+    SimConfig,
+    provisioning_workload,
+    run_experiment,
+)
+
+GB = 1024**3
+
+
+@pytest.fixture(scope="module")
+def wl():
+    # reduced Section-5.2-style workload, stressed past the shared-FS
+    # capacity (~55 tasks/s at 10 MB/task over 4.55 Gb/s): arrivals at
+    # 200/s with a 500-file working set (5 GB) that caches can absorb.
+    return provisioning_workload(num_tasks=6000, num_files=500,
+                                 rates=[200.0], interval_duration_s=30.0)
+
+
+@pytest.fixture(scope="module")
+def results(wl):
+    # Fast LRM allocation (2-5 s): the 30 s burst workload would otherwise be
+    # dominated by cold-start latency rather than the steady-state claims.
+    alloc = dict(allocation_latency_s=(2.0, 5.0))
+    out = {}
+    out["fa"] = run_experiment(wl, SimConfig(policy="first-available",
+                                             max_nodes=32, **alloc))
+    for name, cache in (("gcc-small", 0.25 * GB), ("gcc-big", 4 * GB)):
+        out[name] = run_experiment(
+            wl, SimConfig(policy="good-cache-compute",
+                          cache_size_per_node_bytes=cache, max_nodes=32, **alloc))
+    out["static"] = run_experiment(
+        wl, SimConfig(policy="good-cache-compute", cache_size_per_node_bytes=4 * GB,
+                      max_nodes=32, static_nodes=32))
+    return out
+
+
+def test_diffusion_beats_shared_fs(results):
+    """Paper: data diffusion reduces WET vs GPFS-only (3762-1427 vs 5011 s)."""
+    assert results["gcc-big"].wet_s < results["fa"].wet_s
+
+
+def test_bigger_caches_help(results):
+    assert results["gcc-big"].hit_rate_local > results["gcc-small"].hit_rate_local
+    assert results["gcc-big"].wet_s <= results["gcc-small"].wet_s + 1.0
+
+
+def test_persistent_store_load_drops_with_caching(results):
+    """Paper Fig 12: GPFS load 4 Gb/s (FA) -> 0.4 Gb/s (big caches)."""
+    fa_gpfs = results["fa"].bytes_by_source["gpfs"]
+    dd_gpfs = results["gcc-big"].bytes_by_source["gpfs"]
+    assert dd_gpfs < 0.6 * fa_gpfs
+
+
+def test_dynamic_provisioning_saves_cpu_hours(results):
+    """Paper Fig 13: same speedup, much better performance index (17 vs 46
+    CPU-hours) for DRP vs static."""
+    dyn, sta = results["gcc-big"], results["static"]
+    assert sta.wet_s == pytest.approx(dyn.wet_s, rel=0.3)
+    # A 30s burst gives the DRP little idle time to save; the full paper-scale
+    # ramp shows 13 vs 50 CPU-h (EXPERIMENTS.md). Here: strictly fewer.
+    assert dyn.cpu_time_hours < 0.95 * sta.cpu_time_hours
+    base = results["fa"].wet_s
+    assert dyn.performance_index_raw(base) > sta.performance_index_raw(base)
+
+
+def test_response_time_improvement(results):
+    """Paper Fig 15: >500x response-time gap between best DD and GPFS-only."""
+    assert results["gcc-big"].avg_response_s < results["fa"].avg_response_s
+
+
+def test_slowdown_monotone_in_saturation(results):
+    """FA saturates early: slowdown grows across arrival intervals."""
+    sl = results["fa"].slowdown_by_interval()
+    if len(sl) >= 4:
+        keys = sorted(sl)
+        assert sl[keys[-1]] >= sl[keys[0]]
+
+
+def test_queue_shorter_with_diffusion(results):
+    assert results["gcc-big"].peak_queue <= results["fa"].peak_queue
