@@ -1,0 +1,134 @@
+"""Serving-router policy comparison on a skewed (Zipf) prefix-reuse stream.
+
+Drives ``runtime.router.CacheAffinityRouter`` — the paper's dispatch policies
+on the live request path — through a virtual-time event loop with no model
+behind it: a request's service time is decode cost plus a replay penalty per
+prefix block the chosen replica does *not* hold.  Sessions are Zipf-popular
+(a few hot conversations dominate, the classic serving skew) and every
+session's prompt shares a common template block, so affinity routing can turn
+most of the stream into cache hits while locality-blind routing replays
+prefixes on whatever replica happens to be free.
+
+Reports per-policy object-cache hit rate and p50/p99 response latency.
+Expected: good-cache-compute beats first-available on both.
+"""
+
+from __future__ import annotations
+
+import heapq
+import random
+from typing import Dict, List, Tuple
+
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(0, "src")
+
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+POLICIES = ("first-available", "max-compute-util", "good-cache-compute")
+
+TEMPLATE_BLOCK = "prefix:template"     # system prompt shared by all sessions
+DECODE_COST_S = 0.005                  # per request, state in hand
+REPLAY_COST_S = 0.040                  # per missing prefix block (prefill)
+
+
+def zipf_session(rng: random.Random, num_sessions: int, alpha: float) -> int:
+    """Sample a session id with P(s) ∝ 1/(s+1)^alpha (bounded Zipf)."""
+    weights = [1.0 / (s + 1) ** alpha for s in range(num_sessions)]
+    return rng.choices(range(num_sessions), weights=weights, k=1)[0]
+
+
+def session_objects(sid: int, blocks_per_session: int) -> Tuple[str, ...]:
+    return (TEMPLATE_BLOCK,) + tuple(
+        f"prefix:s{sid}:b{i}" for i in range(blocks_per_session)
+    )
+
+
+def bench_policy(
+    policy: str,
+    num_requests: int = 4000,
+    num_sessions: int = 64,
+    num_replicas: int = 8,
+    blocks_per_session: int = 3,
+    store_blocks_per_replica: int = 24,
+    arrival_rate_per_s: float = 60.0,
+    zipf_alpha: float = 1.1,
+    seed: int = 0,
+) -> Dict[str, float]:
+    rng = random.Random(seed)
+    router = CacheAffinityRouter(
+        policy=policy,
+        window=256,
+        replica_capacity_bytes=float(store_blocks_per_replica),
+        eviction="lru",
+        object_size_fn=lambda obj: 1.0,
+    )
+    for _ in range(num_replicas):
+        router.add_replica()
+
+    def service_time(rr: RoutedRequest) -> float:
+        return DECODE_COST_S + REPLAY_COST_S * rr.misses
+
+    # Pre-draw the arrival stream so every policy sees the identical workload.
+    arrivals: List[Tuple[float, RoutedRequest]] = []
+    t = 0.0
+    for i in range(num_requests):
+        t += rng.expovariate(arrival_rate_per_s)
+        sid = zipf_session(rng, num_sessions, zipf_alpha)
+        arrivals.append((t, RoutedRequest(i, session_objects(sid, blocks_per_session),
+                                          submit_time_s=t)))
+
+    events: List[Tuple[float, int, str, object]] = []
+    eseq = 0
+    for at, rr in arrivals:
+        heapq.heappush(events, (at, eseq, "arrive", rr))
+        eseq += 1
+
+    completed = 0
+    while events and completed < num_requests:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "arrive":
+            assignments = router.submit(payload, now=now)
+        else:
+            completed += 1
+            assignments = router.complete(payload, now=now)
+        for a in assignments:
+            for rr in a.requests:
+                heapq.heappush(events, (now + service_time(rr), eseq, "done", rr))
+                eseq += 1
+
+    s = router.stats
+    return {
+        "completed": float(s.completed),
+        "hit_rate": s.hit_rate,
+        "p50_ms": s.p50_s * 1e3,
+        "p99_ms": s.p99_s * 1e3,
+    }
+
+
+def main(num_requests: int = 4000) -> List[Tuple[str, float, str]]:
+    rows = []
+    results = {}
+    for pol in POLICIES:
+        r = bench_policy(pol, num_requests=num_requests)
+        results[pol] = r
+        rows.append((
+            f"serve_routing/{pol}",
+            r["p50_ms"] * 1e3,   # us_per_call column = p50 in microseconds
+            f"hit_rate={r['hit_rate']:.2f};p50_ms={r['p50_ms']:.1f};"
+            f"p99_ms={r['p99_ms']:.1f};completed={int(r['completed'])}",
+        ))
+    gcc, fa = results["good-cache-compute"], results["first-available"]
+    verdict = (gcc["hit_rate"] > fa["hit_rate"] and gcc["p99_ms"] < fa["p99_ms"])
+    rows.append((
+        "serve_routing/gcc_beats_fa",
+        0.0,
+        f"ok={verdict};gcc_p99_ms={gcc['p99_ms']:.1f};fa_p99_ms={fa['p99_ms']:.1f}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -30,10 +30,13 @@ def main() -> None:
         bench_roofline,
         bench_scale,
         bench_scheduler,
+        bench_serve_routing,
     )
 
     suites = [
         ("scheduler", lambda: bench_scheduler.main(n_sched)),
+        ("serve_routing", lambda: bench_serve_routing.main(
+            1_000 if args.quick else 4_000)),
         ("provisioning", lambda: bench_provisioning.main(n)),
         ("cache_throughput", lambda: bench_cache_throughput.main(n)),
         ("pi_speedup", lambda: bench_pi_speedup.main(n)),

@@ -3,8 +3,10 @@ dispatch applied to LLM serving) vs locality-blind routing.
 
 Sessions issue follow-up requests; a replica that already holds a session's
 KV cache decodes immediately (local hit), others replay the prompt (the
-"fetch from persistent storage" cost). The DRP grows the replica pool with
-queue length.
+"fetch from persistent storage" cost).  Routing goes through the
+``CacheAffinityRouter``: each replica is an executor whose transient store
+(``core.cache.Cache`` accounting) is published to the centralized index, and
+the DRP grows the replica pool with queue length.
 
   PYTHONPATH=src python examples/serve_diffusion.py
 """
@@ -43,11 +45,11 @@ def run(policy: str):
 
 for policy in ("first-available", "max-compute-util", "good-cache-compute"):
     srv, wall = run(policy)
-    s = srv.stats
+    s, r = srv.stats, srv.router.stats
     print(f"{policy:20s} served={s.served:3d} prefix_hit={s.hit_rate:5.0%} "
           f"prefills={s.prefills:3d} decode_steps={s.decode_steps:3d} "
-          f"replicas={len(srv.replicas)} avg_resp={s.avg_response_s * 1e3:6.1f}ms "
-          f"wall={wall:.1f}s")
+          f"replicas={len(srv.replicas)} p50={r.p50_s * 1e3:6.1f}ms "
+          f"p99={r.p99_s * 1e3:6.1f}ms wall={wall:.1f}s")
 
 print("\nprefix-affinity routing turns session follow-ups into cache hits —")
 print("the paper's max-cache-hit/good-cache-compute policies, 18 years later.")

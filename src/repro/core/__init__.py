@@ -5,7 +5,8 @@ Public API:
   Stores + bandwidth model .............. core.store
   Centralized & local indices ........... core.index
   Tasks / executor states ............... core.task
-  Data-aware scheduler (5 policies) ..... core.scheduler
+  Generic dispatch engine (5 policies) .. core.dispatch
+  Data-aware scheduler (Task adapter) ... core.scheduler
   Dynamic resource provisioner .......... core.provisioner
   Abstract model (Section 4) ............ core.model
   Workload generators ................... core.workload
@@ -13,6 +14,7 @@ Public API:
 """
 
 from .cache import Cache, CacheStats, EVICTION_POLICIES
+from .dispatch import DataAwareDispatcher
 from .index import CentralizedIndex, LocalIndex
 from .model import (
     ModelInputs,
@@ -64,7 +66,7 @@ __all__ = [
     "predict_wet_ramp", "speedup", "workload_execution_time",
     "workload_execution_time_with_overheads", "working_set_fits", "zeta",
     "ALLOCATION_POLICIES", "DynamicResourceProvisioner", "ProvisionRequest",
-    "POLICIES", "DataAwareScheduler", "SchedulerStats",
+    "POLICIES", "DataAwareDispatcher", "DataAwareScheduler", "SchedulerStats",
     "HardwareProfile", "SimConfig", "SimResult", "Simulator",
     "run_experiment", "teragrid_profile", "tpu_pod_profile",
     "BandwidthResource", "DataObject", "PersistentStore", "TransientStore",

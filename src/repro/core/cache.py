@@ -8,7 +8,8 @@ metadata flows back to the centralized index (see ``core/index.py``).
 This module is shared by three consumers:
   * the discrete-event simulator (``core/simulator.py``),
   * the training data pipeline's host shard cache (``data/pipeline.py``),
-  * the serving runtime's KV-prefix cache accounting (``runtime/serve_loop.py``).
+  * the serving router's per-replica transient stores (``runtime/router.py``),
+    which account KV-prefix / adapter / shard objects for the live request path.
 """
 
 from __future__ import annotations

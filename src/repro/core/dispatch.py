@@ -1,0 +1,381 @@
+"""Generic data-aware dispatcher: the paper's five policies over any work.
+
+The two-phase algorithm of Section 3.2 does not care *what* a work item is —
+only that it names the data objects it needs (theta(T_i)) and that executors
+advertise which objects they cache.  This module hosts the policy engine in
+that generic form so it can drive:
+
+  * simulator ``Task``s (``core.scheduler.DataAwareScheduler`` adapter),
+  * live serving requests whose "objects" are KV-prefix blocks / adapters /
+    shards (``runtime.router.CacheAffinityRouter``).
+
+Policies:
+  1. first-available      — ignore data location entirely (baseline; no
+                            location info is sent, so every access goes to
+                            persistent storage).
+  2. first-cache-available— like (1) but ships location info; the paper omits
+                            it from evaluation (no advantage in practice); we
+                            implement it for completeness.
+  3. max-cache-hit        — dispatch to the executor caching the most needed
+                            data; if busy, *delay* dispatch until it frees.
+  4. max-compute-util     — always dispatch to a free executor, preferring the
+                            one with the most needed data.
+  5. good-cache-compute   — (3) when CPU utilization >= threshold (paper: 90%
+                            design / 80% in the experiments), else (4); plus a
+                            maximum-replication-factor heuristic bounding how
+                            many cached copies of an object may be created.
+
+Two-phase algorithm (paper pseudocode):
+  Phase 1 ``notify``  — work item at the head of the wait queue -> tally
+    candidate executors from I_map, sort by cached-object count, notify the
+    best FREE one (mark it PENDING); policies (1)/(4) fall back to any free
+    executor, (3) delays, (5) delays only above the utilization threshold.
+  Phase 2 ``pick_items`` — a notified executor asks for up to ``m`` items;
+    the dispatcher scans a window of W queued items scoring the local
+    cache-hit fraction, returning 100%-hit items eagerly, else the highest
+    scoring; the no-hit fallback depends on the policy exactly as in the
+    paper.
+
+Complexity: O(|theta(T_i)| + replicationFactor + min(|Q|, W)) per decision via
+hash maps + ordered sets (paper Section 3.2).  A reverse *demand index*
+(object -> queued items) accelerates the window scan without changing policy
+semantics: candidates are still restricted to the first W queue positions.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict, defaultdict
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Set, Tuple
+
+from .index import CentralizedIndex
+from .task import ExecutorState
+
+POLICIES = (
+    "first-available",
+    "first-cache-available",
+    "max-cache-hit",
+    "max-compute-util",
+    "good-cache-compute",
+)
+
+
+@dataclass
+class SchedulerStats:
+    decisions: int = 0
+    notifications: int = 0
+    window_scans: int = 0
+    tasks_scanned: int = 0
+    perfect_hits: int = 0
+    fallback_dispatches: int = 0
+    delayed: int = 0
+
+
+class DataAwareDispatcher:
+    """Falkon-style dispatcher over a centralized cache-location index.
+
+    Work items are opaque: the dispatcher reads them only through ``key_fn``
+    (a hashable identity) and ``objects_fn`` (the data objects the item
+    needs).  Subclasses hook dispatch bookkeeping via ``_on_dispatch``.
+    """
+
+    def __init__(
+        self,
+        policy: str = "good-cache-compute",
+        window: int = 3200,
+        cpu_util_threshold: float = 0.8,
+        max_replicas: int = 4,
+        utilization_fn: Optional[Callable[[], float]] = None,
+        index: Optional[CentralizedIndex] = None,
+        key_fn: Optional[Callable[[Any], Hashable]] = None,
+        objects_fn: Optional[Callable[[Any], Sequence[str]]] = None,
+    ):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
+        self.policy = policy
+        self.window = window
+        self.cpu_util_threshold = cpu_util_threshold
+        self.max_replicas = max_replicas
+        self._utilization_fn = utilization_fn or (lambda: 1.0)
+        self.index = index if index is not None else CentralizedIndex()
+        self._key = key_fn or (lambda item: item.key)
+        self._objects = objects_fn or (lambda item: item.objects)
+
+        # Wait queue Q: FIFO by arrival sequence. OrderedDict gives O(1)
+        # head access and O(1) removal from the middle on dispatch.
+        self._queue: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._seq_of: Dict[Hashable, int] = {}
+        self._next_seq = 0
+        # Demand index: object -> queued item keys needing it (window fast path).
+        self._demand: Dict[str, Set[Hashable]] = defaultdict(set)
+        # E_set: executor registry + free list (FIFO "next free executor").
+        self._executors: Dict[str, ExecutorState] = {}
+        self._free: "OrderedDict[str, None]" = OrderedDict()
+        self.stats = SchedulerStats()
+        # window-scan memoization: a failed scan stays failed until executor
+        # states, the queue prefix, or the index change.
+        self._scan_dirty = True
+        self._idx_version_seen = -1
+
+    # ---------------------------------------------------------------- queue
+    def submit(self, item: Any) -> None:
+        key = self._key(item)
+        if len(self._queue) <= self.window:
+            self._scan_dirty = True   # new item lands inside the window
+        self._queue[key] = item
+        self._seq_of[key] = self._next_seq
+        self._next_seq += 1
+        for f in self._objects(item):
+            self._demand[f].add(key)
+
+    def queue_length(self) -> int:
+        return len(self._queue)
+
+    def queued_items(self) -> List[Any]:
+        return list(self._queue.values())
+
+    def _head(self) -> Optional[Any]:
+        return next(iter(self._queue.values())) if self._queue else None
+
+    def _remove_from_queue(self, item: Any) -> None:
+        key = self._key(item)
+        self._queue.pop(key, None)
+        self._seq_of.pop(key, None)
+        for f in self._objects(item):
+            s = self._demand.get(f)
+            if s is not None:
+                s.discard(key)
+                if not s:
+                    del self._demand[f]
+
+    # ------------------------------------------------------------ executors
+    def register_executor(self, name: str) -> None:
+        self._executors[name] = ExecutorState.FREE
+        self._free[name] = None
+        self._scan_dirty = True
+
+    def deregister_executor(self, name: str) -> None:
+        self._executors.pop(name, None)
+        self._free.pop(name, None)
+        self.index.drop_executor(name)
+        self._scan_dirty = True
+
+    def executor_state(self, name: str) -> ExecutorState:
+        return self._executors[name]
+
+    def set_state(self, name: str, state: ExecutorState) -> None:
+        prev = self._executors.get(name)
+        if prev is None:
+            return
+        self._executors[name] = state
+        self._scan_dirty = True
+        if state == ExecutorState.FREE:
+            self._free[name] = None
+        else:
+            self._free.pop(name, None)
+
+    def registered(self) -> int:
+        return len(self._executors)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def utilization(self) -> float:
+        """Busy / registered — the paper's CPU-utilization input to GCC."""
+        n = len(self._executors)
+        if n == 0:
+            return 1.0
+        busy = sum(1 for s in self._executors.values() if s == ExecutorState.BUSY)
+        return busy / n
+
+    # -------------------------------------------------------------- phase 1
+    def _cache_mode(self) -> bool:
+        """True when the policy is currently in cache-preferring mode."""
+        if self.policy == "max-cache-hit":
+            return True
+        if self.policy == "good-cache-compute":
+            return self.utilization() >= self.cpu_util_threshold
+        return False
+
+    def notify(self) -> Optional[Tuple[str, Any]]:
+        """Phase 1 (paper pseudocode): assign the queue-head item T0 to the
+        best FREE executor, remove it from the wait queue, and return
+        (executor, T0) — the caller delivers the notification after its
+        latency.  Returns None when the policy delays dispatch (preferred
+        executor busy under max-cache-hit / GCC-at-threshold) or nothing can
+        be dispatched.
+        """
+        head = self._head()
+        if head is None or not self._free:
+            return None
+        self.stats.decisions += 1
+
+        if self.policy == "first-available":
+            return self._assign(next(iter(self._free)), head)
+
+        cache_mode = self._cache_mode()
+        # Memoized failure: if nothing observable changed since the last
+        # fully-failed window scan, the scan would fail again — skip it.
+        if (cache_mode and not self._scan_dirty
+                and self._idx_version_seen == self.index.version):
+            self.stats.delayed += 1
+            return None
+        # Scan up to W queued items (the paper's scheduling window): an item
+        # whose preferred executor is busy is *delayed in place* under
+        # max-cache-hit / GCC-above-threshold, and the scan continues — this
+        # is what keeps utilization from collapsing behind one hot node.
+        scanned = 0
+        executors = self._executors
+        for item in self._queue.values():
+            if scanned >= self.window:
+                break
+            scanned += 1
+            objects = self._objects(item)
+            best_free, any_live = None, False
+            if len(objects) == 1:  # fast path (the common workload)
+                for e in self.index.locations(objects[0]):
+                    st = executors.get(e)
+                    if st is None:
+                        continue
+                    any_live = True
+                    if st == ExecutorState.FREE:
+                        best_free = e
+                        break
+            else:
+                best_cnt = 0
+                counts: Dict[str, int] = {}
+                for f in objects:
+                    for e in self.index.locations(f):
+                        st = executors.get(e)
+                        if st is None:
+                            continue
+                        any_live = True
+                        c = counts.get(e, 0) + 1
+                        counts[e] = c
+                        if st == ExecutorState.FREE and c > best_cnt:
+                            best_free, best_cnt = e, c
+            if best_free is not None:
+                return self._assign(best_free, item)
+            if not any_live:
+                # cold object: "send notification to the next free executor"
+                return self._assign(next(iter(self._free)), item)
+            # preferred executor(s) busy:
+            if cache_mode:
+                if self.policy == "good-cache-compute":
+                    rep = max(self.index.replication_factor(f) for f in objects)
+                    if rep < self.max_replicas:
+                        return self._assign(next(iter(self._free)), item)
+                self.stats.delayed += 1
+                continue  # delay THIS item; keep scanning the window
+            # max-compute-util / first-cache-available: any free executor.
+            return self._assign(next(iter(self._free)), item)
+        self._scan_dirty = False
+        self._idx_version_seen = self.index.version
+        return None
+
+    def _assign(self, name: str, item: Any) -> Tuple[str, Any]:
+        self.set_state(name, ExecutorState.PENDING)
+        self.stats.notifications += 1
+        self._dispatch_item(item, name)
+        return (name, item)
+
+    # -------------------------------------------------------------- phase 2
+    def pick_items(self, executor: str, m: int = 1) -> List[Any]:
+        """Phase 2: executor asks for up to ``m`` items (window-scored).
+
+        Returns the dispatched items (already removed from the wait queue);
+        an empty list means the executor should return to the free pool
+        (max-cache-hit semantics with nothing local).
+        """
+        if not self._queue:
+            self.set_state(executor, ExecutorState.FREE)
+            return []
+        self.stats.window_scans += 1
+        head_seq = self._seq_of[next(iter(self._queue))]
+        horizon = head_seq + self.window
+
+        picked: List[Any] = []
+        cached = self.index.cached_at(executor)
+        scored: List[Tuple[float, int, Any]] = []
+        if cached:
+            # Fast path: only items demanding an object this executor caches
+            # can score > 0; restrict to the first W queue positions.
+            seen: Set[Hashable] = set()
+            for f in cached:
+                for key in self._demand.get(f, ()):
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    seq = self._seq_of.get(key)
+                    if seq is None or seq >= horizon:
+                        continue
+                    item = self._queue[key]
+                    objects = self._objects(item)
+                    hits = sum(1 for tf in objects if tf in cached)
+                    frac = hits / len(objects)
+                    self.stats.tasks_scanned += 1
+                    if frac >= 1.0:
+                        picked.append(item)
+                        if len(picked) >= m:
+                            break
+                    else:
+                        scored.append((frac, seq, item))
+                if len(picked) >= m:
+                    break
+
+        for it in picked:
+            self.stats.perfect_hits += 1
+            self._dispatch_item(it, executor)
+        if len(picked) >= m:
+            self.set_state(executor, ExecutorState.BUSY)
+            return picked
+
+        # Highest-scoring partial hits next (ordered by score then FIFO).
+        scored.sort(key=lambda s: (-s[0], s[1]))
+        for frac, _, item in scored:
+            if len(picked) >= m:
+                break
+            if self._key(item) in self._queue:
+                self._dispatch_item(item, executor)
+                picked.append(item)
+
+        if picked:
+            self.set_state(executor, ExecutorState.BUSY)
+            return picked
+
+        # No cache hits at all: policy-dependent fallback (paper Section 3.2).
+        cache_mode = self._cache_mode()
+        if cache_mode and self.policy == "max-cache-hit":
+            # Return executor to the free pool; item waits for its data.
+            self.set_state(executor, ExecutorState.FREE)
+            return []
+        if cache_mode and self.policy == "good-cache-compute":
+            # GCC above threshold behaves like MCH *unless* replication
+            # headroom allows a new copy (cache-space heuristic).
+            head = self._head()
+            rep = max((self.index.replication_factor(f)
+                       for f in self._objects(head)), default=0)
+            if rep >= self.max_replicas:
+                self.set_state(executor, ExecutorState.FREE)
+                return []
+        # first-available / first-cache-available / max-compute-util /
+        # GCC otherwise: top m items from the head of the wait queue.
+        while len(picked) < m and self._queue:
+            item = self._head()
+            self._dispatch_item(item, executor)
+            picked.append(item)
+            self.stats.fallback_dispatches += 1
+        self.set_state(executor, ExecutorState.BUSY if picked else ExecutorState.FREE)
+        return picked
+
+    def _dispatch_item(self, item: Any, executor: str) -> None:
+        self._remove_from_queue(item)
+        self._on_dispatch(item, executor)
+
+    def _on_dispatch(self, item: Any, executor: str) -> None:
+        """Bookkeeping hook; subclasses mutate the work item here."""
+
+    def provides_location_info(self) -> bool:
+        """first-available ships no location info => all accesses go to
+        persistent storage (paper Section 3.2)."""
+        return self.policy != "first-available"

@@ -49,6 +49,23 @@ class CentralizedIndex:
         for f in self.e_map.pop(executor, set()):
             self.i_map.get(f, set()).discard(executor)
 
+    def publish(self, executor: str, files: Iterable[str]) -> Tuple[int, int]:
+        """Bulk-sync an executor's cache snapshot (replica heartbeat path).
+
+        Replicas periodically publish their full transient-store contents;
+        the index diffs the snapshot against its view and applies only the
+        delta.  Returns (added, removed).
+        """
+        snapshot = set(files)
+        current = self.e_map.get(executor, set())
+        added = snapshot - current
+        removed = current - snapshot
+        for f in added:
+            self.add(f, executor)
+        for f in removed:
+            self.remove(f, executor)
+        return len(added), len(removed)
+
     # -- loose coherence ------------------------------------------------------
     def enqueue_update(self, now: float, op: str, file: str, executor: str) -> None:
         self._pending.append((now + self.coherence_delay_s, op, file, executor))

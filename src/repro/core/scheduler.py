@@ -1,68 +1,27 @@
-"""Data-aware scheduler: the paper's five dispatch policies (Section 3.2).
+"""Data-aware scheduler: simulator ``Task`` adapter over the generic engine.
 
-Policies:
-  1. first-available      — ignore data location entirely (baseline; no
-                            location info is sent, so every access goes to
-                            persistent storage).
-  2. first-cache-available— like (1) but ships location info; the paper omits
-                            it from evaluation (no advantage in practice); we
-                            implement it for completeness.
-  3. max-cache-hit        — dispatch to the executor caching the most needed
-                            data; if busy, *delay* dispatch until it frees.
-  4. max-compute-util     — always dispatch to a free executor, preferring the
-                            one with the most needed data.
-  5. good-cache-compute   — (3) when CPU utilization >= threshold (paper: 90%
-                            design / 80% in the experiments), else (4); plus a
-                            maximum-replication-factor heuristic bounding how
-                            many cached copies of an object may be created.
-
-Two-phase algorithm (paper pseudocode):
-  Phase 1 ``notify``  — task at the head of the wait queue -> tally candidate
-    executors from I_map, sort by cached-file count, notify the best FREE one
-    (mark it PENDING); policies (1)/(4) fall back to any free executor, (3)
-    delays, (5) delays only above the utilization threshold.
-  Phase 2 ``pick_tasks`` — a notified executor asks for up to ``m`` tasks; the
-    scheduler scans a window of W queued tasks scoring the local cache-hit
-    fraction, returning 100%-hit tasks eagerly, else the highest scoring; the
-    no-hit fallback depends on the policy exactly as in the paper.
-
-Complexity: O(|theta(T_i)| + replicationFactor + min(|Q|, W)) per decision via
-hash maps + ordered sets (paper Section 3.2).  A reverse *demand index*
-(file -> queued tasks) accelerates the window scan without changing policy
-semantics: candidates are still restricted to the first W queue positions.
+The five dispatch policies and the two-phase notify/pick algorithm live in
+``core.dispatch.DataAwareDispatcher`` in work-item-generic form (see that
+module for the paper mapping).  This adapter binds the engine to simulator
+``Task``s: a task's identity is ``task_id``, its needed objects are
+``files``, and dispatch mutates the task's state/executor/attempts fields —
+which is all the discrete-event simulator needs.  The serving runtime binds
+the same engine to live requests in ``runtime.router``.
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict, defaultdict
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Tuple
 
+from .dispatch import POLICIES, DataAwareDispatcher, SchedulerStats
 from .index import CentralizedIndex
-from .task import ExecutorState, Task, TaskState
+from .task import Task, TaskState
 
-POLICIES = (
-    "first-available",
-    "first-cache-available",
-    "max-cache-hit",
-    "max-compute-util",
-    "good-cache-compute",
-)
+__all__ = ["POLICIES", "DataAwareScheduler", "SchedulerStats"]
 
 
-@dataclass
-class SchedulerStats:
-    decisions: int = 0
-    notifications: int = 0
-    window_scans: int = 0
-    tasks_scanned: int = 0
-    perfect_hits: int = 0
-    fallback_dispatches: int = 0
-    delayed: int = 0
-
-
-class DataAwareScheduler:
-    """Falkon-style dispatcher over a centralized cache-location index."""
+class DataAwareScheduler(DataAwareDispatcher):
+    """Falkon-style dispatcher over simulator tasks (paper Section 3.2)."""
 
     def __init__(
         self,
@@ -70,289 +29,41 @@ class DataAwareScheduler:
         window: int = 3200,
         cpu_util_threshold: float = 0.8,
         max_replicas: int = 4,
-        utilization_fn: Optional[Callable[[], float]] = None,
+        utilization_fn=None,
         index: Optional[CentralizedIndex] = None,
     ):
-        if policy not in POLICIES:
-            raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
-        self.policy = policy
-        self.window = window
-        self.cpu_util_threshold = cpu_util_threshold
-        self.max_replicas = max_replicas
-        self._utilization_fn = utilization_fn or (lambda: 1.0)
-        self.index = index if index is not None else CentralizedIndex()
-
-        # Wait queue Q: FIFO by arrival sequence. OrderedDict gives O(1)
-        # head access and O(1) removal from the middle on dispatch.
-        self._queue: "OrderedDict[int, Task]" = OrderedDict()
-        self._seq_of: Dict[int, int] = {}
-        self._next_seq = 0
-        # Demand index: file -> queued task ids needing it (window fast path).
-        self._demand: Dict[str, Set[int]] = defaultdict(set)
-        # E_set: executor registry + free list (FIFO "next free executor").
-        self._executors: Dict[str, ExecutorState] = {}
-        self._free: "OrderedDict[str, None]" = OrderedDict()
-        self.stats = SchedulerStats()
-        # window-scan memoization: a failed scan stays failed until executor
-        # states, the queue prefix, or the index change.
-        self._scan_dirty = True
-        self._idx_version_seen = -1
+        super().__init__(
+            policy=policy,
+            window=window,
+            cpu_util_threshold=cpu_util_threshold,
+            max_replicas=max_replicas,
+            utilization_fn=utilization_fn,
+            index=index,
+            key_fn=lambda t: t.task_id,
+            objects_fn=lambda t: t.files,
+        )
 
     # ---------------------------------------------------------------- queue
     def submit(self, task: Task) -> None:
         task.state = TaskState.QUEUED
-        if len(self._queue) <= self.window:
-            self._scan_dirty = True   # new task lands inside the window
-        self._queue[task.task_id] = task
-        self._seq_of[task.task_id] = self._next_seq
-        self._next_seq += 1
-        for f in task.files:
-            self._demand[f].add(task.task_id)
+        super().submit(task)
 
-    def queue_length(self) -> int:
-        return len(self._queue)
-
-    def _head(self) -> Optional[Task]:
-        return next(iter(self._queue.values())) if self._queue else None
-
-    def _remove_from_queue(self, task: Task) -> None:
-        self._queue.pop(task.task_id, None)
-        self._seq_of.pop(task.task_id, None)
-        for f in task.files:
-            s = self._demand.get(f)
-            if s is not None:
-                s.discard(task.task_id)
-                if not s:
-                    del self._demand[f]
-
-    # ------------------------------------------------------------ executors
-    def register_executor(self, name: str) -> None:
-        self._executors[name] = ExecutorState.FREE
-        self._free[name] = None
-
-    def deregister_executor(self, name: str) -> None:
-        self._executors.pop(name, None)
-        self._free.pop(name, None)
-        self.index.drop_executor(name)
-
-    def executor_state(self, name: str) -> ExecutorState:
-        return self._executors[name]
-
-    def set_state(self, name: str, state: ExecutorState) -> None:
-        prev = self._executors.get(name)
-        if prev is None:
-            return
-        self._executors[name] = state
-        self._scan_dirty = True
-        if state == ExecutorState.FREE:
-            self._free[name] = None
-        else:
-            self._free.pop(name, None)
-
-    def registered(self) -> int:
-        return len(self._executors)
-
-    def free_count(self) -> int:
-        return len(self._free)
-
-    def utilization(self) -> float:
-        """Busy / registered — the paper's CPU-utilization input to GCC."""
-        n = len(self._executors)
-        if n == 0:
-            return 1.0
-        busy = sum(1 for s in self._executors.values() if s == ExecutorState.BUSY)
-        return busy / n
-
-    # -------------------------------------------------------------- phase 1
-    def _cache_mode(self) -> bool:
-        """True when the policy is currently in cache-preferring mode."""
-        if self.policy == "max-cache-hit":
-            return True
-        if self.policy == "good-cache-compute":
-            return self.utilization() >= self.cpu_util_threshold
-        return False
-
-    def notify(self) -> Optional[Tuple[str, Task]]:
-        """Phase 1 (paper pseudocode): assign the queue-head task T0 to the
-        best FREE executor, remove it from the wait queue, and return
-        (executor, T0) — the caller delivers the notification after its
-        latency.  Returns None when the policy delays dispatch (preferred
-        executor busy under max-cache-hit / GCC-at-threshold) or nothing can
-        be dispatched.
-        """
-        head = self._head()
-        if head is None or not self._free:
-            return None
-        self.stats.decisions += 1
-
-        if self.policy == "first-available":
-            return self._assign(next(iter(self._free)), head)
-
-        cache_mode = self._cache_mode()
-        # Memoized failure: if nothing observable changed since the last
-        # fully-failed window scan, the scan would fail again — skip it.
-        if (cache_mode and not self._scan_dirty
-                and self._idx_version_seen == self.index.version):
-            self.stats.delayed += 1
-            return None
-        # Scan up to W queued tasks (the paper's scheduling window): a task
-        # whose preferred executor is busy is *delayed in place* under
-        # max-cache-hit / GCC-above-threshold, and the scan continues — this
-        # is what keeps utilization from collapsing behind one hot node.
-        scanned = 0
-        executors = self._executors
-        for task in self._queue.values():
-            if scanned >= self.window:
-                break
-            scanned += 1
-            best_free, any_live = None, False
-            if len(task.files) == 1:  # fast path (the common workload)
-                for e in self.index.locations(task.files[0]):
-                    st = executors.get(e)
-                    if st is None:
-                        continue
-                    any_live = True
-                    if st == ExecutorState.FREE:
-                        best_free = e
-                        break
-            else:
-                best_cnt = 0
-                counts: Dict[str, int] = {}
-                for f in task.files:
-                    for e in self.index.locations(f):
-                        st = executors.get(e)
-                        if st is None:
-                            continue
-                        any_live = True
-                        c = counts.get(e, 0) + 1
-                        counts[e] = c
-                        if st == ExecutorState.FREE and c > best_cnt:
-                            best_free, best_cnt = e, c
-            if best_free is not None:
-                return self._assign(best_free, task)
-            if not any_live:
-                # cold object: "send notification to the next free executor"
-                return self._assign(next(iter(self._free)), task)
-            # preferred executor(s) busy:
-            if cache_mode:
-                if self.policy == "good-cache-compute":
-                    rep = max(self.index.replication_factor(f) for f in task.files)
-                    if rep < self.max_replicas:
-                        return self._assign(next(iter(self._free)), task)
-                self.stats.delayed += 1
-                continue  # delay THIS task; keep scanning the window
-            # max-compute-util / first-cache-available: any free executor.
-            return self._assign(next(iter(self._free)), task)
-        self._scan_dirty = False
-        self._idx_version_seen = self.index.version
-        return None
-
-    def _assign(self, name: str, task: Task) -> Tuple[str, Task]:
-        self.set_state(name, ExecutorState.PENDING)
-        self.stats.notifications += 1
-        self._dispatch(task, name)
-        return (name, task)
-
-    # -------------------------------------------------------------- phase 2
-    def pick_tasks(self, executor: str, m: int = 1) -> List[Task]:
-        """Phase 2: executor asks for up to ``m`` tasks (window-scored).
-
-        Returns the dispatched tasks (already removed from the wait queue and
-        marked PENDING); an empty list means the executor should return to
-        the free pool (max-cache-hit semantics with nothing local).
-        """
-        if not self._queue:
-            self.set_state(executor, ExecutorState.FREE)
-            return []
-        self.stats.window_scans += 1
-        head_seq = self._seq_of[next(iter(self._queue))]
-        horizon = head_seq + self.window
-
-        picked: List[Task] = []
-        cached = self.index.cached_at(executor)
-        scored: List[Tuple[float, int, Task]] = []
-        if cached:
-            # Fast path: only tasks demanding a file this executor caches can
-            # score > 0; restrict to the first W queue positions.
-            seen: Set[int] = set()
-            for f in cached:
-                for tid in self._demand.get(f, ()):
-                    if tid in seen:
-                        continue
-                    seen.add(tid)
-                    seq = self._seq_of.get(tid)
-                    if seq is None or seq >= horizon:
-                        continue
-                    task = self._queue[tid]
-                    hits = sum(1 for tf in task.files if tf in cached)
-                    frac = hits / len(task.files)
-                    self.stats.tasks_scanned += 1
-                    if frac >= 1.0:
-                        picked.append(task)
-                        if len(picked) >= m:
-                            break
-                    else:
-                        scored.append((frac, seq, task))
-                if len(picked) >= m:
-                    break
-
-        for t in picked:
-            self.stats.perfect_hits += 1
-            self._dispatch(t, executor)
-        if len(picked) >= m:
-            self.set_state(executor, ExecutorState.BUSY)
-            return picked
-
-        # Highest-scoring partial hits next (ordered by score then FIFO).
-        scored.sort(key=lambda s: (-s[0], s[1]))
-        for frac, _, task in scored:
-            if len(picked) >= m:
-                break
-            if task.task_id in self._queue:
-                self._dispatch(task, executor)
-                picked.append(task)
-
-        if picked:
-            self.set_state(executor, ExecutorState.BUSY)
-            return picked
-
-        # No cache hits at all: policy-dependent fallback (paper Section 3.2).
-        cache_mode = self._cache_mode()
-        if cache_mode and self.policy == "max-cache-hit":
-            # Return executor to the free pool; task waits for its data.
-            self.set_state(executor, ExecutorState.FREE)
-            return []
-        if cache_mode and self.policy == "good-cache-compute":
-            # GCC above threshold behaves like MCH *unless* replication
-            # headroom allows a new copy (cache-space heuristic).
-            head = self._head()
-            rep = max((self.index.replication_factor(f) for f in head.files), default=0)
-            if rep >= self.max_replicas:
-                self.set_state(executor, ExecutorState.FREE)
-                return []
-        # first-available / first-cache-available / max-compute-util /
-        # GCC otherwise: top m tasks from the head of the wait queue.
-        while len(picked) < m and self._queue:
-            task = self._head()
-            self._dispatch(task, executor)
-            picked.append(task)
-            self.stats.fallback_dispatches += 1
-        self.set_state(executor, ExecutorState.BUSY if picked else ExecutorState.FREE)
-        return picked
-
-    def _dispatch(self, task: Task, executor: str) -> None:
-        self._remove_from_queue(task)
+    # ------------------------------------------------------------- dispatch
+    def _on_dispatch(self, task: Task, executor: str) -> None:
         task.state = TaskState.PENDING
         task.executor = executor
         task.attempts += 1
+
+    def _dispatch(self, task: Task, executor: str) -> None:
+        """Force-dispatch (bypasses policy): legacy hook kept for callers."""
+        self._dispatch_item(task, executor)
+
+    def pick_tasks(self, executor: str, m: int = 1) -> List[Task]:
+        """Phase 2 under the task vocabulary (see ``pick_items``)."""
+        return self.pick_items(executor, m=m)
 
     # ------------------------------------------------------------- failures
     def requeue(self, task: Task) -> None:
         """Replay policy: re-dispatch a failed/timed-out task."""
         task.executor = None
         self.submit(task)
-
-    def provides_location_info(self) -> bool:
-        """first-available ships no location info => all accesses go to
-        persistent storage (paper Section 3.2)."""
-        return self.policy != "first-available"

@@ -18,9 +18,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--policy", default="good-cache-compute")
+    ap.add_argument("--policy", default="good-cache-compute",
+                    choices=("first-available", "first-cache-available",
+                             "max-cache-hit", "max-compute-util",
+                             "good-cache-compute"))
     ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--min-replicas", type=int, default=1)
     ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--max-sessions", type=int, default=8,
+                    help="per-replica session-slot capacity (transient store)")
+    ap.add_argument("--eviction", default="lru",
+                    choices=("random", "fifo", "lru", "lfu"))
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--cache-cap", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -30,7 +38,8 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
-                          cache_cap=args.cache_cap)
+                          min_replicas=args.min_replicas, cache_cap=args.cache_cap,
+                          max_sessions=args.max_sessions, eviction=args.eviction)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
@@ -39,10 +48,11 @@ def main() -> None:
         sid = sids[int(rng.integers(0, len(sids)))]
         srv.submit(sid, prompts[sid], max_new_tokens=args.new_tokens)
         srv.step()
-    s = srv.stats
+    s, r = srv.stats, srv.router.stats
     print(f"served={s.served} prefix_hit={s.hit_rate:.0%} prefills={s.prefills} "
           f"decode_steps={s.decode_steps} replicas={len(srv.replicas)} "
-          f"avg_response={s.avg_response_s * 1e3:.1f}ms")
+          f"scale_ups={r.scale_ups} avg_response={s.avg_response_s * 1e3:.1f}ms "
+          f"p50={r.p50_s * 1e3:.1f}ms p99={r.p99_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

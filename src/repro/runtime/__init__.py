@@ -12,6 +12,13 @@ from .fault_tolerance import (
     RecoveryActions,
     recover,
 )
+from .router import (
+    Assignment,
+    CacheAffinityRouter,
+    ReplicaStore,
+    RoutedRequest,
+    RouterStats,
+)
 from .serve_loop import DiffusionServer, Replica, Request, ServeStats
 from .train_loop import TrainConfig, Trainer, TrainResult
 
@@ -20,6 +27,8 @@ __all__ = [
     "topk_compress",
     "ElasticController", "ScaleEvent",
     "FailureInjector", "HeartbeatMonitor", "RecoveryActions", "recover",
+    "Assignment", "CacheAffinityRouter", "ReplicaStore", "RoutedRequest",
+    "RouterStats",
     "DiffusionServer", "Replica", "Request", "ServeStats",
     "TrainConfig", "Trainer", "TrainResult",
 ]

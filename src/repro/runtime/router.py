@@ -1,0 +1,346 @@
+"""Cache-affinity serving router: data-diffusion dispatch on the request path.
+
+Each model replica is one of the paper's *executors* with a *transient
+store*: its KV-prefix blocks, LoRA adapters, or weight shards are the data
+objects, accounted by ``core.cache.Cache`` and published to the
+``CentralizedIndex`` so the dispatcher knows who holds what.  Incoming
+requests are the work items — a request names the objects it needs
+(``RoutedRequest.objects``) and the generic ``DataAwareDispatcher`` routes it
+with the paper's five policies, unchanged.  The ``DynamicResourceProvisioner``
+watches the wait queue and grows/shrinks the replica pool exactly as Section
+3.3 prescribes for executors.
+
+The router is transport-agnostic and clock-agnostic: callers pass ``now``
+explicitly (the serving loop passes wall-clock, the routing benchmark passes
+virtual time), receive ``Assignment`` batches to execute however they like,
+and report completions back via ``complete`` — which triggers the Falkon
+pickup path (phase 2) for the freed replica.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..core.cache import Cache
+from ..core.dispatch import POLICIES, DataAwareDispatcher
+from ..core.index import CentralizedIndex
+from ..core.provisioner import DynamicResourceProvisioner, ProvisionRequest
+from ..core.task import ExecutorState
+
+__all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "ReplicaStore",
+           "RoutedRequest", "RouterStats"]
+
+
+@dataclass
+class RoutedRequest:
+    """A unit of serving work and the data objects it wants to find cached."""
+
+    request_id: int
+    objects: Tuple[str, ...]            # KV-prefix blocks / adapters / shards
+    payload: Any = None                 # opaque to the router
+    submit_time_s: float = 0.0
+    dispatch_time_s: Optional[float] = None
+    finish_time_s: Optional[float] = None
+    replica: Optional[str] = None
+    hits: int = 0                       # objects found in the replica's store
+    misses: int = 0                     # objects fetched/recomputed on demand
+
+    @property
+    def key(self) -> int:
+        return self.request_id
+
+    @property
+    def response_time_s(self) -> Optional[float]:
+        if self.finish_time_s is None:
+            return None
+        return self.finish_time_s - self.submit_time_s
+
+
+class ReplicaStore:
+    """One replica's transient store: cache accounting + index publication.
+
+    The cache holds object *names and sizes* only (the replica owns the
+    actual KV tensors); every insert/evict is mirrored into the centralized
+    index so phase-1 routing sees it, mirroring the executor->index update
+    messages of Section 3.1.1.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        capacity_bytes: float,
+        index: CentralizedIndex,
+        eviction: str = "lru",
+        rng=None,
+        on_evict: Optional[Callable[[str, str], None]] = None,
+    ):
+        self.name = name
+        self.index = index
+
+        def _evicted(obj: str, size: float) -> None:
+            index.remove(obj, name)
+            if on_evict is not None:
+                on_evict(name, obj)   # let the owner free the real payload
+
+        self.cache = Cache(capacity_bytes, policy=eviction, rng=rng, on_evict=_evicted)
+
+    def access(self, obj: str) -> bool:
+        """Hit test + recency/frequency update (the request touched obj)."""
+        return self.cache.access(obj)
+
+    def admit(self, obj: str, size_bytes: float) -> List[str]:
+        """On-demand caching: object materialized here; returns evictions."""
+        evicted = self.cache.insert(obj, size_bytes)
+        if obj in self.cache:
+            self.index.add(obj, self.name)
+        return evicted
+
+    def drop(self, obj: str) -> None:
+        if obj in self.cache:
+            self.cache.remove(obj)
+            self.index.remove(obj, self.name)
+
+    def publish(self) -> Tuple[int, int]:
+        """Full-snapshot re-sync (recovery path after index drift/loss)."""
+        return self.index.publish(self.name, self.cache.contents())
+
+
+@dataclass
+class Assignment:
+    """A routed batch: run these requests on this replica, then complete()."""
+
+    replica: str
+    requests: List[RoutedRequest]
+
+
+@dataclass
+class RouterStats:
+    routed: int = 0
+    completed: int = 0
+    object_hits: int = 0
+    object_misses: int = 0
+    scale_ups: int = 0
+    scale_downs: int = 0
+    latencies_s: List[float] = field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.object_hits + self.object_misses
+        return self.object_hits / total if total else 0.0
+
+    def latency_percentile_s(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        xs = sorted(self.latencies_s)
+        i = min(len(xs) - 1, max(0, math.ceil(pct / 100.0 * len(xs)) - 1))
+        return xs[i]
+
+    @property
+    def p50_s(self) -> float:
+        return self.latency_percentile_s(50.0)
+
+    @property
+    def p99_s(self) -> float:
+        return self.latency_percentile_s(99.0)
+
+
+class CacheAffinityRouter:
+    """Routes requests to replicas with the paper's data-aware policies.
+
+    Host integration points:
+      * ``spawn_replica(name)``  — DRP scaled up: build the actual replica
+        (load weights, warm compile) before it starts receiving work.
+      * ``stop_replica(name)``   — DRP idle-released the replica.
+    Both callbacks are optional; pure-accounting users (benchmarks, tests)
+    can drive the router without a model behind it.
+    """
+
+    def __init__(
+        self,
+        policy: str = "good-cache-compute",
+        *,
+        window: int = 256,
+        cpu_util_threshold: float = 0.8,
+        max_object_replicas: int = 4,
+        replica_capacity_bytes: float = float("inf"),
+        eviction: str = "lru",
+        object_size_fn: Callable[[str], float] = lambda obj: 1.0,
+        index: Optional[CentralizedIndex] = None,
+        provisioner: Optional[DynamicResourceProvisioner] = None,
+        spawn_replica: Optional[Callable[[str], None]] = None,
+        stop_replica: Optional[Callable[[str], None]] = None,
+        on_object_evicted: Optional[Callable[[str, str], None]] = None,
+        pickup_batch: int = 1,
+    ):
+        self.index = index if index is not None else CentralizedIndex()
+        self.dispatcher = DataAwareDispatcher(
+            policy=policy,
+            window=window,
+            cpu_util_threshold=cpu_util_threshold,
+            max_replicas=max_object_replicas,
+            index=self.index,
+        )
+        self.replica_capacity_bytes = replica_capacity_bytes
+        self.eviction = eviction
+        self.object_size_fn = object_size_fn
+        self.drp = provisioner
+        self._spawn = spawn_replica
+        self._stop = stop_replica
+        self._on_object_evicted = on_object_evicted
+        self.pickup_batch = pickup_batch
+        self.stores: Dict[str, ReplicaStore] = {}
+        self._requests: Dict[int, RoutedRequest] = {}   # in flight, by id
+        self._idle_since: Dict[str, Optional[float]] = {}
+        self._pending_provisions: List[ProvisionRequest] = []
+        self._next_replica = 0
+        self.stats = RouterStats()
+
+    @property
+    def policy(self) -> str:
+        return self.dispatcher.policy
+
+    # ------------------------------------------------------------- replicas
+    def add_replica(
+        self,
+        name: Optional[str] = None,
+        capacity_bytes: Optional[float] = None,
+        eviction: Optional[str] = None,
+    ) -> str:
+        if name is None:
+            name = f"replica{self._next_replica}"
+            self._next_replica += 1
+        self.stores[name] = ReplicaStore(
+            name,
+            capacity_bytes if capacity_bytes is not None else self.replica_capacity_bytes,
+            self.index,
+            eviction=eviction or self.eviction,
+            on_evict=self._on_object_evicted,
+        )
+        self.dispatcher.register_executor(name)
+        # idle clock starts at first observation (None), NOT at 0.0 — under
+        # wall-clock time a 0.0 stamp would make a fresh replica look idle
+        # since the epoch and releasable on the very next tick.
+        self._idle_since[name] = None
+        return name
+
+    def remove_replica(self, name: str) -> None:
+        self.dispatcher.deregister_executor(name)   # drops its index entries
+        self.stores.pop(name, None)
+        self._idle_since.pop(name, None)
+
+    def replicas(self) -> List[str]:
+        return list(self.stores)
+
+    # --------------------------------------------------------------- submit
+    def submit(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
+        """Enqueue a request; returns any assignments routable right away."""
+        now = time.monotonic() if now is None else now
+        if request.submit_time_s == 0.0:
+            request.submit_time_s = now
+        self._requests[request.request_id] = request
+        self.dispatcher.submit(request)
+        if self.drp is not None:
+            req = self.drp.on_queue_change(now, self.dispatcher.queue_length())
+            if req is not None:
+                self._pending_provisions.append(req)
+        return self.tick(now)
+
+    def queue_length(self) -> int:
+        return self.dispatcher.queue_length()
+
+    # ----------------------------------------------------------- main pump
+    def tick(self, now: Optional[float] = None) -> List[Assignment]:
+        """Drive elasticity + phase-1 routing; returns new assignments."""
+        now = time.monotonic() if now is None else now
+        self._complete_provisions(now)
+        self._maybe_release(now)
+        return self._drain_notify(now)
+
+    def _drain_notify(self, now: float) -> List[Assignment]:
+        out: List[Assignment] = []
+        while True:
+            pair = self.dispatcher.notify()
+            if pair is None:
+                return out
+            replica, request = pair
+            out.append(self._start(replica, [request], now))
+
+    def _start(self, replica: str, requests: List[RoutedRequest], now: float) -> Assignment:
+        self.dispatcher.set_state(replica, ExecutorState.BUSY)
+        store = self.stores[replica]
+        use_cache = self.dispatcher.provides_location_info()
+        for request in requests:
+            request.replica = replica
+            request.dispatch_time_s = now
+            self.stats.routed += 1
+            for obj in request.objects:
+                if use_cache and store.access(obj):
+                    request.hits += 1
+                    self.stats.object_hits += 1
+                else:
+                    # on-demand caching: the replica materializes the object
+                    # (prefix replay / peer transfer) and keeps it.
+                    request.misses += 1
+                    self.stats.object_misses += 1
+                    if use_cache:
+                        store.admit(obj, self.object_size_fn(obj))
+        return Assignment(replica, requests)
+
+    # ------------------------------------------------------------- complete
+    def complete(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
+        """Replica finished a request: free it and run the pickup path."""
+        now = time.monotonic() if now is None else now
+        request.finish_time_s = now
+        self._requests.pop(request.request_id, None)
+        self.stats.completed += 1
+        if request.response_time_s is not None:
+            self.stats.latencies_s.append(request.response_time_s)
+        replica = request.replica
+        if replica in self.stores:
+            self.dispatcher.set_state(replica, ExecutorState.FREE)
+            self._idle_since[replica] = now
+        assignments = self.tick(now)
+        if replica in self.stores and self.dispatcher.queue_length() > 0 \
+                and self.dispatcher.executor_state(replica) == ExecutorState.FREE:
+            # Falkon pickup: the freed replica asks for window-scored work.
+            self.dispatcher.set_state(replica, ExecutorState.PENDING)
+            picked = self.dispatcher.pick_items(replica, m=self.pickup_batch)
+            if picked:
+                assignments.append(self._start(replica, picked, now))
+        return assignments
+
+    # ----------------------------------------------------------- elasticity
+    def _complete_provisions(self, now: float) -> None:
+        if self.drp is None:
+            return
+        due = [r for r in self._pending_provisions if r.ready_time_s <= now]
+        for req in due:
+            self._pending_provisions.remove(req)
+            self.drp.complete(req)
+            for _ in range(req.nodes):
+                name = self.add_replica()
+                self.stats.scale_ups += 1
+                if self._spawn is not None:
+                    self._spawn(name)
+
+    def _maybe_release(self, now: float) -> None:
+        if self.drp is None or self.dispatcher.queue_length() > 0:
+            return
+        for name in list(self.stores):
+            if self.dispatcher.executor_state(name) != ExecutorState.FREE:
+                continue
+            if len(self.stores) <= self.drp.min_nodes:
+                return
+            idle_since = self._idle_since.get(name)
+            if idle_since is None:
+                self._idle_since[name] = now   # first sighting: clock starts
+                continue
+            if self.drp.should_release(idle_since, now):
+                self.drp.release(1)
+                self.stats.scale_downs += 1
+                if self._stop is not None:
+                    self._stop(name)
+                self.remove_replica(name)

@@ -4,10 +4,10 @@ The paper's data-aware dispatch, reincarnated for LLM serving: a request's
 data objects are its session's KV-cache segments (prefix blocks).  Replicas
 that already hold a session's state serve it from "local cache" (decode
 continues in place); a replica without it pays the "copy" cost (replaying
-the prefix = the paper's persistent-store fetch; migrating state from a peer
-replica = the peer-cache fetch).  The DRP grows/shrinks the replica pool
-with queue length.  Policies are the paper's five, unchanged — the scheduler
-*is* ``core.scheduler.DataAwareScheduler``.
+the prefix = the paper's persistent-store fetch).  Routing, per-replica
+transient-store accounting (``core.cache.Cache``), index publication, and
+DRP-driven elasticity all live in ``runtime.router.CacheAffinityRouter`` —
+this module owns only the model: params, prefill, decode, KV tensors.
 
 Runs for real on CPU with a reduced-config model (examples/serve_diffusion.py);
 the decode step is the same ``make_decode_step`` the dry-run lowers at scale.
@@ -16,21 +16,18 @@ the decode step is the same ``make_decode_step`` the dry-run lowers at scale.
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
-from ..core.index import CentralizedIndex
 from ..core.provisioner import DynamicResourceProvisioner
-from ..core.scheduler import DataAwareScheduler
-from ..core.task import ExecutorState, Task
 from ..models import cache_init, init_params, make_decode_step, make_prefill_step
 from ..models.sharding import ShardCtx
+from .router import Assignment, CacheAffinityRouter, RoutedRequest
 
 
 @dataclass
@@ -52,27 +49,21 @@ class Request:
 
 
 class Replica:
-    """One model replica: params + per-session KV caches (bounded count)."""
+    """One model replica: params + per-session KV tensors.
 
-    def __init__(self, name: str, cfg: ArchConfig, params, cap: int,
-                 max_sessions: int = 8):
+    Which sessions *may* live here (capacity, eviction order) is decided by
+    the router's ``ReplicaStore``; this class just holds the payloads.
+    """
+
+    def __init__(self, name: str, cfg: ArchConfig, params, cap: int):
         self.name = name
         self.cfg = cfg
         self.params = params
         self.cap = cap
-        self.max_sessions = max_sessions
         self.sessions: Dict[str, Dict[str, Any]] = {}  # sid -> {caches, pos}
 
     def has_session(self, sid: str) -> bool:
         return sid in self.sessions
-
-    def admit(self, sid: str, caches, pos: int) -> Optional[str]:
-        evicted = None
-        if sid not in self.sessions and len(self.sessions) >= self.max_sessions:
-            evicted = next(iter(self.sessions))
-            del self.sessions[evicted]
-        self.sessions[sid] = {"caches": caches, "pos": pos}
-        return evicted
 
 
 @dataclass
@@ -92,6 +83,11 @@ class ServeStats:
         return float(np.mean(self.response_times)) if self.response_times else 0.0
 
 
+def session_object(sid: str) -> str:
+    """Logical data-object name for a session's KV prefix state."""
+    return f"kv:{sid}"
+
+
 class DiffusionServer:
     """Single-process serving demo with the paper's routing policies."""
 
@@ -104,72 +100,91 @@ class DiffusionServer:
         min_replicas: int = 1,
         cache_cap: int = 128,
         max_sessions: int = 8,
+        eviction: str = "lru",
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
         self.cfg = cfg
         self.ctx = ctx
         self.cap = cache_cap
-        self.max_sessions = max_sessions
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         shape = ShapeConfig("serve", "prefill", cache_cap, 1)
         self.prefill_fn = jax.jit(make_prefill_step(cfg, shape, ctx))
         self.decode_fn = jax.jit(make_decode_step(cfg, ctx))
-        self.index = CentralizedIndex()
-        self.sched = DataAwareScheduler(policy=policy, window=64, index=self.index)
-        self.drp = DynamicResourceProvisioner(
-            max_nodes=max_replicas, min_nodes=min_replicas, policy="watermark",
-            tasks_per_node_target=4.0, allocation_latency_s=(0.0, 0.0),
+        self.router = CacheAffinityRouter(
+            policy=policy,
+            window=64,
+            # each session's KV state is one unit-sized object; the store's
+            # byte capacity is therefore the session-slot count.
+            replica_capacity_bytes=float(max_sessions),
+            eviction=eviction,
+            object_size_fn=lambda obj: 1.0,
+            provisioner=DynamicResourceProvisioner(
+                max_nodes=max_replicas, min_nodes=min_replicas,
+                policy="watermark", tasks_per_node_target=4.0,
+                allocation_latency_s=(0.0, 0.0),
+            ),
+            spawn_replica=self._build_replica,
+            stop_replica=self._drop_replica,
+            on_object_evicted=self._on_session_evicted,
         )
         self.replicas: Dict[str, Replica] = {}
-        self._next_replica = 0
         for _ in range(min_replicas):
-            self._add_replica()
-        self.drp.registered = min_replicas
-        self.queue: deque = deque()
+            self._build_replica(self.router.add_replica())
+        self.router.drp.registered = min_replicas
         self.stats = ServeStats()
+        self._ready: List[Assignment] = []
         self._req_id = 0
 
     # ---------------------------------------------------------- replicas
-    def _add_replica(self) -> str:
-        name = f"replica{self._next_replica}"
-        self._next_replica += 1
-        self.replicas[name] = Replica(name, self.cfg, self.params, self.cap,
-                                      max_sessions=self.max_sessions)
-        self.sched.register_executor(name)
-        return name
+    def _build_replica(self, name: str) -> None:
+        self.replicas[name] = Replica(name, self.cfg, self.params, self.cap)
 
-    def _remove_replica(self, name: str) -> None:
+    def _drop_replica(self, name: str) -> None:
+        """Router idle-released the replica: free its KV payloads too."""
         self.replicas.pop(name, None)
-        self.sched.deregister_executor(name)
+
+    def _on_session_evicted(self, replica: str, obj: str) -> None:
+        rep = self.replicas.get(replica)
+        if rep is not None:
+            rep.sessions.pop(obj[len("kv:"):], None)
 
     def scale_to(self, n: int) -> None:
         while len(self.replicas) < n:
-            self._add_replica()
+            self._build_replica(self.router.add_replica())
         while len(self.replicas) > n:
-            self._remove_replica(next(reversed(self.replicas)))
+            name = next(reversed(self.replicas))
+            self.router.remove_replica(name)
+            del self.replicas[name]
+        self.router.drp.registered = n
 
     # ------------------------------------------------------------ submit
     def submit(self, session_id: str, prompt: np.ndarray,
                max_new_tokens: int = 8) -> Request:
+        now = time.time()
         req = Request(self._req_id, session_id, prompt, max_new_tokens,
-                      submit_time_s=time.time())
+                      submit_time_s=now)
         self._req_id += 1
-        self.queue.append(req)
-        # DRP watches the queue (allocation latency 0 in the demo).
-        r = self.drp.on_queue_change(time.time(), len(self.queue))
-        if r is not None:
-            self.drp.complete(r)
-            for _ in range(r.nodes):
-                self._add_replica()
+        routed = RoutedRequest(req.request_id, (session_object(session_id),),
+                               payload=req, submit_time_s=now)
+        # The router runs phase 1 (and DRP scaling) immediately; execution
+        # happens in step().  Requests whose policy delays dispatch stay in
+        # the wait queue until a replica frees and picks them (phase 2).
+        self._ready.extend(self.router.submit(routed, now=now))
         return req
 
     # ------------------------------------------------------------- serve
-    def _run_request(self, replica: Replica, req: Request) -> None:
+    def _run_request(self, replica: Replica, routed: RoutedRequest) -> None:
+        req: Request = routed.payload
+        req.replica = replica.name
         sid = req.session_id
-        state = replica.sessions.get(sid)
-        req.prefix_hit = state is not None
-        if state is None:
+        use_cache = self.router.dispatcher.provides_location_info()
+        state = replica.sessions.get(sid) if use_cache else None
+        if routed.hits and state is not None:
+            req.prefix_hit = True
+            self.stats.prefix_hits += 1
+            caches, pos = state["caches"], state["pos"]
+        else:
             # "copy from persistent storage": replay the prompt (prefill).
             self.stats.prefills += 1
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -179,16 +194,7 @@ class DiffusionServer:
             caches = cache_init(self.cfg, 1, self.cap)
             caches = _merge_prefill_caches(caches, pre_caches, self.cfg)
             pos = req.prompt.shape[0]
-            evicted = replica.admit(sid, caches, pos)
-            self.index.add(sid, replica.name)
-            if evicted is not None:
-                self.index.remove(evicted, replica.name)
-        else:
-            self.stats.prefix_hits += 1
-            caches, pos = state["caches"], state["pos"]
 
-        state = replica.sessions[sid]
-        caches, pos = state["caches"], state["pos"]
         token = jnp.asarray([int(req.prompt[-1]) % self.cfg.vocab_size], jnp.int32)
         for _ in range(req.max_new_tokens):
             if pos >= self.cap - 1:
@@ -200,32 +206,39 @@ class DiffusionServer:
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             pos += 1
             self.stats.decode_steps += 1
-        replica.sessions[sid] = {"caches": caches, "pos": pos}
+        if use_cache:
+            # keep the KV payload iff the router's store admitted the object
+            # (first-available ships no location info and caches nothing;
+            # pass-through objects larger than the store are never admitted,
+            # so their payloads must not linger unaccounted either).
+            store = self.router.stores.get(replica.name)
+            if store is not None and session_object(sid) in store.cache:
+                replica.sessions[sid] = {"caches": caches, "pos": pos}
+            else:
+                replica.sessions.pop(sid, None)
         req.finish_time_s = time.time()
         self.stats.served += 1
         self.stats.response_times.append(req.response_time_s)
 
     def step(self) -> int:
-        """Drain the queue through the data-aware scheduler. Returns served."""
+        """Execute routed work until queue and assignments drain. Returns served."""
         served = 0
-        while self.queue:
-            req = self.queue.popleft()
-            task = Task(req.request_id, (req.session_id,), compute_time_s=0.0)
-            self.sched.submit(task)
-            pair = self.sched.notify()
-            if pair is None:
-                # policy delayed (preferred replica busy) — in this
-                # synchronous demo every replica frees between requests, so
-                # force the head onto any replica.
-                name = next(iter(self.replicas))
-                self.sched._dispatch(task, name)
-            else:
-                name, task = pair
-            replica = self.replicas[name]
-            req.replica = name
-            self._run_request(replica, req)
-            self.sched.set_state(name, ExecutorState.FREE)
-            served += 1
+        idle_rounds = 0
+        while self._ready or self.router.queue_length() > 0:
+            if not self._ready:
+                # delayed requests: replicas all freed by now, re-run phase 1
+                self._ready.extend(self.router.tick(time.time()))
+                idle_rounds += 1
+                if not self._ready and idle_rounds > 2:
+                    break  # policy refuses the remainder (all holders lost)
+                continue
+            idle_rounds = 0
+            assignment = self._ready.pop(0)
+            replica = self.replicas[assignment.replica]
+            for routed in assignment.requests:
+                self._run_request(replica, routed)
+                served += 1
+                self._ready.extend(self.router.complete(routed, now=time.time()))
         return served
 
 

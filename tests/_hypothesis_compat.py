@@ -1,0 +1,92 @@
+"""Optional-``hypothesis`` shim: property tests degrade to fixed examples.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given``/``settings``/``strategies`` untouched.  On a bare install it
+provides a miniature drop-in covering exactly the strategy surface the test
+suite uses (``integers``, ``floats``, ``sampled_from``, ``lists``,
+``tuples``): ``@given`` runs the test body against a deterministic,
+seed-fixed sample of drawn examples instead of a shrinking search.  That is
+strictly weaker than hypothesis — no shrinking, no coverage-guided
+generation — but keeps the property tests *running* everywhere, which is
+what tier-1 needs.
+"""
+
+from __future__ import annotations
+
+try:  # real hypothesis wins whenever it is importable
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _SEED = 0xDA7A
+    _FALLBACK_MAX_EXAMPLES = 25   # keep the fixed-example pass fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 20
+
+            def draw(rng):
+                n = rng.randint(min_size, hi)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(_SEED)
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                for _ in range(n):
+                    drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest must not see the drawn parameter names as fixtures:
+            # hide the original signature that functools.wraps exposed.
+            del wrapper.__wrapped__
+            wrapper._hypothesis_fallback = True
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, **_kw):
+        """Accepts (and mostly ignores) the hypothesis knobs the suite uses."""
+
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate

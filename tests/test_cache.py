@@ -3,7 +3,8 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cache import Cache, EVICTION_POLICIES
 
@@ -57,6 +58,65 @@ def test_hit_miss_stats():
     assert c.access("a") and not c.access("b")
     assert c.stats.hits == 1 and c.stats.misses == 1
     assert c.stats.hit_rate == 0.5
+
+
+# ------------------------------------------------ CacheStats accounting
+def run_fixed_trace(policy):
+    """Same trace for every policy: 4 inserts into 3 bytes of capacity,
+    with interleaved accesses (2 hits, 1 miss) before the evicting insert."""
+    c = Cache(3, policy=policy, rng=random.Random(7))
+    for name in "abc":
+        c.insert(name, 1)
+    c.access("a")
+    c.access("b")
+    c.access("zzz")      # miss
+    c.insert("d", 2)     # needs 2 bytes: evicts twice
+    return c
+
+
+@pytest.mark.parametrize("policy", EVICTION_POLICIES)
+def test_stats_accounting_all_policies(policy):
+    c = run_fixed_trace(policy)
+    s = c.stats
+    assert s.insertions == 4
+    assert s.hits == 2 and s.misses == 1
+    assert s.accesses == 3 and s.hit_rate == pytest.approx(2 / 3)
+    assert s.evictions == 2
+    assert s.bytes_evicted == 2.0          # two 1-byte victims
+    assert c.used_bytes == 3.0             # one survivor + the 2-byte entry
+    assert len(c) == 2 and "d" in c
+
+
+def test_stats_victim_identity_per_policy():
+    assert "c" not in run_fixed_trace("lru")      # a,b refreshed; c coldest
+    assert "a" not in run_fixed_trace("fifo")     # first inserted goes first
+    lfu = run_fixed_trace("lfu")
+    assert "c" not in lfu and "d" in lfu          # c never accessed again
+    # random with a fixed seed is deterministic: replaying the trace with the
+    # same rng must evict the identical victims every time.
+    assert run_fixed_trace("random").contents() == run_fixed_trace("random").contents()
+
+
+def test_random_eviction_seeded_rng_reproducible():
+    def evict_sequence(seed):
+        out = []
+        c = Cache(4, policy="random", rng=random.Random(seed),
+                  on_evict=lambda n, sz: out.append(n))
+        for i in range(12):
+            c.insert(f"k{i}", 1)
+        return out
+    assert evict_sequence(3) == evict_sequence(3)
+    assert len(evict_sequence(3)) == 8
+
+
+def test_on_evict_callback_sees_sizes():
+    seen = []
+    c = Cache(3, policy="fifo", on_evict=lambda n, sz: seen.append((n, sz)))
+    c.insert("a", 2)
+    c.insert("b", 1)
+    c.insert("c", 3)     # must evict both a and b
+    assert seen == [("a", 2), ("b", 1)]
+    assert c.stats.bytes_evicted == 3.0
 
 
 @settings(max_examples=200, deadline=None)

@@ -1,0 +1,248 @@
+"""Deterministic dispatch-decision tests: all five policies, both phases.
+
+Fixed fixture: four executors e0..e3; the index pre-seeded so that
+  * "hot"  is cached on e2 (and only e2),
+  * "warm" is cached on e1 and e3,
+  * "cold" is cached nowhere.
+Every test drives ``notify`` (phase 1) or ``pick_tasks`` (phase 2) against a
+known executor/queue state and asserts the exact dispatch decision the paper
+prescribes, including good-cache-compute's maximum-replication-factor bound.
+"""
+
+import pytest
+
+from repro.core.dispatch import DataAwareDispatcher
+from repro.core.scheduler import POLICIES, DataAwareScheduler
+from repro.core.task import ExecutorState, Task, TaskState
+
+
+def make_sched(policy, n_exec=4, **kw):
+    s = DataAwareScheduler(policy=policy, **kw)
+    for i in range(n_exec):
+        s.register_executor(f"e{i}")
+    s.index.add("hot", "e2")
+    s.index.add("warm", "e1")
+    s.index.add("warm", "e3")
+    return s
+
+
+def busy(s, *names):
+    for n in names:
+        s.set_state(n, ExecutorState.BUSY)
+
+
+# ------------------------------------------------------------ phase 1: notify
+@pytest.mark.parametrize("policy", POLICIES)
+def test_notify_cold_task_goes_to_first_free(policy):
+    s = make_sched(policy)
+    s.submit(Task(0, ("cold",), 0.1))
+    name, task = s.notify()
+    assert name == "e0"              # FIFO free list; no holder exists
+    assert task.state == TaskState.PENDING and task.executor == "e0"
+
+
+@pytest.mark.parametrize("policy", ["first-cache-available", "max-cache-hit",
+                                    "max-compute-util", "good-cache-compute"])
+def test_notify_prefers_free_holder(policy):
+    s = make_sched(policy)
+    s.submit(Task(0, ("hot",), 0.1))
+    name, _ = s.notify()
+    assert name == "e2"              # location info routes to the cache holder
+
+
+def test_notify_first_available_ignores_holder():
+    s = make_sched("first-available")
+    s.submit(Task(0, ("hot",), 0.1))
+    name, _ = s.notify()
+    assert name == "e0"
+    assert not s.provides_location_info()
+
+
+def test_notify_multi_object_prefers_most_overlap():
+    s = make_sched("max-compute-util")
+    s.index.add("hot2", "e2")
+    s.submit(Task(0, ("hot", "hot2", "warm"), 0.1))
+    name, _ = s.notify()
+    assert name == "e2"              # two of three objects vs one on e1/e3
+
+
+@pytest.mark.parametrize("policy,expect_delay", [
+    ("first-cache-available", False),  # ships location info, never delays
+    ("max-cache-hit", True),           # holder busy => delay in place
+    ("max-compute-util", False),       # always dispatch to a free executor
+])
+def test_notify_busy_holder(policy, expect_delay):
+    s = make_sched(policy)
+    busy(s, "e2")
+    s.submit(Task(0, ("hot",), 0.1))
+    pair = s.notify()
+    if expect_delay:
+        assert pair is None
+        assert s.queue_length() == 1 and s.stats.delayed == 1
+    else:
+        name, _ = pair
+        assert name in ("e0", "e1", "e3")
+
+
+def test_notify_gcc_below_threshold_acts_like_mcu():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.8)
+    busy(s, "e2")                     # utilization 25% < 80%
+    s.submit(Task(0, ("hot",), 0.1))
+    name, _ = s.notify()
+    assert name is not None and name != "e2"
+
+
+def test_notify_gcc_above_threshold_replicates_under_bound():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=4)
+    busy(s, "e1", "e2", "e3")         # utilization 75% >= 50%
+    s.submit(Task(0, ("hot",), 0.1))
+    name, _ = s.notify()
+    assert name == "e0"               # replication factor 1 < 4: new copy OK
+
+
+def test_notify_gcc_above_threshold_delays_at_replication_bound():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=1)
+    busy(s, "e1", "e2", "e3")
+    s.submit(Task(0, ("hot",), 0.1))
+    assert s.notify() is None         # 1 copy exists, bound 1: must wait
+    assert s.stats.delayed == 1
+
+
+def test_notify_mch_delay_then_dispatch_when_holder_frees():
+    s = make_sched("max-cache-hit")
+    busy(s, "e2")
+    s.submit(Task(0, ("hot",), 0.1))
+    assert s.notify() is None
+    s.set_state("e2", ExecutorState.FREE)
+    name, _ = s.notify()
+    assert name == "e2"
+
+
+def test_notify_mch_scans_past_delayed_head():
+    """A delayed head must not block dispatchable work behind it."""
+    s = make_sched("max-cache-hit")
+    busy(s, "e2")
+    s.submit(Task(0, ("hot",), 0.1))   # head: holder e2 busy -> delayed
+    s.submit(Task(1, ("warm",), 0.1))  # behind: e1/e3 free
+    name, task = s.notify()
+    assert name in ("e1", "e3") and task.task_id == 1
+    assert s.queue_length() == 1       # the hot task still waits
+
+
+# --------------------------------------------------------- phase 2: pick_tasks
+@pytest.mark.parametrize("policy", ["first-cache-available", "max-cache-hit",
+                                    "max-compute-util", "good-cache-compute"])
+def test_pick_perfect_hit_skips_fifo_order(policy):
+    s = make_sched(policy)
+    s.submit(Task(0, ("cold",), 0.1))
+    s.submit(Task(1, ("hot",), 0.1))
+    s.set_state("e2", ExecutorState.PENDING)
+    picked = s.pick_tasks("e2", m=1)
+    assert [t.task_id for t in picked] == [1]       # 100%-hit task first
+
+
+def test_pick_first_available_is_fifo():
+    """FA ships no location info: the index never learns who caches what, so
+    phase 2 degenerates to plain FIFO (fresh scheduler, unseeded index)."""
+    s = DataAwareScheduler(policy="first-available")
+    s.register_executor("e0")
+    s.submit(Task(0, ("cold",), 0.1))
+    s.submit(Task(1, ("hot",), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    picked = s.pick_tasks("e0", m=1)
+    assert [t.task_id for t in picked] == [0]
+
+
+def test_pick_partial_hit_beats_no_hit():
+    s = make_sched("max-compute-util")
+    s.submit(Task(0, ("cold",), 0.1))
+    s.submit(Task(1, ("hot", "cold"), 0.1))        # 50% local on e2
+    s.set_state("e2", ExecutorState.PENDING)
+    picked = s.pick_tasks("e2", m=1)
+    assert [t.task_id for t in picked] == [1]
+
+
+def test_pick_batch_returns_hits_up_to_m():
+    s = make_sched("max-compute-util")
+    s.index.add("hot2", "e2")
+    s.submit(Task(0, ("hot",), 0.1))
+    s.submit(Task(1, ("hot2",), 0.1))
+    s.submit(Task(2, ("cold",), 0.1))
+    s.set_state("e2", ExecutorState.PENDING)
+    picked = s.pick_tasks("e2", m=3)
+    # both local-hit tasks come back; the no-hit task is NOT batched with
+    # them (the fallback path only fires when there are no hits at all)
+    assert {t.task_id for t in picked} == {0, 1}
+    assert s.executor_state("e2") == ExecutorState.BUSY
+
+
+def test_pick_mch_returns_nothing_without_local_data():
+    s = make_sched("max-cache-hit")
+    s.submit(Task(0, ("hot",), 0.1))               # cached on e2, not e0
+    s.set_state("e0", ExecutorState.PENDING)
+    assert s.pick_tasks("e0") == []
+    assert s.executor_state("e0") == ExecutorState.FREE
+    assert s.queue_length() == 1
+
+
+def test_pick_gcc_respects_replication_bound():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=1)
+    busy(s, "e1", "e2", "e3")                      # above threshold
+    s.submit(Task(0, ("hot",), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    assert s.pick_tasks("e0") == []                # bound hit: no new copy
+    assert s.executor_state("e0") == ExecutorState.FREE
+
+
+def test_pick_gcc_replicates_with_headroom():
+    s = make_sched("good-cache-compute", cpu_util_threshold=0.5, max_replicas=4)
+    busy(s, "e1", "e2", "e3")
+    s.submit(Task(0, ("hot",), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    picked = s.pick_tasks("e0")
+    assert [t.task_id for t in picked] == [0]      # fallback dispatch allowed
+    assert s.stats.fallback_dispatches == 1
+
+
+@pytest.mark.parametrize("policy", ["first-available", "first-cache-available",
+                                    "max-compute-util"])
+def test_pick_fallback_takes_queue_head(policy):
+    s = make_sched(policy)
+    s.submit(Task(0, ("cold",), 0.1))
+    s.submit(Task(1, ("cold",), 0.1))
+    s.set_state("e0", ExecutorState.PENDING)
+    picked = s.pick_tasks("e0", m=1)
+    assert [t.task_id for t in picked] == [0]
+
+
+# ------------------------------------------------- generic dispatcher surface
+class _Item:
+    """Any object with ``key`` + ``objects`` routes through the engine."""
+
+    def __init__(self, key, objects):
+        self.key = key
+        self.objects = objects
+
+
+def test_generic_dispatcher_routes_duck_typed_items():
+    d = DataAwareDispatcher(policy="max-compute-util")
+    d.register_executor("r0")
+    d.register_executor("r1")
+    d.index.add("obj", "r1")
+    d.submit(_Item("a", ("obj",)))
+    name, item = d.notify()
+    assert name == "r1" and item.key == "a"
+
+
+def test_generic_dispatcher_on_dispatch_hook():
+    seen = []
+
+    class Hooked(DataAwareDispatcher):
+        def _on_dispatch(self, item, executor):
+            seen.append((item.key, executor))
+
+    d = Hooked(policy="first-available")
+    d.register_executor("r0")
+    d.submit(_Item(1, ("x",)))
+    d.notify()
+    assert seen == [(1, "r0")]

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~1 min on CPU
+
 from repro.kernels import (
     attention_ref,
     flash_attention,

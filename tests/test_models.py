@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full fwd/train steps for every arch: minutes
+
 from repro.configs import ALL_ARCHS, SHAPES, cells, get_arch
 from repro.configs.base import ShapeConfig
 from repro.models import (

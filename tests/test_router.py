@@ -1,0 +1,182 @@
+"""Cache-affinity serving router tests (pure accounting — no model, no JAX)."""
+
+import pytest
+
+from repro.core.index import CentralizedIndex
+from repro.core.provisioner import DynamicResourceProvisioner
+from repro.runtime.router import CacheAffinityRouter, ReplicaStore, RoutedRequest
+
+
+def make_router(policy="good-cache-compute", replicas=2, **kw):
+    r = CacheAffinityRouter(policy=policy, **kw)
+    for _ in range(replicas):
+        r.add_replica()
+    return r
+
+
+def pump(router, request, now):
+    """Submit + synchronously run-to-completion; returns serving replica."""
+    assignments = router.submit(request, now=now)
+    served = []
+    while assignments:
+        a = assignments.pop(0)
+        for rr in a.requests:
+            served.append((a.replica, rr))
+            assignments.extend(router.complete(rr, now=now + 0.01))
+    return served
+
+
+def test_second_request_for_session_hits_same_replica():
+    r = make_router()
+    first = pump(r, RoutedRequest(0, ("kv:alice",)), now=1.0)
+    assert len(first) == 1 and first[0][1].misses == 1
+    home = first[0][0]
+    again = pump(r, RoutedRequest(1, ("kv:alice",)), now=2.0)
+    assert again[0][0] == home              # affinity: routed to the holder
+    assert again[0][1].hits == 1 and again[0][1].misses == 0
+    assert r.stats.hit_rate == 0.5          # 1 hit / 2 accesses
+
+
+def test_first_available_never_caches():
+    r = make_router(policy="first-available")
+    for i in range(4):
+        served = pump(r, RoutedRequest(i, ("kv:bob",)), now=float(i))
+        assert served[0][1].hits == 0
+    assert r.stats.object_hits == 0 and r.stats.object_misses == 4
+    assert r.index.locations("kv:bob") == set()   # no location info shipped
+
+
+def test_store_eviction_updates_index_and_fires_callback():
+    evicted = []
+    r = CacheAffinityRouter(
+        policy="max-compute-util",
+        replica_capacity_bytes=2.0,
+        on_object_evicted=lambda rep, obj: evicted.append((rep, obj)),
+    )
+    name = r.add_replica()
+    for i in range(3):                      # capacity 2: third insert evicts
+        pump(r, RoutedRequest(i, (f"kv:s{i}",)), now=float(i))
+    assert evicted == [(name, "kv:s0")]     # LRU victim
+    assert r.index.locations("kv:s0") == set()
+    assert name in r.index.locations("kv:s2")
+
+
+def test_replica_store_publish_resyncs_index():
+    idx = CentralizedIndex()
+    store = ReplicaStore("r0", 10.0, idx)
+    store.admit("a", 1.0)
+    store.admit("b", 1.0)
+    idx.drop_executor("r0")                 # index lost its view (restart)
+    assert idx.cached_at("r0") == set()
+    added, removed = store.publish()
+    assert (added, removed) == (2, 0)
+    assert idx.cached_at("r0") == {"a", "b"}
+
+
+def test_remove_replica_drops_index_entries():
+    r = make_router(policy="max-compute-util")
+    served = pump(r, RoutedRequest(0, ("kv:carol",)), now=0.0)
+    home = served[0][0]
+    r.remove_replica(home)
+    assert r.index.locations("kv:carol") == set()
+    other = pump(r, RoutedRequest(1, ("kv:carol",)), now=1.0)
+    assert other[0][0] != home              # re-routed, re-materialized
+    assert other[0][1].misses == 1
+
+
+def test_queue_pressure_scales_up_through_drp():
+    spawned = []
+    r = CacheAffinityRouter(
+        policy="max-compute-util",
+        provisioner=DynamicResourceProvisioner(
+            max_nodes=4, min_nodes=1, policy="one",
+            allocation_latency_s=(0.0, 0.0)),
+        spawn_replica=spawned.append,
+    )
+    r.add_replica()
+    r.drp.registered = 1
+    # submit a burst without completing anything: queue builds, DRP triggers
+    pending = []
+    for i in range(6):
+        for a in r.submit(RoutedRequest(i, (f"kv:u{i}",)), now=float(i)):
+            pending.extend(a.requests)
+    assert r.stats.scale_ups >= 1
+    assert len(r.replicas()) == 1 + r.stats.scale_ups
+    assert spawned and all(n in r.replicas() for n in spawned)
+
+
+def test_idle_replicas_released_down_to_min():
+    stopped = []
+    r = CacheAffinityRouter(
+        policy="max-compute-util",
+        provisioner=DynamicResourceProvisioner(
+            max_nodes=4, min_nodes=1, policy="one", queue_threshold=10,
+            allocation_latency_s=(0.0, 0.0), idle_release_s=10.0),
+        stop_replica=stopped.append,
+    )
+    for _ in range(3):
+        r.add_replica()
+    r.drp.registered = 3
+    pump(r, RoutedRequest(0, ("kv:a",)), now=0.0)
+    r.tick(now=100.0)                       # idle far past the release window
+    assert r.stats.scale_downs == 2         # released down to min_nodes=1
+    assert len(r.replicas()) == 1
+    assert len(stopped) == 2
+
+
+def test_provisioned_replicas_survive_the_tick_that_spawned_them():
+    """Regression: under wall-clock time (epoch-scale ``now``), a freshly
+    provisioned replica must not look 'idle since 0.0' and get released in
+    the same tick that spawned it."""
+    r = CacheAffinityRouter(
+        policy="max-compute-util",
+        provisioner=DynamicResourceProvisioner(
+            max_nodes=4, min_nodes=1, policy="one",
+            allocation_latency_s=(0.0, 0.0), idle_release_s=60.0),
+    )
+    r.add_replica()
+    r.drp.registered = 1
+    wall = 1.7e9                            # realistic time.time() magnitude
+    live = []
+    for i in range(6):
+        for a in r.submit(RoutedRequest(i, (f"kv:u{i}",)), now=wall + i):
+            live.extend(a.requests)
+    while live:
+        for rr in list(live):
+            live.remove(rr)
+            for a in r.complete(rr, now=wall + 10.0):
+                live.extend(a.requests)
+    assert r.stats.scale_ups >= 1
+    r.tick(now=wall + 20.0)                 # 20s idle < 60s release window
+    assert r.stats.scale_downs == 0
+    assert len(r.replicas()) == 1 + r.stats.scale_ups
+
+
+def test_latency_percentiles_from_completions():
+    r = make_router(policy="first-available", replicas=4)
+    finish = {0: 1.0, 1: 2.0, 2: 3.0, 3: 10.0}
+    live = []
+    for i in range(4):
+        for a in r.submit(RoutedRequest(i, (f"kv:s{i}",)), now=0.0):
+            live.extend(a.requests)
+    for rr in live:
+        r.complete(rr, now=finish[rr.request_id])
+    assert r.stats.p50_s == pytest.approx(2.0)
+    assert r.stats.p99_s == pytest.approx(10.0)
+    assert r.stats.completed == 4
+
+
+def test_delayed_request_served_after_holder_frees():
+    """MCH: request for a busy holder waits, then lands on the holder."""
+    r = make_router(policy="max-cache-hit", replicas=2)
+    first = pump(r, RoutedRequest(0, ("kv:hot",)), now=0.0)
+    home = first[0][0]
+    # occupy the holder, then submit a follow-up for the same session
+    busy = r.submit(RoutedRequest(1, ("kv:hot",)), now=1.0)
+    assert len(busy) == 1 and busy[0].replica == home
+    held = r.submit(RoutedRequest(2, ("kv:hot",)), now=1.1)
+    assert held == [] and r.queue_length() == 1   # delayed, not rerouted
+    # holder completes -> pickup path serves the delayed request locally
+    after = r.complete(busy[0].requests[0], now=2.0)
+    assert len(after) == 1 and after[0].replica == home
+    assert after[0].requests[0].hits == 1

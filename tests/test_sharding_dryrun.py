@@ -14,6 +14,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import ShardCtx, spec_for_param
 
+pytestmark = pytest.mark.slow  # subprocess XLA dry-runs: ~1 min on CPU
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

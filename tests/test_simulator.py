@@ -1,7 +1,8 @@
 """DES integration + invariant tests."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     SimConfig,
