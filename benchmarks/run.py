@@ -16,14 +16,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper scale (250K tasks)")
     ap.add_argument("--quick", action="store_true", help="CI scale (6K tasks)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny iterations: exercises every suite end-to-end "
+                         "in ~a minute so benchmark scripts can't silently rot")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     args = ap.parse_args()
-    n = 250_000 if args.full else (6_000 if args.quick else 25_000)
-    n_model = 20_000 if args.full else (2_000 if args.quick else 6_000)
-    n_sched = 250_000 if args.full else (6_000 if args.quick else 25_000)
+    if args.smoke:
+        n, n_model, n_sched, n_serve, n_scale = 1_000, 300, 1_000, 300, 1_000
+    else:
+        n = 250_000 if args.full else (6_000 if args.quick else 25_000)
+        n_model = 20_000 if args.full else (2_000 if args.quick else 6_000)
+        n_sched = 250_000 if args.full else (6_000 if args.quick else 25_000)
+        n_serve = 1_000 if args.quick else 4_000
+        n_scale = 40_000 if args.full else 8_000
 
     from . import (
         bench_cache_throughput,
+        bench_diffusion_tiers,
         bench_model_error,
         bench_pi_speedup,
         bench_provisioning,
@@ -35,13 +44,13 @@ def main() -> None:
 
     suites = [
         ("scheduler", lambda: bench_scheduler.main(n_sched)),
-        ("serve_routing", lambda: bench_serve_routing.main(
-            1_000 if args.quick else 4_000)),
+        ("serve_routing", lambda: bench_serve_routing.main(n_serve)),
+        ("diffusion_tiers", lambda: bench_diffusion_tiers.main(n_serve)),
         ("provisioning", lambda: bench_provisioning.main(n)),
         ("cache_throughput", lambda: bench_cache_throughput.main(n)),
         ("pi_speedup", lambda: bench_pi_speedup.main(n)),
         ("model_error", lambda: bench_model_error.main(n_model)),
-        ("scale", lambda: bench_scale.main(8_000 if not args.full else 40_000)),
+        ("scale", lambda: bench_scale.main(n_scale)),
         ("roofline", lambda: bench_roofline.main()),
     ]
     only = set(args.only.split(",")) if args.only else None

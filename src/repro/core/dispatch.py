@@ -89,6 +89,7 @@ class DataAwareDispatcher:
         index: Optional[CentralizedIndex] = None,
         key_fn: Optional[Callable[[Any], Hashable]] = None,
         objects_fn: Optional[Callable[[Any], Sequence[str]]] = None,
+        tier_weights: Optional[Dict[str, float]] = None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
@@ -100,6 +101,12 @@ class DataAwareDispatcher:
         self.index = index if index is not None else CentralizedIndex()
         self._key = key_fn or (lambda item: item.key)
         self._objects = objects_fn or (lambda item: item.objects)
+        # Tier-aware scoring (diffusion plane): a cached object counts with
+        # the weight of the tier holding it (HBM > DRAM > disk), so phase-1
+        # candidate ranking and phase-2 window scoring prefer executors that
+        # can serve from faster tiers.  None = every cached copy weighs 1.0
+        # (the paper's flat-store behavior, bit-for-bit).
+        self.tier_weights = tier_weights
 
         # Wait queue Q: FIFO by arrival sequence. OrderedDict gives O(1)
         # head access and O(1) removal from the middle on dispatch.
@@ -133,6 +140,19 @@ class DataAwareDispatcher:
 
     def queued_items(self) -> List[Any]:
         return list(self._queue.values())
+
+    def peek(self, n: int) -> List[Any]:
+        """First ``n`` queued items without copying the whole queue (prefetch)."""
+        out: List[Any] = []
+        for item in self._queue.values():
+            if len(out) >= n:
+                break
+            out.append(item)
+        return out
+
+    def objects_of(self, item: Any) -> Sequence[str]:
+        """Data objects a work item needs (public form of the objects_fn)."""
+        return self._objects(item)
 
     def _head(self) -> Optional[Any]:
         return next(iter(self._queue.values())) if self._queue else None
@@ -188,6 +208,13 @@ class DataAwareDispatcher:
         busy = sum(1 for s in self._executors.values() if s == ExecutorState.BUSY)
         return busy / n
 
+    def _weight(self, f: str, e: str) -> float:
+        """Tier weight of cached object f at executor e (tier-aware scoring)."""
+        t = self.index.tier_of(f, e)
+        if t is None:
+            return 1.0
+        return self.tier_weights.get(t, 1.0)
+
     # -------------------------------------------------------------- phase 1
     def _cache_mode(self) -> bool:
         """True when the policy is currently in cache-preferring mode."""
@@ -232,8 +259,11 @@ class DataAwareDispatcher:
             scanned += 1
             objects = self._objects(item)
             best_free, any_live = None, False
-            if len(objects) == 1:  # fast path (the common workload)
-                for e in self.index.locations(objects[0]):
+            if len(objects) == 1 and self.tier_weights is None:
+                # fast path (the common workload, flat stores); sorted so
+                # choices among equivalent executors are reproducible across
+                # processes (the paper's sorted-set index semantics)
+                for e in sorted(self.index.locations(objects[0])):
                     st = executors.get(e)
                     if st is None:
                         continue
@@ -242,15 +272,18 @@ class DataAwareDispatcher:
                         best_free = e
                         break
             else:
-                best_cnt = 0
-                counts: Dict[str, int] = {}
+                # tier-aware: an HBM-resident copy outweighs a disk-resident
+                # one, so among free holders the fastest-tier one wins.
+                weighted = self.tier_weights is not None
+                best_cnt = 0.0
+                counts: Dict[str, float] = {}
                 for f in objects:
-                    for e in self.index.locations(f):
+                    for e in sorted(self.index.locations(f)):
                         st = executors.get(e)
                         if st is None:
                             continue
                         any_live = True
-                        c = counts.get(e, 0) + 1
+                        c = counts.get(e, 0.0) + (self._weight(f, e) if weighted else 1.0)
                         counts[e] = c
                         if st == ExecutorState.FREE and c > best_cnt:
                             best_free, best_cnt = e, c
@@ -300,9 +333,12 @@ class DataAwareDispatcher:
         if cached:
             # Fast path: only items demanding an object this executor caches
             # can score > 0; restrict to the first W queue positions.
+            # sorted iteration: which 100%-hit item is picked first must not
+            # depend on set-hash order (keys are sortable in practice: ints
+            # for tasks/requests), or reruns of a seeded workload diverge.
             seen: Set[Hashable] = set()
-            for f in cached:
-                for key in self._demand.get(f, ()):
+            for f in sorted(cached):
+                for key in sorted(self._demand.get(f, ())):
                     if key in seen:
                         continue
                     seen.add(key)
@@ -311,7 +347,11 @@ class DataAwareDispatcher:
                         continue
                     item = self._queue[key]
                     objects = self._objects(item)
-                    hits = sum(1 for tf in objects if tf in cached)
+                    if self.tier_weights is None:
+                        hits = sum(1 for tf in objects if tf in cached)
+                    else:
+                        hits = sum(self._weight(tf, executor)
+                                   for tf in objects if tf in cached)
                     frac = hits / len(objects)
                     self.stats.tasks_scanned += 1
                     if frac >= 1.0:

@@ -16,7 +16,7 @@ Section 3.2).
 from __future__ import annotations
 
 from collections import defaultdict, deque
-from typing import Deque, Dict, Iterable, List, Set, Tuple
+from typing import Deque, Dict, Iterable, Mapping, Optional, Set, Tuple
 
 
 class CentralizedIndex:
@@ -26,6 +26,10 @@ class CentralizedIndex:
         self.i_map: Dict[str, Set[str]] = defaultdict(set)
         self.e_map: Dict[str, Set[str]] = defaultdict(set)
         self.coherence_delay_s = coherence_delay_s
+        # Which tier of an executor's store holds the object, when the store
+        # is tiered (diffusion.tiers.TieredStore publishes this alongside
+        # presence).  Flat stores never set it; queries then return None.
+        self._tiers: Dict[Tuple[str, str], str] = {}
         # (apply_at_time, op, file, executor) — drained by the simulator clock;
         # runtime consumers use delay 0 (synchronous in-process updates).
         # Constant delay => appends arrive in time order => deque pop-left.
@@ -34,28 +38,40 @@ class CentralizedIndex:
     # -- synchronous mutation (coherent view) --------------------------------
     version: int = 0  # bumped on every mutation (scheduler scan memoization)
 
-    def add(self, file: str, executor: str) -> None:
+    def add(self, file: str, executor: str, tier: Optional[str] = None) -> None:
         self.version += 1
         self.i_map[file].add(executor)
         self.e_map[executor].add(file)
+        if tier is not None:
+            self._tiers[(file, executor)] = tier
 
     def remove(self, file: str, executor: str) -> None:
         self.version += 1
         self.i_map.get(file, set()).discard(executor)
         self.e_map.get(executor, set()).discard(file)
+        self._tiers.pop((file, executor), None)
 
     def drop_executor(self, executor: str) -> None:
         """Executor released/failed: forget all its cache contents."""
         for f in self.e_map.pop(executor, set()):
             self.i_map.get(f, set()).discard(executor)
+            self._tiers.pop((f, executor), None)
 
-    def publish(self, executor: str, files: Iterable[str]) -> Tuple[int, int]:
+    def publish(
+        self,
+        executor: str,
+        files: Iterable[str],
+        tiers: Optional[Mapping[str, str]] = None,
+    ) -> Tuple[int, int]:
         """Bulk-sync an executor's cache snapshot (replica heartbeat path).
 
         Replicas periodically publish their full transient-store contents;
         the index diffs the snapshot against its view and applies only the
-        delta.  Returns (added, removed).
+        delta.  ``files`` may be a mapping ``name -> tier`` (tiered stores
+        publish which tier holds each object).  Returns (added, removed).
         """
+        if tiers is None and isinstance(files, Mapping):
+            tiers = files
         snapshot = set(files)
         current = self.e_map.get(executor, set())
         added = snapshot - current
@@ -64,6 +80,10 @@ class CentralizedIndex:
             self.add(f, executor)
         for f in removed:
             self.remove(f, executor)
+        if tiers:
+            for f, t in tiers.items():
+                if self._tiers.get((f, executor)) != t:
+                    self.add(f, executor, tier=t)   # idempotent; bumps version
         return len(added), len(removed)
 
     # -- loose coherence ------------------------------------------------------
@@ -82,6 +102,10 @@ class CentralizedIndex:
     # -- queries used by the scheduler ----------------------------------------
     def locations(self, file: str) -> Set[str]:
         return self.i_map.get(file, set())
+
+    def tier_of(self, file: str, executor: str) -> Optional[str]:
+        """Tier holding ``file`` at ``executor`` (None for flat stores)."""
+        return self._tiers.get((file, executor))
 
     def cached_at(self, executor: str) -> Set[str]:
         return self.e_map.get(executor, set())

@@ -27,6 +27,9 @@ import random as _random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from typing import Union
+
+from ..diffusion.tiers import TieredStore, TierSpec
 from .index import CentralizedIndex
 from .provisioner import DynamicResourceProvisioner, ProvisionRequest
 from .scheduler import DataAwareScheduler
@@ -95,12 +98,18 @@ class SimConfig:
     seed: int = 0
     # fault injection: (time_s, node_index) pairs -> node fails at time
     failures: Tuple[Tuple[float, int], ...] = ()
+    # Optional tier hierarchy (diffusion plane): when set, each node runs a
+    # TieredStore (promote-on-access / demote-on-evict) instead of the flat
+    # TransientStore, and byte throughput is accounted *per tier* rather
+    # than in the single "local" bucket.  ``cache_size_per_node_bytes`` is
+    # ignored in that case — capacities come from the specs.
+    tiers: Optional[Tuple[TierSpec, ...]] = None
 
 
 @dataclass
 class Node:
     name: str
-    store: TransientStore
+    store: Union[TransientStore, TieredStore]
     executors: List[str]
     idle_since: float = 0.0
     lost: bool = False
@@ -236,8 +245,14 @@ class Simulator:
         self.exec_seconds = 0.0
         self._last_acct_t = 0.0
         self._responses_sum = 0.0
-        self.bytes_by_source = {"local": 0.0, "remote": 0.0, "gpfs": 0.0}
-        self._bucket_bytes = {"local": 0.0, "remote": 0.0, "gpfs": 0.0}
+        # Per-source byte buckets: one per tier when a hierarchy is
+        # configured, else the paper's flat "local" bucket; "remote" (peer
+        # NIC) and "gpfs" (persistent) always exist.
+        cache_buckets = (
+            [t.name for t in config.tiers] if config.tiers else ["local"]
+        )
+        self.bytes_by_source = {k: 0.0 for k in cache_buckets + ["remote", "gpfs"]}
+        self._bucket_bytes = dict(self.bytes_by_source)
         self._busy_util_integral = 0.0
         self._series: List[TimePoint] = []
         self.interval_completion: Dict[int, float] = {}
@@ -300,13 +315,22 @@ class Simulator:
         for _ in range(n):
             name = f"n{self._node_counter:04d}"
             self._node_counter += 1
-            store = TransientStore(
-                name,
-                self.cfg.cache_size_per_node_bytes,
-                self.hw.disk_bw_bytes,
-                self.hw.nic_bw_bytes,
-                eviction=self.cfg.eviction,
-            )
+            if self.cfg.tiers:
+                # Tiered diffusion plane: index updates still flow through
+                # the simulator's loose-coherence queue, so the store itself
+                # is index-less here.
+                store = TieredStore(
+                    name, self.cfg.tiers, index=None,
+                    nic_bw_bytes_per_s=self.hw.nic_bw_bytes,
+                )
+            else:
+                store = TransientStore(
+                    name,
+                    self.cfg.cache_size_per_node_bytes,
+                    self.hw.disk_bw_bytes,
+                    self.hw.nic_bw_bytes,
+                    eviction=self.cfg.eviction,
+                )
             executors = [f"{name}.e{i}" for i in range(self.hw.executors_per_node)]
             self.nodes[name] = Node(name, store, executors, idle_since=self.now)
             for e in executors:
@@ -383,9 +407,22 @@ class Simulator:
         data_t = 0.0
         engaged: List[Tuple[BandwidthResource, float]] = []
         use_cache = cfg.policy != "first-available"
+        tiered = bool(cfg.tiers)
         for f in task.files:
             size = self.obj_size[f]
-            if use_cache and node.store.cache.access(f):
+            if use_cache and tiered:
+                # tier-resolved hit: charge the read at the *found* tier's
+                # bandwidth (the access itself promotes the object upward).
+                tier = node.store.access(f)
+                if tier is not None:
+                    bwres = node.store.tier_bw(tier)
+                    data_t += size / max(bwres.available(), 1e-9)
+                    engaged.append((bwres, size))
+                    task.hits_local += 1
+                    self.hits_local += 1
+                    self._bucket_bytes[tier] += size
+                    continue
+            elif use_cache and node.store.cache.access(f):
                 rate = node.store.disk.available()
                 data_t += size / max(rate, 1e-9)
                 engaged.append((node.store.disk, size))
@@ -417,7 +454,7 @@ class Simulator:
         """Least-NIC-loaded live node holding f (per the data fetch policy)."""
         best: Optional[Node] = None
         best_load = None
-        for e in self.index.locations(f):
+        for e in sorted(self.index.locations(f)):   # ties by name: reproducible
             nname = self.exec_node.get(e)
             if nname is None or nname == exclude:
                 continue
@@ -429,12 +466,21 @@ class Simulator:
         return best
 
     def _insert_cached(self, node: Node, f: str, size: float) -> None:
-        """Cache insert; index updates flow via loose-coherence messages."""
-        evicted = node.store.cache.insert(f, size)
-        for ev in evicted:
+        """Cache insert; index updates flow via loose-coherence messages.
+
+        Tiered stores only withdraw presence when an object falls off the
+        *bottom* tier (demotion keeps it node-resident and index-visible).
+        """
+        if self.cfg.tiers:
+            dropped = node.store.admit(f, size)
+            placed = f in node.store
+        else:
+            dropped = node.store.cache.insert(f, size)
+            placed = f in node.store.cache
+        for ev in dropped:
             for e in node.executors:
                 self.index.enqueue_update(self.now, "remove", ev, e)
-        if f in node.store.cache:
+        if placed:
             for e in node.executors:
                 self.index.enqueue_update(self.now, "add", f, e)
 

@@ -1,0 +1,249 @@
+"""Multi-tier data stores: the vertical axis of data diffusion.
+
+The paper's transient store is a single node-local cache in front of a
+persistent store (GPFS).  Real serving nodes have a *hierarchy*: accelerator
+HBM, host DRAM, local disk, then the shared persistent/object store.  This
+module generalizes ``core.store.TransientStore`` into a ``TieredStore`` —
+an ordered stack of ``core.cache.Cache``-accounted tiers, each with its own
+capacity, eviction policy, and read-bandwidth ``BandwidthResource``:
+
+  * an access found in a lower tier *promotes* the object to the top tier
+    (data diffuses toward compute);
+  * a tier eviction *demotes* the victim to the next tier down instead of
+    dropping it (a "miss" becomes a cheap swap-in rather than a refetch);
+  * only the bottom tier's evictions actually leave the node, at which point
+    presence is withdrawn from the ``CentralizedIndex`` and the optional
+    ``on_drop`` callback lets the owner free the real payload.
+
+Presence *per tier* is published to the index (``CentralizedIndex.add``'s
+``tier`` argument) so the dispatcher's tier-aware scoring can rank an HBM
+hit above a disk hit above a peer fetch (``core.dispatch.tier_weights``).
+
+Invariants (property-tested in ``tests/test_diffusion_properties.py``):
+  * an object resides in at most one tier per node;
+  * each tier's used bytes never exceed its capacity;
+  * demotion preserves the node's total object count until the bottom tier
+    evicts (or an object fits in no tier and passes through uncached).
+"""
+
+from __future__ import annotations
+
+import random as _random
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.cache import Cache
+from ..core.index import CentralizedIndex
+from ..core.store import BandwidthResource
+
+__all__ = [
+    "TierSpec",
+    "StoreTier",
+    "TieredStore",
+    "default_tier_weights",
+    "serving_tier_specs",
+]
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """Static description of one tier (top of the list = closest to compute)."""
+
+    name: str                                  # e.g. "hbm", "dram", "disk"
+    capacity_bytes: float
+    bw_bytes_per_s: float = float("inf")       # read bandwidth for swap-ins
+    eviction: str = "lru"
+
+
+def serving_tier_specs(
+    hbm_bytes: float,
+    dram_bytes: float = 0.0,
+    disk_bytes: float = 0.0,
+    hbm_bw: float = float("inf"),
+    dram_bw: float = 50e9,
+    disk_bw: float = 2e9,
+    eviction: str = "lru",
+) -> List[TierSpec]:
+    """The standard serving hierarchy; zero-capacity tiers are omitted."""
+    specs = [TierSpec("hbm", hbm_bytes, hbm_bw, eviction)]
+    if dram_bytes > 0:
+        specs.append(TierSpec("dram", dram_bytes, dram_bw, eviction))
+    if disk_bytes > 0:
+        specs.append(TierSpec("disk", disk_bytes, disk_bw, eviction))
+    return specs
+
+
+def default_tier_weights(specs: Sequence[TierSpec]) -> Dict[str, float]:
+    """Geometric scoring weights: a hit in tier i is worth 2x a hit in i+1.
+
+    A peer fetch / persistent read scores 0 (the object is simply not in the
+    executor's column), so any resident tier outscores any remote source —
+    exactly the ordering the dispatcher's ``max-compute-util`` needs.
+    """
+    return {spec.name: 0.5 ** i for i, spec in enumerate(specs)}
+
+
+class StoreTier:
+    """One level of the hierarchy: cache accounting + a read-bandwidth link."""
+
+    def __init__(self, spec: TierSpec, owner: str, rng: Optional[_random.Random] = None):
+        self.spec = spec
+        self.cache = Cache(spec.capacity_bytes, policy=spec.eviction, rng=rng)
+        self.bw = BandwidthResource(f"{owner}.{spec.name}", spec.bw_bytes_per_s)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+class TieredStore:
+    """A node's tier stack + peer-serving NIC.  See module docstring."""
+
+    def __init__(
+        self,
+        name: str,
+        specs: Sequence[TierSpec],
+        index: Optional[CentralizedIndex] = None,
+        nic_bw_bytes_per_s: float = float("inf"),
+        on_drop: Optional[Callable[[str, float], None]] = None,
+        rng: Optional[_random.Random] = None,
+    ):
+        if not specs:
+            raise ValueError("TieredStore needs at least one tier")
+        self.name = name
+        self.index = index
+        self.tiers = [StoreTier(s, name, rng) for s in specs]
+        self.nic = BandwidthResource(f"{name}.nic", nic_bw_bytes_per_s)
+        self._on_drop = on_drop
+        self._sizes: Dict[str, float] = {}
+        self._tier_idx: Dict[str, int] = {}     # object -> resident tier index
+        self.misses = 0
+        self.hits_by_tier: Dict[str, int] = {t.name: 0 for t in self.tiers}
+        self.demotions = 0
+        self.promotions = 0
+        self.drops = 0
+
+    # -- queries --------------------------------------------------------------
+    def __contains__(self, obj: str) -> bool:
+        return obj in self._tier_idx
+
+    def contains(self, obj: str) -> bool:
+        return obj in self._tier_idx
+
+    def __len__(self) -> int:
+        return len(self._tier_idx)
+
+    def tier_of(self, obj: str) -> Optional[str]:
+        i = self._tier_idx.get(obj)
+        return self.tiers[i].name if i is not None else None
+
+    def size_of(self, obj: str) -> float:
+        return self._sizes[obj]
+
+    def tier_bw(self, tier_name: str) -> BandwidthResource:
+        for t in self.tiers:
+            if t.name == tier_name:
+                return t.bw
+        raise KeyError(tier_name)
+
+    @property
+    def top_tier(self) -> str:
+        return self.tiers[0].name
+
+    def contents(self) -> Dict[str, str]:
+        """Snapshot ``object -> tier name`` (the publish payload)."""
+        return {obj: self.tiers[i].name for obj, i in self._tier_idx.items()}
+
+    # -- access path ----------------------------------------------------------
+    def access(self, obj: str, promote: bool = True) -> Optional[str]:
+        """Hit test; returns the tier the object was *found* in (or None).
+
+        A hit in a lower tier promotes the object to the top tier — the
+        caller charges the swap-in against the found tier's bandwidth.
+        """
+        i = self._tier_idx.get(obj)
+        if i is None:
+            self.misses += 1
+            return None
+        tier = self.tiers[i]
+        tier.cache.access(obj)                 # recency/frequency bump
+        self.hits_by_tier[tier.name] += 1
+        if promote and i > 0:
+            # Only relocate when some higher tier can actually hold the
+            # object — otherwise the "promotion" would land it back where it
+            # is, churning the cache and bumping the index version for
+            # nothing (which defeats the dispatcher's failed-scan memo).
+            size = self._sizes[obj]
+            if any(t.spec.capacity_bytes >= size for t in self.tiers[:i]):
+                self._relocate(obj, target=0)
+                self.promotions += 1
+        return tier.name
+
+    def admit(self, obj: str, size_bytes: float, start_tier: int = 0) -> List[str]:
+        """Place an object (new arrival), demoting victims down the stack.
+
+        Returns the names of objects fully dropped off the bottom tier.  An
+        object fitting in no tier from ``start_tier`` down passes through
+        uncached (the paper's streaming fallback) and is not stored.
+        """
+        if obj in self._tier_idx:
+            return []
+        dropped: List[str] = []
+        self._sizes[obj] = size_bytes
+        self._place(obj, size_bytes, start_tier, dropped)
+        return dropped
+
+    def drop(self, obj: str) -> None:
+        """Explicitly remove an object from whatever tier holds it."""
+        i = self._tier_idx.pop(obj, None)
+        if i is None:
+            return
+        self.tiers[i].cache.remove(obj)
+        size = self._sizes.pop(obj, 0.0)
+        self.drops += 1
+        if self.index is not None:
+            self.index.remove(obj, self.name)
+        if self._on_drop is not None:
+            self._on_drop(obj, size)
+
+    def clear(self) -> None:
+        for obj in list(self._tier_idx):
+            self.drop(obj)
+
+    def publish(self):
+        """Full per-tier snapshot re-sync into the index (recovery path)."""
+        if self.index is None:
+            raise ValueError(f"TieredStore {self.name!r} has no index to publish to")
+        return self.index.publish(self.name, self.contents())
+
+    # -- placement machinery --------------------------------------------------
+    def _place(self, obj: str, size: float, start: int, dropped: List[str]) -> None:
+        for i in range(start, len(self.tiers)):
+            tier = self.tiers[i]
+            if size > tier.spec.capacity_bytes:
+                continue                       # too big for this tier: go down
+            victims = tier.cache.insert(obj, size)
+            self._tier_idx[obj] = i
+            if self.index is not None:
+                self.index.add(obj, self.name, tier=tier.name)
+            for victim in victims:
+                vsize = self._sizes[victim]
+                del self._tier_idx[victim]     # off this tier; re-place below
+                self.demotions += 1
+                self._place(victim, vsize, i + 1, dropped)
+            return
+        # No tier from `start` down can hold it: it leaves the node entirely.
+        size_dropped = self._sizes.pop(obj, 0.0)
+        dropped.append(obj)
+        self.drops += 1
+        if self.index is not None:
+            self.index.remove(obj, self.name)
+        if self._on_drop is not None:
+            self._on_drop(obj, size_dropped)
+
+    def _relocate(self, obj: str, target: int) -> None:
+        """Move a resident object to ``target`` tier (promotion path)."""
+        i = self._tier_idx.pop(obj)
+        self.tiers[i].cache.remove(obj)
+        dropped: List[str] = []
+        self._place(obj, self._sizes[obj], target, dropped)

@@ -1,0 +1,194 @@
+"""Peer-to-peer transfer engine: the horizontal axis of data diffusion.
+
+Resolves a tier-stack miss to the *cheapest* source and models the copy with
+the paper's bandwidth algebra (``core.store``): candidate sources are the
+least-NIC-loaded peer replica holding the object (found through
+``CentralizedIndex.locations``) and the shared persistent store; the engine
+compares ``copy_time`` under current load and takes the minimum, preferring
+a peer on ties — peer cache-to-cache reads are what relieve persistent-store
+contention at scale (arXiv:0808.3546's GPFS result).
+
+Two serving-path realities the DES never modeled:
+
+  * **single-flight dedup** — concurrent misses on one object at one
+    destination share the in-flight transfer instead of issuing duplicates
+    (the second requester pays only the *remaining* time);
+  * **bounded concurrency** — at most ``max_inflight`` transfers progress at
+    once; an overflow transfer starts when a slot frees (its cost includes
+    the queueing delay).
+
+Time is virtual and caller-supplied (``now``), like the router: the engine
+never sleeps.  Bandwidth load (``omega``) is engaged at fetch and released
+lazily by ``drain(now)`` once a transfer's ready time passes — every public
+entry point drains first, so load reflects only genuinely in-flight copies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.index import CentralizedIndex
+from ..core.store import BandwidthResource, copy_time
+from .tiers import TieredStore
+
+__all__ = ["Transfer", "TransferEngine", "TransferStats"]
+
+PERSISTENT = "persistent"
+
+
+@dataclass
+class Transfer:
+    """One in-flight (or completed) copy into a destination's tier stack."""
+
+    obj: str
+    size_bytes: float
+    dest: str
+    source: str                     # "peer:<replica>" or "persistent"
+    start_s: float                  # may exceed request time (slot queueing)
+    ready_s: float
+    kind: str = "demand"            # "demand" | "prefetch"
+    shared_with: int = 0            # later requesters that joined this flight
+
+    def remaining_s(self, now: float) -> float:
+        return max(0.0, self.ready_s - now)
+
+
+@dataclass
+class TransferStats:
+    started: int = 0
+    completed: int = 0
+    shared: int = 0                 # single-flight dedup joins
+    bytes_from_persistent: float = 0.0
+    bytes_from_peers: float = 0.0
+    peer_fetches: int = 0
+    persistent_fetches: int = 0
+    queue_wait_s: float = 0.0       # total slot-queueing delay
+    peak_inflight: int = 0
+
+
+class TransferEngine:
+    """Source selection + transfer accounting over a set of tiered stores."""
+
+    def __init__(
+        self,
+        index: CentralizedIndex,
+        persistent_link: BandwidthResource,
+        stores: Optional[Dict[str, TieredStore]] = None,
+        max_inflight: int = 8,
+        latency_s: float = 0.0,
+        use_peers: bool = True,
+    ):
+        self.index = index
+        self.persistent_link = persistent_link
+        self.stores: Dict[str, TieredStore] = stores if stores is not None else {}
+        self.max_inflight = max(1, int(max_inflight))
+        self.latency_s = latency_s
+        self.use_peers = use_peers
+        self._inflight: Dict[Tuple[str, str], Transfer] = {}
+        self._engaged: Dict[Tuple[str, str], List[Tuple[BandwidthResource, float]]] = {}
+        self.stats = TransferStats()
+
+    # -- lifecycle ------------------------------------------------------------
+    def register(self, name: str, store: TieredStore) -> None:
+        self.stores[name] = store
+
+    def deregister(self, name: str) -> None:
+        self.stores.pop(name, None)
+
+    def drain(self, now: float) -> int:
+        """Release bandwidth of transfers finished by ``now``; returns count."""
+        done = [k for k, tr in self._inflight.items() if tr.ready_s <= now]
+        for key in done:
+            for res, nbytes in self._engaged.pop(key, ()):
+                res.end(nbytes)
+            del self._inflight[key]
+            self.stats.completed += 1
+        return len(done)
+
+    def inflight(self, dest: str, obj: str) -> Optional[Transfer]:
+        return self._inflight.get((dest, obj))
+
+    def remaining_s(self, dest: str, obj: str, now: float) -> float:
+        """Time until a pending copy of obj lands at dest (0 if none/done)."""
+        tr = self._inflight.get((dest, obj))
+        return tr.remaining_s(now) if tr is not None else 0.0
+
+    # -- the fetch path -------------------------------------------------------
+    def fetch(
+        self,
+        obj: str,
+        size_bytes: float,
+        dest: str,
+        now: float,
+        kind: str = "demand",
+        admit_tier: int = 0,
+    ) -> Transfer:
+        """Resolve a miss on ``obj`` at ``dest``: dedup, pick source, charge.
+
+        The object is admitted into the destination's tier stack immediately
+        (bookkeeping — routing must see it) but the returned transfer's
+        ``remaining_s(now)`` is the cost the caller still has to pay.
+        """
+        self.drain(now)
+        key = (dest, obj)
+        existing = self._inflight.get(key)
+        if existing is not None:
+            # Single-flight: this miss rides the transfer already in the air.
+            existing.shared_with += 1
+            self.stats.shared += 1
+            return existing
+
+        start = now
+        if len(self._inflight) >= self.max_inflight:
+            # All slots busy: start when enough of the current flights land
+            # for this one to fit under the cap.
+            ready_times = sorted(tr.ready_s for tr in self._inflight.values())
+            start = ready_times[len(ready_times) - self.max_inflight]
+            self.stats.queue_wait_s += start - now
+
+        dst_store = self.stores[dest]
+        source, src_res = self._pick_source(obj, size_bytes, dest, dst_store)
+        cost = copy_time(size_bytes, src_res, dst_store.nic, latency_s=self.latency_s)
+        src_res.begin()
+        dst_store.nic.begin()
+        tr = Transfer(obj, size_bytes, dest, source, start, start + cost, kind)
+        self._inflight[key] = tr
+        self._engaged[key] = [(src_res, size_bytes), (dst_store.nic, 0.0)]
+        self.stats.started += 1
+        self.stats.peak_inflight = max(self.stats.peak_inflight, len(self._inflight))
+        if source == PERSISTENT:
+            self.stats.persistent_fetches += 1
+            self.stats.bytes_from_persistent += size_bytes
+        else:
+            self.stats.peer_fetches += 1
+            self.stats.bytes_from_peers += size_bytes
+        dst_store.admit(obj, size_bytes, start_tier=admit_tier)
+        return tr
+
+    def _pick_source(
+        self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore
+    ) -> Tuple[str, BandwidthResource]:
+        """Cheapest of {least-loaded peer NIC, persistent store} by copy_time."""
+        best_peer: Optional[str] = None
+        best_nic: Optional[BandwidthResource] = None
+        if self.use_peers:
+            # sorted: least-loaded ties break by name, not set-hash order,
+            # so runs are reproducible across processes (paper: the index
+            # maps are hash maps of *sorted* sets).
+            for e in sorted(self.index.locations(obj)):
+                if e == dest:
+                    continue
+                peer = self.stores.get(e)
+                if peer is None or obj not in peer:
+                    continue
+                if (e, obj) in self._inflight:
+                    continue                    # peer's own copy not landed yet
+                if best_nic is None or peer.nic.omega < best_nic.omega:
+                    best_peer, best_nic = e, peer.nic
+        if best_nic is not None:
+            peer_cost = copy_time(size_bytes, best_nic, dst_store.nic)
+            gpfs_cost = copy_time(size_bytes, self.persistent_link, dst_store.nic)
+            if peer_cost <= gpfs_cost:          # tie -> peer (spare the GPFS)
+                return f"peer:{best_peer}", best_nic
+        return PERSISTENT, self.persistent_link

@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--max-sessions", type=int, default=8,
                     help="per-replica session-slot capacity (transient store)")
+    ap.add_argument("--host-cache-sessions", type=int, default=0,
+                    help="host-DRAM tier slots: HBM evictions demote there "
+                         "and swap back in instead of replaying the prefill")
     ap.add_argument("--eviction", default="lru",
                     choices=("random", "fifo", "lru", "lfu"))
     ap.add_argument("--requests", type=int, default=64)
@@ -39,7 +42,9 @@ def main() -> None:
         cfg = cfg.reduced()
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
                           min_replicas=args.min_replicas, cache_cap=args.cache_cap,
-                          max_sessions=args.max_sessions, eviction=args.eviction)
+                          max_sessions=args.max_sessions,
+                          host_cache_sessions=args.host_cache_sessions,
+                          eviction=args.eviction)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
@@ -50,8 +55,9 @@ def main() -> None:
         srv.step()
     s, r = srv.stats, srv.router.stats
     print(f"served={s.served} prefix_hit={s.hit_rate:.0%} prefills={s.prefills} "
-          f"decode_steps={s.decode_steps} replicas={len(srv.replicas)} "
-          f"scale_ups={r.scale_ups} avg_response={s.avg_response_s * 1e3:.1f}ms "
+          f"swap_ins={s.swap_ins} decode_steps={s.decode_steps} "
+          f"replicas={len(srv.replicas)} scale_ups={r.scale_ups} "
+          f"avg_response={s.avg_response_s * 1e3:.1f}ms "
           f"p50={r.p50_s * 1e3:.1f}ms p99={r.p99_s * 1e3:.1f}ms")
 
 

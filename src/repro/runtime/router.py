@@ -22,16 +22,19 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from ..core.cache import Cache
 from ..core.dispatch import POLICIES, DataAwareDispatcher
 from ..core.index import CentralizedIndex
 from ..core.provisioner import DynamicResourceProvisioner, ProvisionRequest
+from ..core.store import BandwidthResource
 from ..core.task import ExecutorState
+from ..diffusion.prefetch import Prefetcher
+from ..diffusion.tiers import TieredStore, TierSpec, default_tier_weights
+from ..diffusion.transfer import TransferEngine
 
-__all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "ReplicaStore",
-           "RoutedRequest", "RouterStats"]
+__all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "LatencyReservoir",
+           "ReplicaStore", "RoutedRequest", "RouterStats"]
 
 
 @dataclass
@@ -47,6 +50,10 @@ class RoutedRequest:
     replica: Optional[str] = None
     hits: int = 0                       # objects found in the replica's store
     misses: int = 0                     # objects fetched/recomputed on demand
+    # Where each object was resolved: a tier name ("hbm"/"dram"/...), a
+    # transfer source ("peer:<name>"/"persistent"), filled by the router.
+    sources: Dict[str, str] = field(default_factory=dict)
+    restore_cost_s: float = 0.0         # swap-in + transfer time still to pay
 
     @property
     def key(self) -> int:
@@ -60,12 +67,16 @@ class RoutedRequest:
 
 
 class ReplicaStore:
-    """One replica's transient store: cache accounting + index publication.
+    """One replica's transient store: a tier stack + index publication.
 
-    The cache holds object *names and sizes* only (the replica owns the
-    actual KV tensors); every insert/evict is mirrored into the centralized
-    index so phase-1 routing sees it, mirroring the executor->index update
-    messages of Section 3.1.1.
+    Built on ``diffusion.tiers.TieredStore``: the store holds object *names
+    and sizes* only (the replica owns the actual KV tensors); presence per
+    tier is mirrored into the centralized index so phase-1 routing sees it,
+    mirroring the executor->index update messages of Section 3.1.1.  With a
+    single tier this is exactly the flat hit-or-admit store of PR 1; with an
+    HBM + host-DRAM stack, eviction from HBM *demotes* the KV prefix to DRAM
+    instead of dropping it, so a later "miss" is a cheap swap-in rather than
+    a full prefill replay.
     """
 
     def __init__(
@@ -76,36 +87,50 @@ class ReplicaStore:
         eviction: str = "lru",
         rng=None,
         on_evict: Optional[Callable[[str, str], None]] = None,
+        tier_specs: Optional[Sequence[TierSpec]] = None,
+        nic_bw_bytes_per_s: float = float("inf"),
     ):
         self.name = name
         self.index = index
+        if tier_specs is None:
+            tier_specs = [TierSpec("hbm", capacity_bytes, eviction=eviction)]
 
-        def _evicted(obj: str, size: float) -> None:
-            index.remove(obj, name)
+        def _dropped(obj: str, size: float) -> None:
             if on_evict is not None:
                 on_evict(name, obj)   # let the owner free the real payload
 
-        self.cache = Cache(capacity_bytes, policy=eviction, rng=rng, on_evict=_evicted)
+        self.tiers = TieredStore(name, tier_specs, index=index,
+                                 nic_bw_bytes_per_s=nic_bw_bytes_per_s,
+                                 on_drop=_dropped, rng=rng)
 
-    def access(self, obj: str) -> bool:
-        """Hit test + recency/frequency update (the request touched obj)."""
-        return self.cache.access(obj)
+    def __contains__(self, obj: str) -> bool:
+        return obj in self.tiers
+
+    def contains(self, obj: str) -> bool:
+        return obj in self.tiers
+
+    @property
+    def top_tier(self) -> str:
+        return self.tiers.top_tier
+
+    def tier_of(self, obj: str) -> Optional[str]:
+        return self.tiers.tier_of(obj)
+
+    def access(self, obj: str) -> Optional[str]:
+        """Hit test + recency update; returns the tier the object was found
+        in (None on miss).  Lower-tier hits promote toward HBM."""
+        return self.tiers.access(obj)
 
     def admit(self, obj: str, size_bytes: float) -> List[str]:
-        """On-demand caching: object materialized here; returns evictions."""
-        evicted = self.cache.insert(obj, size_bytes)
-        if obj in self.cache:
-            self.index.add(obj, self.name)
-        return evicted
+        """On-demand caching: object materialized here; returns full drops."""
+        return self.tiers.admit(obj, size_bytes)
 
     def drop(self, obj: str) -> None:
-        if obj in self.cache:
-            self.cache.remove(obj)
-            self.index.remove(obj, self.name)
+        self.tiers.drop(obj)
 
     def publish(self) -> Tuple[int, int]:
         """Full-snapshot re-sync (recovery path after index drift/loss)."""
-        return self.index.publish(self.name, self.cache.contents())
+        return self.index.publish(self.name, self.tiers.contents())
 
 
 @dataclass
@@ -116,6 +141,41 @@ class Assignment:
     requests: List[RoutedRequest]
 
 
+class LatencyReservoir:
+    """Fixed-size ring buffer of latency samples.
+
+    ``RouterStats.latencies_s`` grew one float per request forever — a leak
+    at millions-of-users scale.  The reservoir keeps the most recent
+    ``maxlen`` samples; percentiles are exact within that window.  It is
+    list-like where the stats code needs it (append / len / iterate).
+    """
+
+    __slots__ = ("maxlen", "_buf", "_next", "total")
+
+    def __init__(self, maxlen: int = 4096):
+        self.maxlen = int(maxlen)
+        self._buf: List[float] = []
+        self._next = 0          # ring write cursor once the buffer is full
+        self.total = 0          # lifetime sample count (not window-bounded)
+
+    def append(self, x: float) -> None:
+        self.total += 1
+        if len(self._buf) < self.maxlen:
+            self._buf.append(x)
+        else:
+            self._buf[self._next] = x
+            self._next = (self._next + 1) % self.maxlen
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+
 @dataclass
 class RouterStats:
     routed: int = 0
@@ -124,7 +184,11 @@ class RouterStats:
     object_misses: int = 0
     scale_ups: int = 0
     scale_downs: int = 0
-    latencies_s: List[float] = field(default_factory=list)
+    latencies_s: LatencyReservoir = field(default_factory=LatencyReservoir)
+    # diffusion-plane accounting
+    hits_by_tier: Dict[str, int] = field(default_factory=dict)
+    restore_time_s: float = 0.0          # total swap-in + transfer time charged
+    bytes_from_persistent: float = 0.0   # flat mode only; engine tracks tiered
 
     @property
     def hit_rate(self) -> float:
@@ -174,14 +238,26 @@ class CacheAffinityRouter:
         stop_replica: Optional[Callable[[str], None]] = None,
         on_object_evicted: Optional[Callable[[str, str], None]] = None,
         pickup_batch: int = 1,
+        # ---- tiered data-diffusion plane (None = flat PR-1 behavior) ----
+        tier_specs: Optional[Sequence[TierSpec]] = None,
+        tier_weights: Optional[Dict[str, float]] = None,
+        persistent_bw_bytes_per_s: float = float("inf"),
+        nic_bw_bytes_per_s: float = float("inf"),
+        transfer_max_inflight: int = 8,
+        use_peer_transfer: bool = True,
+        prefetch_depth: int = 0,
     ):
         self.index = index if index is not None else CentralizedIndex()
+        self.tier_specs = list(tier_specs) if tier_specs is not None else None
+        if tier_weights is None and self.tier_specs is not None:
+            tier_weights = default_tier_weights(self.tier_specs)
         self.dispatcher = DataAwareDispatcher(
             policy=policy,
             window=window,
             cpu_util_threshold=cpu_util_threshold,
             max_replicas=max_object_replicas,
             index=self.index,
+            tier_weights=tier_weights,
         )
         self.replica_capacity_bytes = replica_capacity_bytes
         self.eviction = eviction
@@ -191,7 +267,21 @@ class CacheAffinityRouter:
         self._stop = stop_replica
         self._on_object_evicted = on_object_evicted
         self.pickup_batch = pickup_batch
+        self.nic_bw_bytes_per_s = nic_bw_bytes_per_s
         self.stores: Dict[str, ReplicaStore] = {}
+        # The transfer engine + prefetcher exist only in tiered mode; the
+        # flat path keeps PR-1's zero-cost admit (no bandwidth model).
+        self.engine: Optional[TransferEngine] = None
+        self.prefetcher: Optional[Prefetcher] = None
+        if self.tier_specs is not None:
+            self.persistent_link = BandwidthResource(
+                "persistent.link", persistent_bw_bytes_per_s)
+            self.engine = TransferEngine(
+                self.index, self.persistent_link,
+                max_inflight=transfer_max_inflight, use_peers=use_peer_transfer)
+            if prefetch_depth > 0:
+                self.prefetcher = Prefetcher(self.engine, object_size_fn)
+        self.prefetch_depth = prefetch_depth
         self._requests: Dict[int, RoutedRequest] = {}   # in flight, by id
         self._idle_since: Dict[str, Optional[float]] = {}
         self._pending_provisions: List[ProvisionRequest] = []
@@ -218,7 +308,11 @@ class CacheAffinityRouter:
             self.index,
             eviction=eviction or self.eviction,
             on_evict=self._on_object_evicted,
+            tier_specs=self.tier_specs,
+            nic_bw_bytes_per_s=self.nic_bw_bytes_per_s,
         )
+        if self.engine is not None:
+            self.engine.register(name, self.stores[name].tiers)
         self.dispatcher.register_executor(name)
         # idle clock starts at first observation (None), NOT at 0.0 — under
         # wall-clock time a 0.0 stamp would make a fresh replica look idle
@@ -228,6 +322,8 @@ class CacheAffinityRouter:
 
     def remove_replica(self, name: str) -> None:
         self.dispatcher.deregister_executor(name)   # drops its index entries
+        if self.engine is not None:
+            self.engine.deregister(name)
         self.stores.pop(name, None)
         self._idle_since.pop(name, None)
 
@@ -255,6 +351,8 @@ class CacheAffinityRouter:
     def tick(self, now: Optional[float] = None) -> List[Assignment]:
         """Drive elasticity + phase-1 routing; returns new assignments."""
         now = time.monotonic() if now is None else now
+        if self.engine is not None:
+            self.engine.drain(now)      # release bandwidth of landed copies
         self._complete_provisions(now)
         self._maybe_release(now)
         return self._drain_notify(now)
@@ -277,17 +375,64 @@ class CacheAffinityRouter:
             request.dispatch_time_s = now
             self.stats.routed += 1
             for obj in request.objects:
-                if use_cache and store.access(obj):
-                    request.hits += 1
-                    self.stats.object_hits += 1
-                else:
-                    # on-demand caching: the replica materializes the object
-                    # (prefix replay / peer transfer) and keeps it.
+                if not use_cache:
+                    # first-available: every access replays from persistent
+                    # storage and nothing is kept.
                     request.misses += 1
                     self.stats.object_misses += 1
-                    if use_cache:
-                        store.admit(obj, self.object_size_fn(obj))
+                    self.stats.bytes_from_persistent += self.object_size_fn(obj)
+                    continue
+                tier = store.access(obj)
+                if tier is not None:
+                    request.hits += 1
+                    self.stats.object_hits += 1
+                    self.stats.hits_by_tier[tier] = \
+                        self.stats.hits_by_tier.get(tier, 0) + 1
+                    request.sources[obj] = tier
+                    request.restore_cost_s += self._hit_cost(
+                        store, replica, obj, tier, now)
+                else:
+                    # miss: diffuse the object in — cheapest of peer NIC vs
+                    # persistent store (tiered mode), or PR-1's zero-cost
+                    # admit (flat mode).
+                    request.misses += 1
+                    self.stats.object_misses += 1
+                    size = self.object_size_fn(obj)
+                    if self.engine is not None:
+                        tr = self.engine.fetch(obj, size, replica, now)
+                        request.sources[obj] = tr.source
+                        request.restore_cost_s += tr.remaining_s(now)
+                    else:
+                        request.sources[obj] = "persistent"
+                        self.stats.bytes_from_persistent += size
+                        store.admit(obj, size)
+            self.stats.restore_time_s += request.restore_cost_s
+        # Warm this replica for the next queued work while it computes: the
+        # transfer overlaps the batch it was just assigned (prefetch plane).
+        if self.prefetcher is not None and self.dispatcher.queue_length() > 0:
+            for item in self.dispatcher.peek(self.prefetch_depth):
+                self.prefetcher.warm(replica, self.dispatcher.objects_of(item), now)
         return Assignment(replica, requests)
+
+    def _hit_cost(self, store: ReplicaStore, replica: str, obj: str,
+                  tier: str, now: float) -> float:
+        """Swap-in cost of a hit: 0 at the top tier; lower tiers pay a read
+        at the tier's bandwidth; an object whose transfer is still in flight
+        (admitted early by the engine) pays the remaining transfer time."""
+        if self.prefetcher is not None:
+            self.prefetcher.on_access(replica, obj, now)
+        pending = self.engine.remaining_s(replica, obj, now) if self.engine else 0.0
+        if tier == store.top_tier:
+            return pending
+        bw = store.tiers.tier_bw(tier)
+        swap = self.object_size_fn(obj) / max(bw.available(), 1e-9)
+        return max(pending, swap)
+
+    def persistent_bytes_read(self) -> float:
+        """Total bytes pulled from the persistent store (both modes)."""
+        if self.engine is not None:
+            return self.engine.stats.bytes_from_persistent + self.stats.bytes_from_persistent
+        return self.stats.bytes_from_persistent
 
     # ------------------------------------------------------------- complete
     def complete(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:

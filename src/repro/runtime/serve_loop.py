@@ -25,6 +25,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.provisioner import DynamicResourceProvisioner
+from ..diffusion.tiers import TierSpec
 from ..models import cache_init, init_params, make_decode_step, make_prefill_step
 from ..models.sharding import ShardCtx
 from .router import Assignment, CacheAffinityRouter, RoutedRequest
@@ -70,8 +71,10 @@ class Replica:
 class ServeStats:
     served: int = 0
     prefix_hits: int = 0
+    swap_ins: int = 0               # prefix found in a lower tier (host DRAM)
     prefills: int = 0
     decode_steps: int = 0
+    restore_time_s: float = 0.0     # tier swap-in / transfer cost charged
     response_times: List[float] = field(default_factory=list)
 
     @property
@@ -100,6 +103,7 @@ class DiffusionServer:
         min_replicas: int = 1,
         cache_cap: int = 128,
         max_sessions: int = 8,
+        host_cache_sessions: int = 0,
         eviction: str = "lru",
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
@@ -111,6 +115,16 @@ class DiffusionServer:
         shape = ShapeConfig("serve", "prefill", cache_cap, 1)
         self.prefill_fn = jax.jit(make_prefill_step(cfg, shape, ctx))
         self.decode_fn = jax.jit(make_decode_step(cfg, ctx))
+        # host_cache_sessions > 0 enables the tiered diffusion plane: HBM
+        # session slots backed by a host-DRAM tier, so an HBM eviction
+        # demotes the KV prefix instead of dropping it and a later request
+        # swaps it back in without a prefill replay.
+        tier_specs = None
+        if host_cache_sessions > 0:
+            tier_specs = [
+                TierSpec("hbm", float(max_sessions), eviction=eviction),
+                TierSpec("dram", float(host_cache_sessions), eviction=eviction),
+            ]
         self.router = CacheAffinityRouter(
             policy=policy,
             window=64,
@@ -119,6 +133,7 @@ class DiffusionServer:
             replica_capacity_bytes=float(max_sessions),
             eviction=eviction,
             object_size_fn=lambda obj: 1.0,
+            tier_specs=tier_specs,
             provisioner=DynamicResourceProvisioner(
                 max_nodes=max_replicas, min_nodes=min_replicas,
                 policy="watermark", tasks_per_node_target=4.0,
@@ -183,6 +198,14 @@ class DiffusionServer:
         if routed.hits and state is not None:
             req.prefix_hit = True
             self.stats.prefix_hits += 1
+            # Charge restore by the tier the prefix was found in: an HBM hit
+            # continues in place for free; a lower-tier (host DRAM) hit is a
+            # swap-in — far cheaper than a prefill replay, but not free.
+            found = routed.sources.get(session_object(sid))
+            store = self.router.stores.get(replica.name)
+            if store is not None and found is not None and found != store.top_tier:
+                self.stats.swap_ins += 1
+            self.stats.restore_time_s += routed.restore_cost_s
             caches, pos = state["caches"], state["pos"]
         else:
             # "copy from persistent storage": replay the prompt (prefill).
@@ -212,7 +235,7 @@ class DiffusionServer:
             # pass-through objects larger than the store are never admitted,
             # so their payloads must not linger unaccounted either).
             store = self.router.stores.get(replica.name)
-            if store is not None and session_object(sid) in store.cache:
+            if store is not None and store.contains(session_object(sid)):
                 replica.sessions[sid] = {"caches": caches, "pos": pos}
             else:
                 replica.sessions.pop(sid, None)

@@ -1,0 +1,412 @@
+"""Tiered data-diffusion plane tests: tiers, transfers, prefetch, routing."""
+
+import pytest
+
+from repro.core.dispatch import DataAwareDispatcher
+from repro.core.index import CentralizedIndex
+from repro.core.store import BandwidthResource
+from repro.core.task import ExecutorState
+from repro.diffusion import (
+    Prefetcher,
+    TieredStore,
+    TierSpec,
+    TransferEngine,
+    default_tier_weights,
+)
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+
+def two_tier_store(name="n0", index=None, hbm=4.0, dram=8.0, **kw):
+    return TieredStore(
+        name,
+        [TierSpec("hbm", hbm, 100.0), TierSpec("dram", dram, 10.0)],
+        index=index,
+        **kw,
+    )
+
+
+# --------------------------------------------------------------------- tiers
+class TestTieredStore:
+    def test_admit_lands_in_top_tier(self):
+        s = two_tier_store()
+        s.admit("a", 1.0)
+        assert s.tier_of("a") == "hbm"
+        assert "a" in s
+
+    def test_eviction_demotes_instead_of_dropping(self):
+        s = two_tier_store(hbm=2.0, dram=8.0)
+        s.admit("a", 1.0)
+        s.admit("b", 1.0)
+        s.admit("c", 1.0)            # hbm full: LRU victim "a" demotes
+        assert s.tier_of("a") == "dram"
+        assert s.tier_of("b") == "hbm" and s.tier_of("c") == "hbm"
+        assert len(s) == 3           # demotion preserved the object count
+        assert s.demotions == 1
+
+    def test_lower_tier_access_promotes(self):
+        s = two_tier_store(hbm=2.0, dram=8.0)
+        for obj in ("a", "b", "c"):  # "a" ends up demoted to dram
+            s.admit(obj, 1.0)
+        found = s.access("a")
+        assert found == "dram"       # charged at the tier it was *found* in
+        assert s.tier_of("a") == "hbm"   # ...but now resides at the top
+        assert s.promotions == 1
+        # promotion displaced the LRU top-tier object down, not out
+        assert sorted(filter(None, (s.tier_of(o) for o in "abc"))) == \
+            ["dram", "hbm", "hbm"]
+
+    def test_bottom_tier_eviction_drops_with_callback(self):
+        dropped = []
+        s = TieredStore("n0", [TierSpec("hbm", 1.0), TierSpec("dram", 1.0)],
+                        on_drop=lambda obj, size: dropped.append(obj))
+        s.admit("a", 1.0)
+        s.admit("b", 1.0)            # a -> dram
+        s.admit("c", 1.0)            # b -> dram, a falls off the bottom
+        assert dropped == ["a"]
+        assert "a" not in s and len(s) == 2
+
+    def test_index_tracks_per_tier_presence(self):
+        idx = CentralizedIndex()
+        s = two_tier_store(index=idx, hbm=2.0, dram=8.0)
+        s.admit("a", 1.0)
+        assert idx.locations("a") == {"n0"}
+        assert idx.tier_of("a", "n0") == "hbm"
+        s.admit("b", 1.0)
+        s.admit("c", 1.0)            # "a" demoted
+        assert idx.tier_of("a", "n0") == "dram"
+        s.drop("a")
+        assert idx.locations("a") == set()
+
+    def test_oversized_object_passes_through_uncached(self):
+        s = two_tier_store(hbm=2.0, dram=4.0)
+        dropped = s.admit("big", 100.0)
+        assert dropped == ["big"]
+        assert "big" not in s
+
+    def test_object_bigger_than_top_tier_lands_lower(self):
+        s = two_tier_store(hbm=2.0, dram=8.0)
+        s.admit("big", 5.0)
+        assert s.tier_of("big") == "dram"
+
+    def test_unpromotable_object_is_not_churned_on_access(self):
+        # An object that fits no higher tier must not be "promoted" back
+        # into its own tier on every hit (cache churn + index version bumps
+        # that defeat the dispatcher's failed-scan memoization).
+        idx = CentralizedIndex()
+        s = two_tier_store(index=idx, hbm=2.0, dram=8.0)
+        s.admit("big", 5.0)
+        v0 = idx.version
+        for _ in range(3):
+            assert s.access("big") == "dram"
+        assert s.promotions == 0
+        assert s.tier_of("big") == "dram"
+        assert idx.version == v0
+
+    def test_publish_resyncs_per_tier_snapshot(self):
+        idx = CentralizedIndex()
+        s = two_tier_store(index=idx, hbm=2.0, dram=8.0)
+        for obj in ("a", "b", "c"):
+            s.admit(obj, 1.0)
+        idx.drop_executor("n0")
+        assert idx.cached_at("n0") == set()
+        added, removed = s.publish()
+        assert (added, removed) == (3, 0)
+        assert idx.tier_of("a", "n0") == "dram"
+        assert idx.tier_of("c", "n0") == "hbm"
+
+
+# ------------------------------------------------------------------ transfers
+def engine_fixture(use_peers=True, max_inflight=8, persistent_bw=10.0):
+    idx = CentralizedIndex()
+    link = BandwidthResource("gpfs", persistent_bw)
+    eng = TransferEngine(idx, link, max_inflight=max_inflight,
+                         use_peers=use_peers)
+    stores = {}
+    for name in ("r0", "r1"):
+        st = TieredStore(name, [TierSpec("hbm", 100.0)], index=idx,
+                         nic_bw_bytes_per_s=100.0)
+        stores[name] = st
+        eng.register(name, st)
+    return idx, link, eng, stores
+
+
+class TestTransferEngine:
+    def test_miss_with_no_replica_fetches_from_persistent(self):
+        _, _, eng, _ = engine_fixture()
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert tr.source == "persistent"
+        assert eng.stats.bytes_from_persistent == 10.0
+        assert eng.stats.bytes_from_peers == 0.0
+
+    def test_peer_replica_beats_loaded_persistent_store(self):
+        _, _, eng, stores = engine_fixture(persistent_bw=10.0)
+        stores["r1"].admit("obj", 10.0)     # r1 holds a replica (100 B/s NIC)
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert tr.source == "peer:r1"
+        assert eng.stats.bytes_from_peers == 10.0
+        assert eng.stats.bytes_from_persistent == 0.0
+
+    def test_saturated_peer_nic_falls_back_to_persistent(self):
+        _, _, eng, stores = engine_fixture(persistent_bw=100.0)
+        stores["r1"].admit("obj", 10.0)
+        for _ in range(50):                 # crush r1's NIC: eta = 100/51
+            stores["r1"].nic.begin()
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert tr.source == "persistent"
+
+    def test_use_peers_false_always_reads_persistent(self):
+        _, _, eng, stores = engine_fixture(use_peers=False)
+        stores["r1"].admit("obj", 10.0)
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert tr.source == "persistent"
+
+    def test_single_flight_dedup_shares_the_transfer(self):
+        _, link, eng, _ = engine_fixture()
+        t1 = eng.fetch("obj", 10.0, "r0", now=0.0)
+        t2 = eng.fetch("obj", 10.0, "r0", now=0.4)   # still in flight
+        assert t2 is t1
+        assert eng.stats.shared == 1
+        assert eng.stats.started == 1                # no duplicate copy
+        assert link.bytes_served + eng.stats.bytes_from_persistent == 10.0
+        # the joiner pays only the remaining time
+        assert t2.remaining_s(0.4) == pytest.approx(t1.ready_s - 0.4)
+
+    def test_transfer_completion_releases_bandwidth(self):
+        _, link, eng, stores = engine_fixture()
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert link.omega == 1 and stores["r0"].nic.omega == 1
+        eng.drain(tr.ready_s + 1e-9)
+        assert link.omega == 0 and stores["r0"].nic.omega == 0
+        assert eng.stats.completed == 1
+
+    def test_bounded_concurrency_queues_the_overflow(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        t1 = eng.fetch("a", 10.0, "r0", now=0.0)
+        t2 = eng.fetch("b", 10.0, "r0", now=0.0)
+        assert t2.start_s == pytest.approx(t1.ready_s)   # waits for the slot
+        assert eng.stats.queue_wait_s > 0
+
+    def test_inflight_peer_copy_is_not_a_source(self):
+        # r1's own copy of obj is still in the air: r0 must not read from it.
+        idx, _, eng, stores = engine_fixture()
+        eng.fetch("obj", 10.0, "r1", now=0.0)      # r1 fetching (admits early)
+        assert "obj" in stores["r1"]
+        tr = eng.fetch("obj", 10.0, "r0", now=0.0)
+        assert tr.source == "persistent"
+
+
+# ------------------------------------------------------------------- prefetch
+class TestPrefetcher:
+    def test_warm_issues_prefetch_and_counts_useful(self):
+        _, _, eng, _ = engine_fixture()
+        pf = Prefetcher(eng, size_fn=lambda obj: 10.0)
+        started = pf.warm("r0", ["obj"], now=0.0)
+        assert len(started) == 1 and started[0].kind == "prefetch"
+        ready = started[0].ready_s
+        pf.on_access("r0", "obj", now=ready + 1.0)
+        assert pf.stats.useful == 1 and pf.stats.late == 0
+
+    def test_access_before_landing_counts_late(self):
+        _, _, eng, _ = engine_fixture()
+        pf = Prefetcher(eng, size_fn=lambda obj: 10.0)
+        (tr,) = pf.warm("r0", ["obj"], now=0.0)
+        pf.on_access("r0", "obj", now=tr.ready_s / 2)
+        assert pf.stats.late == 1 and pf.stats.useful == 0
+
+    def test_resident_objects_are_not_rewarmed(self):
+        _, _, eng, stores = engine_fixture()
+        stores["r0"].admit("obj", 10.0)
+        pf = Prefetcher(eng, size_fn=lambda obj: 10.0)
+        assert pf.warm("r0", ["obj"], now=0.0) == []
+        assert pf.stats.redundant == 1
+
+
+# ------------------------------------------------- tier-aware dispatch scoring
+class TestTierAwareDispatch:
+    def make(self, weights):
+        idx = CentralizedIndex()
+        d = DataAwareDispatcher(policy="max-compute-util", index=idx,
+                                tier_weights=weights)
+        for e in ("e0", "e1"):
+            d.register_executor(e)
+        return idx, d
+
+    def submit(self, d, objects):
+        class Item:
+            def __init__(self):
+                self.key = "t0"
+                self.objects = objects
+        d.submit(Item())
+
+    def test_hbm_holder_outscores_disk_holder(self):
+        weights = {"hbm": 1.0, "dram": 0.5, "disk": 0.25}
+        idx, d = self.make(weights)
+        idx.add("f", "e0", tier="disk")
+        idx.add("f", "e1", tier="hbm")
+        self.submit(d, ("f",))
+        executor, _ = d.notify()
+        assert executor == "e1"              # both free: fastest tier wins
+
+    def test_disk_holder_outscores_cold_executor(self):
+        weights = {"hbm": 1.0, "disk": 0.25}
+        idx, d = self.make(weights)
+        idx.add("f", "e0", tier="disk")
+        self.submit(d, ("f",))
+        executor, _ = d.notify()
+        assert executor == "e0"              # any tier beats a peer fetch
+
+    def test_flat_index_entries_default_to_weight_one(self):
+        idx, d = self.make({"hbm": 1.0})
+        idx.add("f", "e0")                   # no tier info (flat store)
+        self.submit(d, ("f",))
+        executor, _ = d.notify()
+        assert executor == "e0"
+
+    def test_weighted_pick_items_prefers_fast_tier_work(self):
+        weights = {"hbm": 1.0, "disk": 0.25}
+        idx, d = self.make(weights)
+        idx.add("fast", "e0", tier="hbm")
+        idx.add("slow", "e0", tier="disk")
+
+        class Item:
+            def __init__(self, key, objects):
+                self.key = key
+                self.objects = objects
+        d.submit(Item("slow-item", ("slow",)))
+        d.submit(Item("fast-item", ("fast",)))
+        d.set_state("e0", ExecutorState.PENDING)
+        picked = d.pick_items("e0", m=1)
+        assert [p.key for p in picked] == ["fast-item"]
+
+
+# ----------------------------------------------------------- router end-to-end
+class TestTieredRouter:
+    def make_router(self, replicas=2, **kw):
+        r = CacheAffinityRouter(
+            policy="good-cache-compute",
+            object_size_fn=lambda obj: 1.0,
+            tier_specs=[TierSpec("hbm", 2.0), TierSpec("dram", 8.0, 10.0)],
+            persistent_bw_bytes_per_s=10.0,
+            nic_bw_bytes_per_s=100.0,
+            **kw,
+        )
+        for _ in range(replicas):
+            r.add_replica()
+        return r
+
+    def pump(self, router, request, now):
+        assignments = router.submit(request, now=now)
+        served = []
+        while assignments:
+            a = assignments.pop(0)
+            for rr in a.requests:
+                served.append((a.replica, rr))
+                assignments.extend(router.complete(rr, now=now + 1.0))
+        return served
+
+    def test_demoted_prefix_is_a_cheap_swap_in_not_a_miss(self):
+        r = self.make_router(replicas=1)          # all sessions share one HBM
+        home = self.pump(r, RoutedRequest(0, ("kv:a",)), now=0.0)[0][0]
+        # two more sessions overflow the 2-slot HBM: kv:a demotes to DRAM
+        for i, obj in enumerate(("kv:b", "kv:c"), start=1):
+            self.pump(r, RoutedRequest(i, (obj,)), now=float(i) * 10)
+        store = r.stores[home]
+        assert store.tier_of("kv:a") == "dram"       # demoted, not dropped
+        (replica, rr), = self.pump(r, RoutedRequest(9, ("kv:a",)), now=100.0)
+        assert rr.hits == 1 and rr.misses == 0       # swap-in counts as a hit
+        assert rr.sources["kv:a"] == "dram"
+        assert rr.restore_cost_s > 0                 # ...but it is not free
+        assert r.stats.hits_by_tier.get("dram", 0) >= 1
+
+    def test_miss_resolves_via_peer_when_replica_exists(self):
+        r = self.make_router(max_object_replicas=4)
+        # land kv:x on one replica, then force the other replica to serve it
+        first = self.pump(r, RoutedRequest(0, ("kv:x",)), now=0.0)
+        home = first[0][0]
+        other = next(n for n in r.replicas() if n != home)
+        r.engine.drain(1e9)                          # initial fetch landed
+        req = RoutedRequest(1, ("kv:x",))
+        r.dispatcher.submit(req)
+        r.dispatcher.set_state(other, ExecutorState.PENDING)
+        picked = r.dispatcher.pick_items(other, m=1)
+        a = r._start(other, picked, now=50.0)
+        assert a.requests[0].sources["kv:x"] == f"peer:{home}"
+        assert r.engine.stats.bytes_from_peers == 1.0
+        assert r.persistent_bytes_read() == 1.0      # only the original miss
+
+    def test_flat_router_unchanged_without_tier_specs(self):
+        r = CacheAffinityRouter(policy="good-cache-compute",
+                                object_size_fn=lambda obj: 1.0)
+        r.add_replica()
+        assert r.engine is None and r.prefetcher is None
+        (replica, rr), = self.pump(r, RoutedRequest(0, ("kv:a",)), now=0.0)
+        assert rr.misses == 1 and rr.restore_cost_s == 0.0
+        assert r.persistent_bytes_read() == 1.0
+
+    def test_prefetch_warms_next_queued_work(self):
+        r = CacheAffinityRouter(
+            policy="max-compute-util",
+            object_size_fn=lambda obj: 1.0,
+            tier_specs=[TierSpec("hbm", 4.0), TierSpec("dram", 8.0, 10.0)],
+            persistent_bw_bytes_per_s=10.0,
+            nic_bw_bytes_per_s=100.0,
+            prefetch_depth=2,
+        )
+        name = r.add_replica()
+        # req0 occupies the only replica; req1/req2 queue behind it.  When
+        # req1 is assigned (pickup), req2's objects start moving in the
+        # background — the transfer rides under req1's compute.
+        a1 = r.submit(RoutedRequest(0, ("kv:a",)), now=0.0)
+        assert len(a1) == 1
+        r.submit(RoutedRequest(1, ("kv:b",)), now=0.01)
+        r.submit(RoutedRequest(2, ("kv:next",)), now=0.02)
+        assert r.prefetcher.stats.issued == 0        # nothing assigned yet
+        out1 = r.complete(a1[0].requests[0], now=1.0)   # req1 starts
+        assert [rr.request_id for a in out1 for rr in a.requests] == [1]
+        assert r.prefetcher.stats.issued == 1        # req2's object warming
+        assert "kv:next" in r.stores[name]           # landed in the tiers
+        # by req1's completion the transfer has landed: req2 is a hit
+        out2 = r.complete(out1[0].requests[0], now=10.0)
+        rr = out2[0].requests[0]
+        assert rr.request_id == 2
+        assert rr.hits == 1 and rr.misses == 0
+        assert r.prefetcher.stats.useful == 1
+
+
+# ------------------------------------------------------------- simulator tiers
+def test_simulator_runs_tier_hierarchy_with_per_tier_accounting():
+    from repro.core.simulator import SimConfig, run_experiment
+    from repro.core.workload import locality_workload
+
+    wl = locality_workload(locality=10.0, num_tasks=400, arrival_rate=200.0,
+                           compute_time_s=0.01)
+    tiers = (TierSpec("hbm", 8 * 1024**2, 40e9),
+             TierSpec("dram", 64 * 1024**2, 10e9))
+    res = run_experiment(wl, SimConfig(
+        policy="good-cache-compute", max_nodes=4, static_nodes=4,
+        tiers=tiers, coherence_delay_s=0.0))
+    assert res.tasks_done == 400
+    # buckets generalized: per-tier keys replace the flat "local" bucket
+    assert set(res.bytes_by_source) == {"hbm", "dram", "remote", "gpfs"}
+    assert res.hits_local + res.hits_remote + res.misses == 400
+    # high reuse + tight HBM: both tiers served bytes (demotions got re-hit)
+    assert res.bytes_by_source["hbm"] > 0
+    assert res.bytes_by_source["dram"] > 0
+    assert res.hit_rate_local > 0.5
+
+
+def test_default_tier_weights_are_monotone_decreasing():
+    specs = [TierSpec("hbm", 1.0), TierSpec("dram", 1.0), TierSpec("disk", 1.0)]
+    w = default_tier_weights(specs)
+    assert w["hbm"] > w["dram"] > w["disk"] > 0.0
+
+
+def test_bench_diffusion_tiers_smoke():
+    """The acceptance benchmark at tiny scale: verdict row must hold."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import bench_diffusion_tiers
+    rows = bench_diffusion_tiers.main(num_requests=300)
+    verdict = [r for r in rows if r[0].endswith("tiered_beats_flat")]
+    assert len(verdict) == 1
+    assert "ok=True" in verdict[0][2]

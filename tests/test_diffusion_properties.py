@@ -1,0 +1,117 @@
+"""Property tests for TieredStore invariants (hypothesis-shim compatible).
+
+Invariants, driven by random admit/access/drop sequences:
+  1. an object resides in at most one tier per node (tier contents are
+     disjoint and their union is exactly the store's resident set);
+  2. per-tier used bytes never exceed the tier's capacity (and match the
+     sum of the resident objects' sizes);
+  3. demotion conserves objects: an admit changes the resident count by
+     exactly (placed ? 1 : 0) minus the objects that fell off the bottom
+     tier — nothing vanishes mid-stack.
+"""
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.index import CentralizedIndex
+from repro.diffusion.tiers import TieredStore, TierSpec
+
+CAPS = (4.0, 6.0, 8.0)          # hbm, dram, disk
+TIER_NAMES = ("hbm", "dram", "disk")
+
+
+def make_store(index=None):
+    return TieredStore(
+        "n0",
+        [TierSpec(n, c) for n, c in zip(TIER_NAMES, CAPS)],
+        index=index,
+    )
+
+
+def check_invariants(store: TieredStore, index: CentralizedIndex = None):
+    seen = {}
+    for tier in store.tiers:
+        # (2) capacity respected, byte accounting consistent
+        assert tier.cache.used_bytes <= tier.spec.capacity_bytes + 1e-9
+        assert abs(tier.cache.used_bytes - sum(
+            tier.cache.size_of(o) for o in tier.cache.contents()
+        )) <= 1e-6
+        for obj in tier.cache.contents():
+            # (1) at most one tier per node
+            assert obj not in seen, f"{obj} in both {seen.get(obj)} and {tier.name}"
+            seen[obj] = tier.name
+    # the store's resident map agrees with the per-tier caches
+    assert seen == store.contents()
+    if index is not None:
+        # index presence mirrors residency, with the correct tier label
+        assert index.cached_at("n0") == set(seen)
+        for obj, tier_name in seen.items():
+            assert index.tier_of(obj, "n0") == tier_name
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["admit", "access", "drop"]),
+        st.integers(min_value=0, max_value=12),      # object id (reuse-heavy)
+        st.floats(min_value=0.5, max_value=5.0),     # size on admit
+    ),
+    min_size=1,
+    max_size=60,
+)
+
+
+@settings(max_examples=50)
+@given(ops=ops_strategy)
+def test_random_op_sequences_hold_invariants(ops):
+    index = CentralizedIndex()
+    store = make_store(index)
+    for kind, oid, size in ops:
+        obj = f"o{oid}"
+        if kind == "admit":
+            store.admit(obj, size)
+        elif kind == "access":
+            store.access(obj)
+        else:
+            store.drop(obj)
+        check_invariants(store, index)
+
+
+@settings(max_examples=50)
+@given(ops=ops_strategy)
+def test_admit_conserves_objects_until_bottom_eviction(ops):
+    store = make_store()
+    for kind, oid, size in ops:
+        obj = f"o{oid}"
+        if kind != "admit":
+            if kind == "access":
+                store.access(obj)
+            else:
+                store.drop(obj)
+            continue
+        already = obj in store
+        before = len(store)
+        dropped = store.admit(obj, size)
+        if already:
+            assert dropped == [] and len(store) == before
+            continue
+        placed = obj in store
+        lost = [d for d in dropped if d != obj]      # fell off the bottom
+        # (3) conservation: every displaced object either moved down a tier
+        # or is reported in `dropped` — none silently vanish.
+        assert len(store) == before + (1 if placed else 0) - len(lost)
+        if not placed:
+            # pass-through object is reported as dropped, not retained
+            assert obj in dropped
+
+
+@settings(max_examples=30)
+@given(
+    sizes=st.lists(st.floats(min_value=0.5, max_value=3.5),
+                   min_size=1, max_size=30)
+)
+def test_fill_only_workload_never_overflows_any_tier(sizes):
+    store = make_store()
+    for i, size in enumerate(sizes):
+        store.admit(f"o{i}", size)
+        check_invariants(store)
+    total_cap = sum(CAPS)
+    assert sum(store.size_of(o) for o in store.contents()) <= total_cap + 1e-9

@@ -163,3 +163,21 @@ def test_server_prefix_affinity_beats_first_available():
     fa = run("first-available")
     assert aff.hit_rate >= fa.hit_rate
     assert aff.hit_rate > 0.5
+
+
+def test_server_host_dram_tier_swaps_in_without_prefill():
+    """Tiered serving: an HBM-evicted session demotes to the host-DRAM tier
+    and a later request swaps it back in instead of replaying the prefill."""
+    cfg = get_arch("internlm2-1.8b").reduced()
+    rng = np.random.default_rng(0)
+    prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(12,)) for i in range(3)}
+    srv = DiffusionServer(cfg, policy="good-cache-compute", max_replicas=1,
+                          min_replicas=1, cache_cap=48, max_sessions=2,
+                          host_cache_sessions=4, seed=1)
+    for _ in range(2):
+        for sid, p in prompts.items():      # 3 sessions > 2 HBM slots
+            srv.submit(sid, p, max_new_tokens=2)
+        srv.step()
+    assert srv.stats.swap_ins >= 1          # demoted prefix reused, not replayed
+    assert srv.stats.prefix_hits >= srv.stats.swap_ins
+    assert srv.stats.prefills < srv.stats.served

@@ -1,0 +1,109 @@
+"""Direct unit coverage for the Section-4.1 bandwidth model (core/store.py)."""
+
+import pytest
+
+from repro.core.store import (
+    BandwidthResource,
+    DataObject,
+    PersistentStore,
+    TransientStore,
+    copy_time,
+    eta,
+)
+
+
+class TestEta:
+    def test_unloaded_gets_ideal_bandwidth(self):
+        assert eta(100.0, 0) == 100.0
+
+    def test_negative_load_clamps_to_ideal(self):
+        assert eta(100.0, -3) == 100.0
+
+    def test_fair_processor_sharing(self):
+        # omega concurrent transfers split nu evenly: eta = nu / omega.
+        for omega in (1, 2, 5, 64):
+            assert eta(100.0, omega) == pytest.approx(100.0 / omega)
+
+    def test_single_transfer_sees_full_rate(self):
+        assert eta(7.5, 1) == 7.5
+
+
+class TestBandwidthResource:
+    def test_begin_end_load_accounting(self):
+        r = BandwidthResource("link", 100.0)
+        assert r.omega == 0
+        r.begin()
+        r.begin()
+        assert r.omega == 2
+        r.end(10.0)
+        assert r.omega == 1
+        r.end(5.0)
+        assert r.omega == 0
+        assert r.bytes_served == pytest.approx(15.0)
+
+    def test_end_underflow_clamps_at_zero(self):
+        # A double-release (crash/retry path) must not go negative — a
+        # negative omega would make eta() report *more* than ideal bandwidth.
+        r = BandwidthResource("link", 100.0)
+        r.begin()
+        r.end(1.0)
+        r.end(1.0)
+        r.end(1.0)
+        assert r.omega == 0
+        assert r.available() == pytest.approx(100.0)
+        assert r.bytes_served == pytest.approx(3.0)
+
+    def test_available_prices_in_the_new_transfer(self):
+        # available() quotes the rate a *new* transfer would get, i.e. after
+        # it joins the load: eta(nu, omega + 1) when idle.
+        r = BandwidthResource("link", 100.0)
+        assert r.available() == pytest.approx(100.0)
+        r.begin()
+        assert r.available() == pytest.approx(50.0)
+        assert r.available(extra_load=2) == pytest.approx(100.0 / 3)
+
+
+class TestCopyTime:
+    def test_rate_is_min_of_src_and_dst(self):
+        fast = BandwidthResource("fast", 100.0)
+        slow = BandwidthResource("slow", 10.0)
+        # 50 bytes over min(100, 10) = 10 B/s -> 5 s, either direction.
+        assert copy_time(50.0, fast, slow) == pytest.approx(5.0)
+        assert copy_time(50.0, slow, fast) == pytest.approx(5.0)
+
+    def test_dst_none_uses_src_rate_only(self):
+        src = BandwidthResource("src", 25.0)
+        assert copy_time(50.0, src) == pytest.approx(2.0)
+
+    def test_latency_adds_to_transfer_time(self):
+        src = BandwidthResource("src", 10.0)
+        assert copy_time(10.0, src, latency_s=0.5) == pytest.approx(1.5)
+
+    def test_rates_frozen_at_admission_under_load(self):
+        # Load-at-admission: a loaded source halves the quoted rate.
+        src = BandwidthResource("src", 100.0)
+        dst = BandwidthResource("dst", 100.0)
+        t_idle = copy_time(100.0, src, dst)
+        src.begin()
+        t_loaded = copy_time(100.0, src, dst)
+        assert t_idle == pytest.approx(1.0)        # both sides quote eta(nu, 1)
+        assert t_loaded == pytest.approx(100.0 / eta(100.0, 2))
+
+    def test_zero_bandwidth_does_not_divide_by_zero(self):
+        dead = BandwidthResource("dead", 0.0)
+        assert copy_time(10.0, dead) > 0
+
+
+class TestStores:
+    def test_persistent_store_holds_every_object(self):
+        p = PersistentStore("gpfs", 1e9)
+        p.add(DataObject("a", 100.0))
+        assert "a" in p and "b" not in p
+        assert p.size_of("a") == 100.0
+
+    def test_transient_store_sigma_and_membership(self):
+        t = TransientStore("n0", capacity_bytes=10.0,
+                           disk_bw_bytes_per_s=1e6, nic_bw_bytes_per_s=1e6)
+        assert t.sigma == 10.0
+        t.cache.insert("a", 4.0)
+        assert "a" in t and "b" not in t
