@@ -130,6 +130,57 @@ def run_config(
     return out
 
 
+def des_rows(num_tasks: int) -> List[Tuple[str, float, str]]:
+    """Tiered DES study: ``SimConfig.tiers`` on an HBM/DRAM/disk stack.
+
+    Reproduces the paper's locality sweeps (Fig-2-style: each file read by
+    ``ell`` tasks) inside the discrete-event simulator, per tier config:
+    the paper's flat node cache, an HBM+DRAM stack, and HBM+DRAM+disk.
+    Per-tier byte buckets replace the flat "local" bucket, so the rows show
+    where the reuse is actually served from and what stops hitting GPFS as
+    the stack deepens.  The 3-tier config also runs on the sharded index
+    plane (``index_shards=4``) — same decisions, exercised in CI.
+    """
+    from repro.core.simulator import SimConfig, run_experiment
+    from repro.core.workload import locality_workload
+    from repro.diffusion.tiers import TierSpec
+
+    mb = 1024 ** 2
+    hbm = (TierSpec("hbm", 64 * mb, 400e9),)
+    dram = (TierSpec("dram", 256 * mb, 50e9),)
+    disk = (TierSpec("disk", 1024 * mb, 2e9),)
+    configs = [
+        ("flat", None, 0),
+        ("hbm_dram", hbm + dram, 0),
+        ("hbm_dram_disk", hbm + dram + disk, 4),
+    ]
+    rows = []
+    for ell in (1.38, 30.0):
+        wl = locality_workload(ell, num_tasks)
+        for label, tiers, shards in configs:
+            cfg = SimConfig(
+                policy="good-cache-compute",
+                cache_size_per_node_bytes=64 * mb,   # flat config only
+                static_nodes=8,
+                max_nodes=8,
+                coherence_delay_s=0.0,
+                tiers=tiers,
+                index_shards=shards,
+            )
+            r = run_experiment(wl, cfg)
+            buckets = ";".join(
+                f"{k}_MB={v / mb:.0f}" for k, v in sorted(r.bytes_by_source.items())
+            )
+            rows.append((
+                f"diffusion_tiers/des_l{ell}_{label}",
+                r.wet_s * 1e6 / max(1, r.tasks_done),
+                f"hit_local={r.hit_rate_local:.2f};hit_remote={r.hit_rate_remote:.2f};"
+                f"miss={r.miss_rate:.2f};wet_s={r.wet_s:.1f};{buckets};"
+                f"shards={shards}",
+            ))
+    return rows
+
+
 def main(num_requests: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]]:
     # 400 req/s over 8 replicas puts real load on the shared persistent link
     # (the flat router's misses contend on it, Fig-4 style) without
@@ -178,6 +229,7 @@ def main(num_requests: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]
         f"tiered_hit={tiered['hit_rate']:.2f};flat_hit={flat['hit_rate']:.2f};"
         f"tiered_p99_ms={tiered['p99_ms']:.2f};flat_p99_ms={flat['p99_ms']:.2f}",
     ))
+    rows.extend(des_rows(num_requests))
     return rows
 
 

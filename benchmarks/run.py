@@ -23,16 +23,19 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         n, n_model, n_sched, n_serve, n_scale = 1_000, 300, 1_000, 300, 1_000
+        n_idx = 300
     else:
         n = 250_000 if args.full else (6_000 if args.quick else 25_000)
         n_model = 20_000 if args.full else (2_000 if args.quick else 6_000)
         n_sched = 250_000 if args.full else (6_000 if args.quick else 25_000)
         n_serve = 1_000 if args.quick else 4_000
         n_scale = 40_000 if args.full else 8_000
+        n_idx = 2_000 if args.quick else (8_000 if args.full else 4_000)
 
     from . import (
         bench_cache_throughput,
         bench_diffusion_tiers,
+        bench_index_scale,
         bench_model_error,
         bench_pi_speedup,
         bench_provisioning,
@@ -46,6 +49,9 @@ def main() -> None:
         ("scheduler", lambda: bench_scheduler.main(n_sched)),
         ("serve_routing", lambda: bench_serve_routing.main(n_serve)),
         ("diffusion_tiers", lambda: bench_diffusion_tiers.main(n_serve)),
+        # index_scale's decisions_equal section raises on any sharded-vs-flat
+        # dispatch divergence -> ERROR row -> the smoke gate (CI) fails.
+        ("index_scale", lambda: bench_index_scale.main(n_idx)),
         ("provisioning", lambda: bench_provisioning.main(n)),
         ("cache_throughput", lambda: bench_cache_throughput.main(n)),
         ("pi_speedup", lambda: bench_pi_speedup.main(n)),

@@ -15,7 +15,15 @@ Public API:
 
 from .cache import Cache, CacheStats, EVICTION_POLICIES
 from .dispatch import DataAwareDispatcher
-from .index import CentralizedIndex, LocalIndex
+from .index import (
+    CacheLocationIndex,
+    CentralizedIndex,
+    CoherenceBus,
+    HashRing,
+    IndexShard,
+    LocalIndex,
+    ShardedIndex,
+)
 from .model import (
     ModelInputs,
     average_overhead_time,
@@ -60,7 +68,8 @@ from .workload import (
 
 __all__ = [
     "Cache", "CacheStats", "EVICTION_POLICIES",
-    "CentralizedIndex", "LocalIndex",
+    "CacheLocationIndex", "CentralizedIndex", "CoherenceBus", "HashRing",
+    "IndexShard", "LocalIndex", "ShardedIndex",
     "ModelInputs", "average_overhead_time", "computational_intensity",
     "efficiency", "efficiency_bound_holds", "optimize_resources",
     "predict_wet_ramp", "speedup", "workload_execution_time",

@@ -48,7 +48,7 @@ from collections import OrderedDict, defaultdict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
-from .index import CentralizedIndex
+from .index import CacheLocationIndex, CentralizedIndex
 from .task import ExecutorState
 
 POLICIES = (
@@ -69,6 +69,7 @@ class SchedulerStats:
     perfect_hits: int = 0
     fallback_dispatches: int = 0
     delayed: int = 0
+    tier_floor_bypasses: int = 0    # GCC skipped a delay: holders too slow
 
 
 class DataAwareDispatcher:
@@ -86,10 +87,11 @@ class DataAwareDispatcher:
         cpu_util_threshold: float = 0.8,
         max_replicas: int = 4,
         utilization_fn: Optional[Callable[[], float]] = None,
-        index: Optional[CentralizedIndex] = None,
+        index: Optional[CacheLocationIndex] = None,
         key_fn: Optional[Callable[[Any], Hashable]] = None,
         objects_fn: Optional[Callable[[Any], Sequence[str]]] = None,
         tier_weights: Optional[Dict[str, float]] = None,
+        gcc_delay_tier_floor: float = 0.0,
     ):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
@@ -107,6 +109,12 @@ class DataAwareDispatcher:
         # can serve from faster tiers.  None = every cached copy weighs 1.0
         # (the paper's flat-store behavior, bit-for-bit).
         self.tier_weights = tier_weights
+        # GCC tier-aware delay floor: good-cache-compute delays dispatch for
+        # a busy holder only when some live copy sits in a tier whose weight
+        # is >= this floor.  Waiting for a disk-resident copy is rarely worth
+        # it — the swap-in costs about as much as a peer fetch a free
+        # executor could start right now.  0.0 disables (paper behavior).
+        self.gcc_delay_tier_floor = gcc_delay_tier_floor
 
         # Wait queue Q: FIFO by arrival sequence. OrderedDict gives O(1)
         # head access and O(1) removal from the middle on dispatch.
@@ -215,6 +223,22 @@ class DataAwareDispatcher:
             return 1.0
         return self.tier_weights.get(t, 1.0)
 
+    def _delay_worthwhile(self, objects: Sequence[str]) -> bool:
+        """GCC + tiers: does any live copy sit in a tier fast enough that
+        waiting for its busy holder beats dispatching elsewhere now?
+
+        Flat stores weigh 1.0, so with the floor enabled they always justify
+        the delay — only genuinely slow-tier-resident copies bypass it.
+        """
+        if self.tier_weights is None or self.gcc_delay_tier_floor <= 0.0:
+            return True
+        for f in objects:
+            for e in self.index.locations(f):
+                if e in self._executors and \
+                        self._weight(f, e) >= self.gcc_delay_tier_floor:
+                    return True
+        return False
+
     # -------------------------------------------------------------- phase 1
     def _cache_mode(self) -> bool:
         """True when the policy is currently in cache-preferring mode."""
@@ -297,6 +321,9 @@ class DataAwareDispatcher:
                 if self.policy == "good-cache-compute":
                     rep = max(self.index.replication_factor(f) for f in objects)
                     if rep < self.max_replicas:
+                        return self._assign(next(iter(self._free)), item)
+                    if not self._delay_worthwhile(objects):
+                        self.stats.tier_floor_bypasses += 1
                         return self._assign(next(iter(self._free)), item)
                 self.stats.delayed += 1
                 continue  # delay THIS item; keep scanning the window
@@ -391,13 +418,16 @@ class DataAwareDispatcher:
             return []
         if cache_mode and self.policy == "good-cache-compute":
             # GCC above threshold behaves like MCH *unless* replication
-            # headroom allows a new copy (cache-space heuristic).
+            # headroom allows a new copy (cache-space heuristic) or every
+            # live copy is below the tier floor (slow-tier bypass).
             head = self._head()
             rep = max((self.index.replication_factor(f)
                        for f in self._objects(head)), default=0)
             if rep >= self.max_replicas:
-                self.set_state(executor, ExecutorState.FREE)
-                return []
+                if self._delay_worthwhile(self._objects(head)):
+                    self.set_state(executor, ExecutorState.FREE)
+                    return []
+                self.stats.tier_floor_bypasses += 1
         # first-available / first-cache-available / max-compute-util /
         # GCC otherwise: top m items from the head of the wait queue.
         while len(picked) < m and self._queue:

@@ -11,12 +11,50 @@ cache.  Data structures follow the paper's scheduler definitions:
 Both are hash maps of sorted sets, which is what makes the O(|T_i| +
 replicationFactor + min(|Q|, W)) scheduling cost cheap in practice (paper
 Section 3.2).
+
+Two implementations satisfy the ``CacheLocationIndex`` protocol defined
+here: the flat in-process ``CentralizedIndex`` below (the paper's original
+shape) and the consistent-hash-sharded ``repro.index.ShardedIndex``
+(re-exported at the bottom), which batches coherence per shard and scales
+the scan path — see ``src/repro/index/`` for the plane's architecture.
+Consumers (dispatcher, router, simulator) program against the protocol and
+take either.
 """
 
 from __future__ import annotations
 
 from collections import defaultdict, deque
-from typing import Deque, Dict, Iterable, Mapping, Optional, Set, Tuple
+from typing import (
+    Deque, Dict, Iterable, List, Mapping, Optional, Protocol, Set, Tuple,
+    runtime_checkable,
+)
+
+
+@runtime_checkable
+class CacheLocationIndex(Protocol):
+    """The index surface the dispatcher/router/simulator consume.
+
+    ``version`` must change whenever any query's answer may have changed
+    (the dispatcher memoizes failed window scans against it).
+    """
+
+    version: int
+
+    def add(self, file: str, executor: str, tier: Optional[str] = None) -> None: ...
+    def remove(self, file: str, executor: str) -> None: ...
+    def drop_executor(self, executor: str) -> None: ...
+    def publish(self, executor: str, files: Iterable[str],
+                tiers: Optional[Mapping[str, str]] = None) -> Tuple[int, int]: ...
+    def enqueue_update(self, now: float, op: str, file: str, executor: str) -> None: ...
+    def apply_updates(self, now: float) -> int: ...
+    def locations(self, file: str) -> Set[str]: ...
+    def tier_of(self, file: str, executor: str) -> Optional[str]: ...
+    def cached_at(self, executor: str) -> Set[str]: ...
+    def cache_hits(self, files: Iterable[str], executor: str) -> int: ...
+    def candidate_executors(self, files: Iterable[str]) -> Dict[str, int]: ...
+    def replication_factor(self, file: str) -> int: ...
+    def note_access(self, file: str, n: int = 1) -> None: ...
+    def hot_objects(self, k: int) -> List[Tuple[str, int]]: ...
 
 
 class CentralizedIndex:
@@ -34,6 +72,8 @@ class CentralizedIndex:
         # runtime consumers use delay 0 (synchronous in-process updates).
         # Constant delay => appends arrive in time order => deque pop-left.
         self._pending: Deque[Tuple[float, str, str, str]] = deque()
+        # Per-object access heat (router-fed): the warm-start ranking signal.
+        self._access_counts: Dict[str, int] = defaultdict(int)
 
     # -- synchronous mutation (coherent view) --------------------------------
     version: int = 0  # bumped on every mutation (scheduler scan memoization)
@@ -126,6 +166,15 @@ class CentralizedIndex:
     def replication_factor(self, file: str) -> int:
         return len(self.i_map.get(file, set()))
 
+    # -- access heat (warm-start ranking) -------------------------------------
+    def note_access(self, file: str, n: int = 1) -> None:
+        self._access_counts[file] += n
+
+    def hot_objects(self, k: int) -> List[Tuple[str, int]]:
+        """Top-k objects by access count (count desc, then name)."""
+        ranked = sorted(self._access_counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        return ranked[:k]
+
 
 class LocalIndex:
     """Executor-side index of its own cached objects (trivial wrapper)."""
@@ -141,3 +190,23 @@ class LocalIndex:
 
     def __contains__(self, file: str) -> bool:
         return file in self.files
+
+
+# Sharded plane re-exports: both implementations live behind the protocol
+# above.  Imported from the submodules directly (not the package __init__'s
+# convenience surface) to keep the core <- index <- diffusion import chain
+# acyclic regardless of which module loads first.
+from ..index.coherence import CoherenceBus  # noqa: E402
+from ..index.ring import HashRing  # noqa: E402
+from ..index.shard import IndexShard  # noqa: E402
+from ..index.sharded import ShardedIndex  # noqa: E402
+
+__all__ = [
+    "CacheLocationIndex",
+    "CentralizedIndex",
+    "CoherenceBus",
+    "HashRing",
+    "IndexShard",
+    "LocalIndex",
+    "ShardedIndex",
+]

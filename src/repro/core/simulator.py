@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from typing import Union
 
 from ..diffusion.tiers import TieredStore, TierSpec
-from .index import CentralizedIndex
+from .index import CentralizedIndex, ShardedIndex
 from .provisioner import DynamicResourceProvisioner, ProvisionRequest
 from .scheduler import DataAwareScheduler
 from .store import BandwidthResource, PersistentStore, TransientStore
@@ -104,6 +104,12 @@ class SimConfig:
     # than in the single "local" bucket.  ``cache_size_per_node_bytes`` is
     # ignored in that case — capacities come from the specs.
     tiers: Optional[Tuple[TierSpec, ...]] = None
+    # Sharded cache-location index plane: > 0 runs the scheduler over a
+    # ShardedIndex with that many consistent-hash shards (batched per-shard
+    # coherence); 0 keeps the paper's flat CentralizedIndex.  Dispatch
+    # decisions are identical either way (bench_index_scale asserts it) —
+    # the knob exists so DES studies can measure the coherence/scan planes.
+    index_shards: int = 0
 
 
 @dataclass
@@ -215,7 +221,13 @@ class Simulator:
             self.gpfs.add(obj)
         self.obj_size = {o.name: o.size_bytes for o in workload.objects}
 
-        self.index = CentralizedIndex(coherence_delay_s=config.coherence_delay_s)
+        if config.index_shards > 0:
+            self.index = ShardedIndex(
+                shards=config.index_shards,
+                coherence_delay_s=config.coherence_delay_s,
+            )
+        else:
+            self.index = CentralizedIndex(coherence_delay_s=config.coherence_delay_s)
         self.sched = DataAwareScheduler(
             policy=config.policy,
             window=config.window,

@@ -15,6 +15,14 @@ classifies each later demand access as *useful* (landed in time), *late*
 (still in flight — the demand paid only the remainder), or never touched.
 Warmed objects land in ``admit_tier`` (default 1 = host DRAM when present)
 so speculative data does not thrash the HBM tier the live batch is using.
+
+Admission control (the bench_diffusion_tiers p99 fix): prefetches are
+``kind="prefetch"`` — the engine's *speculative* priority class — so a
+demand fetch preempts them rather than queueing behind them, and the engine
+refuses them outright when the slot pool is saturated.  On top of that the
+prefetcher applies a load-aware throttle of its own: it stops issuing warms
+while engine slot occupancy is at or above ``max_engine_load_frac``, keeping
+speculation out of exactly the window where it used to hurt tail latency.
 """
 
 from __future__ import annotations
@@ -34,6 +42,8 @@ class PrefetchStats:
     useful: int = 0                 # demand access after the warm landed
     late: int = 0                   # demand access while still in flight
     redundant: int = 0              # object was already resident / in flight
+    throttled: int = 0              # warms withheld/refused under load
+    preempted: int = 0              # in-flight warms killed by demand
 
 
 class Prefetcher:
@@ -46,11 +56,16 @@ class Prefetcher:
         admit_tier: int = 1,
         max_outstanding: int = 32,
         max_tracked: int = 512,
+        max_engine_load_frac: float = 0.75,
     ):
         self.engine = engine
         self.size_fn = size_fn
         self.admit_tier = admit_tier
         self.max_outstanding = max_outstanding
+        # Load-aware throttle: no new warms while the engine's slot pool is
+        # this full — near saturation every slot belongs to demand.
+        self.max_engine_load_frac = max_engine_load_frac
+        engine.add_cancel_listener(self._on_cancel)
         # Warms whose demand never lands at this (dest, obj) would otherwise
         # accumulate forever; the tracking map is bounded (oldest evicted) so
         # a long-running server can't leak one entry per unconsumed warm.
@@ -68,6 +83,9 @@ class Prefetcher:
             return []
         started: List[Transfer] = []
         for obj in objects:
+            if self.engine.load_frac() >= self.max_engine_load_frac:
+                self.stats.throttled += 1
+                break               # engine near saturation: demand owns it
             if obj in store or self.engine.inflight(dest, obj) is not None:
                 self.stats.redundant += 1
                 continue
@@ -76,6 +94,9 @@ class Prefetcher:
             tier = min(self.admit_tier, len(store.tiers) - 1)
             tr = self.engine.fetch(obj, self.size_fn(obj), dest, now,
                                    kind="prefetch", admit_tier=tier)
+            if tr is None:          # speculative admission refused
+                self.stats.throttled += 1
+                break
             while len(self._issued) >= self.max_tracked:
                 self._issued.pop(next(iter(self._issued)))   # oldest entry
             self._issued[(dest, obj)] = tr.ready_s
@@ -93,3 +114,8 @@ class Prefetcher:
             self.stats.useful += 1
         else:
             self.stats.late += 1
+
+    def _on_cancel(self, dest: str, obj: str, kind: str) -> None:
+        """Engine preempted a flight: stop tracking our warm, if it was one."""
+        if kind == "prefetch" and self._issued.pop((dest, obj), None) is not None:
+            self.stats.preempted += 1

@@ -15,7 +15,16 @@ Two serving-path realities the DES never modeled:
     (the second requester pays only the *remaining* time);
   * **bounded concurrency** — at most ``max_inflight`` transfers progress at
     once; an overflow transfer starts when a slot frees (its cost includes
-    the queueing delay).
+    the queueing delay);
+  * **priority classes** — transfers are either *demand* (a live request is
+    waiting on the object) or *speculative* (``prefetch`` / ``warmstart``).
+    Speculative fetches never queue for a slot (they are refused instead)
+    and are capped to ``speculative_slot_frac`` of the pool; a demand fetch
+    that finds every slot busy *preempts* the speculative flight that would
+    land last rather than queueing behind it.  This is the admission
+    control that fixes the p99 regression ``bench_diffusion_tiers`` showed
+    near saturation: under load, speculation yields instead of competing
+    with demand for the persistent link and the in-flight slots.
 
 Time is virtual and caller-supplied (``now``), like the router: the engine
 never sleeps.  Bandwidth load (``omega``) is engaged at fetch and released
@@ -26,15 +35,16 @@ entry point drains first, so load reflects only genuinely in-flight copies.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.index import CentralizedIndex
 from ..core.store import BandwidthResource, copy_time
 from .tiers import TieredStore
 
-__all__ = ["Transfer", "TransferEngine", "TransferStats"]
+__all__ = ["DEMAND", "Transfer", "TransferEngine", "TransferStats"]
 
 PERSISTENT = "persistent"
+DEMAND = "demand"               # priority class; anything else is speculative
 
 
 @dataclass
@@ -47,7 +57,7 @@ class Transfer:
     source: str                     # "peer:<replica>" or "persistent"
     start_s: float                  # may exceed request time (slot queueing)
     ready_s: float
-    kind: str = "demand"            # "demand" | "prefetch"
+    kind: str = DEMAND              # "demand" | "prefetch" | "warmstart"
     shared_with: int = 0            # later requesters that joined this flight
 
     def remaining_s(self, now: float) -> float:
@@ -65,6 +75,9 @@ class TransferStats:
     persistent_fetches: int = 0
     queue_wait_s: float = 0.0       # total slot-queueing delay
     peak_inflight: int = 0
+    preempted: int = 0              # speculative flights killed by demand
+    preempted_bytes: float = 0.0
+    refused_speculative: int = 0    # speculative fetches denied admission
 
 
 class TransferEngine:
@@ -78,6 +91,7 @@ class TransferEngine:
         max_inflight: int = 8,
         latency_s: float = 0.0,
         use_peers: bool = True,
+        speculative_slot_frac: float = 0.5,
     ):
         self.index = index
         self.persistent_link = persistent_link
@@ -85,8 +99,12 @@ class TransferEngine:
         self.max_inflight = max(1, int(max_inflight))
         self.latency_s = latency_s
         self.use_peers = use_peers
+        # Admission cap for the speculative class (prefetch / warm-start):
+        # at most this fraction of the slot pool may carry speculation.
+        self.speculative_slot_frac = speculative_slot_frac
         self._inflight: Dict[Tuple[str, str], Transfer] = {}
         self._engaged: Dict[Tuple[str, str], List[Tuple[BandwidthResource, float]]] = {}
+        self._cancel_listeners: List[Callable[[str, str, str], None]] = []
         self.stats = TransferStats()
 
     # -- lifecycle ------------------------------------------------------------
@@ -109,6 +127,44 @@ class TransferEngine:
     def inflight(self, dest: str, obj: str) -> Optional[Transfer]:
         return self._inflight.get((dest, obj))
 
+    def slots_in_use(self) -> int:
+        return len(self._inflight)
+
+    def load_frac(self) -> float:
+        """Slot-pool occupancy in [0, 1] — the prefetcher's throttle input.
+
+        Clamped: queued (not-yet-started) flights also live in the inflight
+        map, so raw occupancy can exceed the cap while a backlog drains."""
+        return min(1.0, len(self._inflight) / self.max_inflight)
+
+    def add_cancel_listener(self, fn: Callable[[str, str, str], None]) -> None:
+        """``fn(dest, obj, kind)`` fires when an in-flight copy is preempted."""
+        self._cancel_listeners.append(fn)
+
+    def _speculative_inflight(self) -> int:
+        return sum(1 for tr in self._inflight.values() if tr.kind != DEMAND)
+
+    def cancel(self, dest: str, obj: str) -> bool:
+        """Abort an in-flight copy: free its bandwidth and withdraw the
+        early-admitted placeholder from the destination's tier stack.
+
+        Bytes already counted against the source at start stay counted (the
+        partial read happened); ``preempted_bytes`` tracks the waste."""
+        key = (dest, obj)
+        tr = self._inflight.pop(key, None)
+        if tr is None:
+            return False
+        for res, _nbytes in self._engaged.pop(key, ()):
+            res.end(0.0)            # slot freed; no completed bytes credited
+        self.stats.preempted += 1
+        self.stats.preempted_bytes += tr.size_bytes
+        store = self.stores.get(dest)
+        if store is not None and obj in store:
+            store.drop(obj)         # also withdraws the index entry
+        for fn in self._cancel_listeners:
+            fn(dest, obj, tr.kind)
+        return True
+
     def remaining_s(self, dest: str, obj: str, now: float) -> float:
         """Time until a pending copy of obj lands at dest (0 if none/done)."""
         tr = self._inflight.get((dest, obj))
@@ -121,28 +177,67 @@ class TransferEngine:
         size_bytes: float,
         dest: str,
         now: float,
-        kind: str = "demand",
+        kind: str = DEMAND,
         admit_tier: int = 0,
-    ) -> Transfer:
+        allow_queue: Optional[bool] = None,
+    ) -> Optional[Transfer]:
         """Resolve a miss on ``obj`` at ``dest``: dedup, pick source, charge.
 
         The object is admitted into the destination's tier stack immediately
         (bookkeeping — routing must see it) but the returned transfer's
         ``remaining_s(now)`` is the cost the caller still has to pay.
+
+        ``allow_queue`` (default: demand yes, speculative no) decides what
+        happens when the slot pool is saturated: queueable fetches start
+        when a slot frees; non-queueable speculative fetches are refused
+        (``None``).  Warm-start passes ``allow_queue=True`` — a bulk clone
+        ordered by the control plane serializes behind the pool rather than
+        being dropped — while remaining preemptable by demand.  Demand
+        fetches always get a transfer (preempting speculation or queueing).
         """
         self.drain(now)
         key = (dest, obj)
         existing = self._inflight.get(key)
         if existing is not None:
             # Single-flight: this miss rides the transfer already in the air.
+            if kind == DEMAND and existing.kind != DEMAND:
+                existing.kind = DEMAND   # a request now waits on it: promote
             existing.shared_with += 1
             self.stats.shared += 1
             return existing
 
+        if allow_queue is None:
+            allow_queue = kind == DEMAND
         start = now
+        if kind != DEMAND and not allow_queue:
+            # Opportunistic speculation (prefetch): never queue for a slot,
+            # and never hold more than its fraction of the pool.
+            spec_cap = max(1, int(self.max_inflight * self.speculative_slot_frac))
+            if (len(self._inflight) >= self.max_inflight
+                    or self._speculative_inflight() >= spec_cap):
+                self.stats.refused_speculative += 1
+                return None
+        if kind == DEMAND:
+            # Slots full: preempt speculative flights latest-landing-first
+            # until a slot frees *now* or none remain.  One cancel is not
+            # enough — queued flights keep their issued schedules (callers
+            # already hold their cost), so any surviving speculation ahead
+            # of this demand would still delay it.  Speculation is cheap to
+            # redo; demand never waits behind it.
+            while len(self._inflight) >= self.max_inflight:
+                victim: Optional[Tuple[str, str]] = None
+                victim_ready = -1.0
+                for k2, tr2 in self._inflight.items():
+                    if tr2.kind != DEMAND and tr2.ready_s > victim_ready:
+                        victim, victim_ready = k2, tr2.ready_s
+                if victim is None:
+                    break
+                self.cancel(*victim)
         if len(self._inflight) >= self.max_inflight:
-            # All slots busy: start when enough of the current flights land
-            # for this one to fit under the cap.
+            # Still saturated (only demand flights left): queue — start
+            # when enough current flights land to fit under the cap.  The
+            # recheck keeps the concurrency bound honest even when the
+            # cancelled flights were queued rather than active.
             ready_times = sorted(tr.ready_s for tr in self._inflight.values())
             start = ready_times[len(ready_times) - self.max_inflight]
             self.stats.queue_wait_s += start - now

@@ -1,0 +1,134 @@
+"""Batched loose coherence for the sharded index.
+
+``CentralizedIndex`` models the paper's loose coherence as one global deque
+of per-op update messages, popped one at a time.  At serving scale that is
+the wrong shape twice over: every executor cache event is its own message
+(no amortization), and one global queue serializes shards that could drain
+independently.  The ``CoherenceBus`` replaces it with per-shard delta
+batches:
+
+  * updates are enqueued to the owning shard's queue with a due time of
+    ``now + delay_s`` — and, when ``batch_window_s > 0``, rounded *up* to
+    the next window boundary, so all updates landing inside one window
+    become a single heartbeat (the amortized ``publish()`` path: N per-op
+    messages collapse into one batched delta application);
+  * at drain, each shard's due ops are coalesced by ``(file, executor)``
+    with last-writer-wins before touching the maps — an add immediately
+    undone by a remove never mutates the shard at all.  Coalesced
+    application is order-equivalent to sequential application because ops
+    on distinct (file, executor) pairs commute and ops on the same pair are
+    resolved by the final one;
+  * the bus records amortization stats (ops per applied batch, coalesce
+    rate) — what ``bench_index_scale`` sweeps against update rate.
+
+With ``batch_window_s == 0`` drain timing is bit-identical to the flat
+index's deque (each op applies exactly when its delay expires), which is
+what lets ``ShardedIndex`` guarantee identical dispatch decisions to
+``CentralizedIndex`` on a seeded stream (the run.py smoke gate asserts it).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+__all__ = ["CoherenceBus", "CoherenceStats"]
+
+# One update message: (due_s, op, file, executor, tier)
+_Op = Tuple[float, str, str, str, Optional[str]]
+
+
+@dataclass
+class CoherenceStats:
+    enqueued: int = 0
+    applied: int = 0                # raw ops drained (pre-coalesce)
+    mutations: int = 0              # map mutations actually performed
+    batches: int = 0                # per-shard batch applications
+    coalesced: int = 0              # ops absorbed by last-writer-wins
+
+    @property
+    def ops_per_batch(self) -> float:
+        """Amortization factor: 1.0 means per-op (flat-index behavior)."""
+        return self.applied / self.batches if self.batches else 0.0
+
+
+class CoherenceBus:
+    """Per-shard batched update queues with a shared delay model."""
+
+    def __init__(
+        self,
+        num_shards: int,
+        delay_s: float = 0.0,
+        batch_window_s: float = 0.0,
+    ):
+        self.delay_s = delay_s
+        self.batch_window_s = batch_window_s
+        self._queues: List[Deque[_Op]] = [deque() for _ in range(num_shards)]
+        self.stats = CoherenceStats()
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    def enqueue(
+        self,
+        now: float,
+        op: str,
+        file: str,
+        executor: str,
+        shard_id: int,
+        tier: Optional[str] = None,
+    ) -> None:
+        due = now + self.delay_s
+        if self.batch_window_s > 0.0:
+            # Quantize to the next heartbeat boundary: everything inside one
+            # window rides the same batch.  Monotone in ``now`` (constant
+            # delay), so per-shard queues stay sorted by due time.
+            due = math.ceil(due / self.batch_window_s) * self.batch_window_s
+        self._queues[shard_id].append((due, op, file, executor, tier))
+        self.stats.enqueued += 1
+
+    def apply(
+        self,
+        now: float,
+        apply_fn: Callable[[int, Dict[Tuple[str, str], Tuple[str, Optional[str]]]], int],
+    ) -> int:
+        """Drain ops due at or before ``now``, one coalesced batch per shard.
+
+        ``apply_fn(shard_id, delta)`` receives ``{(file, executor): (op,
+        tier)}`` and returns the number of map mutations it performed.
+        Returns the raw op count drained (the flat index's return value).
+        """
+        drained = 0
+        for shard_id, q in enumerate(self._queues):
+            if not q or q[0][0] > now:
+                continue
+            delta: Dict[Tuple[str, str], Tuple[str, Optional[str]]] = {}
+            batch_ops = 0
+            while q and q[0][0] <= now:
+                _, op, f, e, tier = q.popleft()
+                key = (f, e)
+                if key in delta:
+                    self.stats.coalesced += 1
+                    # Coalescing must leave the same net state sequential
+                    # application would: a tier-less add over a prior add
+                    # keeps the earlier tier, while an add over a prior
+                    # remove becomes "readd" (remove-first), so stale tier
+                    # info cannot survive the remove it should have died in.
+                    prev_op, prev_tier = delta[key]
+                    if op == "add":
+                        if prev_op == "remove":
+                            op = "readd"
+                        else:                       # prior add / readd
+                            if tier is None:
+                                tier = prev_tier
+                            if prev_op == "readd":
+                                op = "readd"
+                delta[key] = (op, tier)
+                batch_ops += 1
+            self.stats.mutations += apply_fn(shard_id, delta)
+            self.stats.applied += batch_ops
+            self.stats.batches += 1
+            drained += batch_ops
+        return drained

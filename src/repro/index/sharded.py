@@ -1,0 +1,217 @@
+"""Sharded cache-location index: drop-in replacement for the flat index.
+
+``ShardedIndex`` consistent-hashes the object namespace over N
+``IndexShard``s (``HashRing``) and routes every mutation, query, and loose-
+coherence update message to the owning shard.  It is API-compatible with
+``core.index.CentralizedIndex`` — ``add`` / ``remove`` / ``publish`` /
+``locations`` / ``cached_at`` / ``cache_hits`` / ``candidate_executors`` /
+``tier_of`` / ``replication_factor`` / ``drop_executor`` / ``enqueue_update``
+/ ``apply_updates`` / ``version`` — so the dispatcher, router, and simulator
+take it unmodified (``ShardedIndex(shards=1)`` behaves exactly like the flat
+index; any shard count produces identical dispatch decisions, asserted by
+the ``bench_index_scale`` smoke gate).
+
+What sharding buys at "millions of users" scale:
+
+  * each shard's maps stay small enough to scan/resize independently, and
+    per-shard work (candidate tallies, bulk location lookups, coherence
+    drains) is embarrassingly parallel — ``bulk_locations`` and
+    ``candidate_executors`` are written as per-shard loops a thread/process
+    pool can fan out without sharing state;
+  * loose coherence becomes per-shard batched delta application through the
+    ``CoherenceBus`` instead of one global per-op deque;
+  * per-shard access counters give the replica warm-start plane its
+    hottest-objects ranking without a global scan (``hot_objects`` merges
+    per-shard top-k).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
+
+from .coherence import CoherenceBus
+from .ring import HashRing
+from .shard import IndexShard
+
+__all__ = ["ShardedIndex"]
+
+
+class ShardedIndex:
+    """N consistent-hash shards behind the ``CentralizedIndex`` API."""
+
+    def __init__(
+        self,
+        shards: int = 8,
+        coherence_delay_s: float = 0.0,
+        vnodes: int = 64,
+        batch_window_s: float = 0.0,
+    ):
+        self.ring = HashRing(shards, vnodes=vnodes)
+        self.shards: List[IndexShard] = [IndexShard(i) for i in range(shards)]
+        self.bus = CoherenceBus(shards, delay_s=coherence_delay_s,
+                                batch_window_s=batch_window_s)
+        self.version = 0            # bumped on every mutation (scan memo)
+        self.publishes = 0
+        self.publish_added = 0
+        self.publish_removed = 0
+
+    @property
+    def coherence_delay_s(self) -> float:
+        return self.bus.delay_s
+
+    @coherence_delay_s.setter
+    def coherence_delay_s(self, v: float) -> None:
+        self.bus.delay_s = v
+
+    def shard_of(self, file: str) -> IndexShard:
+        return self.shards[self.ring.shard_of(file)]
+
+    # -- synchronous mutation (coherent view) --------------------------------
+    def add(self, file: str, executor: str, tier: Optional[str] = None) -> None:
+        self.version += 1
+        self.shard_of(file).add(file, executor, tier)
+
+    def remove(self, file: str, executor: str) -> None:
+        self.version += 1
+        self.shard_of(file).remove(file, executor)
+
+    def drop_executor(self, executor: str) -> None:
+        """Executor released/failed: forget its entries in every shard."""
+        removed = 0
+        for shard in self.shards:
+            removed += shard.drop_executor(executor)
+        if removed:
+            self.version += 1
+
+    def publish(
+        self,
+        executor: str,
+        files: Iterable[str],
+        tiers: Optional[Mapping[str, str]] = None,
+    ) -> Tuple[int, int]:
+        """Bulk-sync an executor's cache snapshot, one delta per shard.
+
+        Same semantics as ``CentralizedIndex.publish`` (diff against the
+        current view, apply only the delta, refresh changed tiers), but the
+        snapshot is pre-split by owning shard so each shard diffs only its
+        slice — the amortized heartbeat the coherence plane is built around.
+        """
+        if tiers is None and isinstance(files, Mapping):
+            tiers = files
+        by_shard: Dict[int, List[str]] = defaultdict(list)
+        for f in files:
+            by_shard[self.ring.shard_of(f)].append(f)
+        added_n = removed_n = 0
+        for sid, shard in enumerate(self.shards):
+            added, removed = shard.diff_snapshot(executor, by_shard.get(sid, ()))
+            for f in added:
+                self.version += 1
+                shard.add(f, executor, tiers.get(f) if tiers else None)
+            for f in removed:
+                self.version += 1
+                shard.remove(f, executor)
+            if tiers:
+                for f in by_shard.get(sid, ()):
+                    t = tiers.get(f)
+                    if t is not None and f not in added \
+                            and shard.tier_of(f, executor) != t:
+                        self.version += 1
+                        shard.add(f, executor, tier=t)
+            added_n += len(added)
+            removed_n += len(removed)
+        self.publishes += 1
+        self.publish_added += added_n
+        self.publish_removed += removed_n
+        return added_n, removed_n
+
+    # -- loose coherence ------------------------------------------------------
+    def enqueue_update(self, now: float, op: str, file: str, executor: str,
+                       tier: Optional[str] = None) -> None:
+        self.bus.enqueue(now, op, file, executor, self.ring.shard_of(file), tier)
+
+    def apply_updates(self, now: float) -> int:
+        """Drain due update batches into their shards (O(ops drained))."""
+        return self.bus.apply(now, self._apply_delta)
+
+    def _apply_delta(
+        self, shard_id: int,
+        delta: Dict[Tuple[str, str], Tuple[str, Optional[str]]],
+    ) -> int:
+        shard = self.shards[shard_id]
+        mutations = 0
+        for (f, e), (op, tier) in delta.items():
+            if op == "add":
+                shard.add(f, e, tier)
+            elif op == "readd":                 # coalesced remove-then-add
+                shard.remove(f, e)
+                shard.add(f, e, tier)
+            else:
+                shard.remove(f, e)
+            mutations += 1
+        if mutations:
+            self.version += 1       # one bump per batch: amortized memo churn
+        return mutations
+
+    # -- queries used by the scheduler ----------------------------------------
+    def locations(self, file: str) -> Set[str]:
+        return self.shard_of(file).locations(file)
+
+    def tier_of(self, file: str, executor: str) -> Optional[str]:
+        return self.shard_of(file).tier_of(file, executor)
+
+    def cached_at(self, executor: str) -> Set[str]:
+        out: Set[str] = set()
+        for shard in self.shards:
+            out |= shard.cached_at(executor)
+        return out
+
+    def cache_hits(self, files: Iterable[str], executor: str) -> int:
+        """|files ∩ E_map(executor)| without materializing the union."""
+        return sum(1 for f in files if self.shard_of(f).holds(f, executor))
+
+    def candidate_executors(self, files: Iterable[str]) -> Dict[str, int]:
+        """Per-shard candidate tallies merged into one executor -> count map."""
+        by_shard: Dict[int, List[str]] = defaultdict(list)
+        for f in files:
+            by_shard[self.ring.shard_of(f)].append(f)
+        candidates: Dict[str, int] = defaultdict(int)
+        for sid, fs in by_shard.items():
+            shard = self.shards[sid]
+            for f in fs:
+                holders = shard.i_map.get(f)
+                if holders:
+                    for e in holders:
+                        candidates[e] += 1
+        return candidates
+
+    def bulk_locations(self, files: Iterable[str]) -> Dict[str, Set[str]]:
+        """Shard-grouped location lookup: one pass per shard, no re-hashing
+        per query — the bulk form phase-1 window scans want at scale."""
+        by_shard: Dict[int, List[str]] = defaultdict(list)
+        for f in files:
+            by_shard[self.ring.shard_of(f)].append(f)
+        out: Dict[str, Set[str]] = {}
+        for sid, fs in by_shard.items():
+            shard = self.shards[sid]
+            for f in fs:
+                out[f] = shard.locations(f)
+        return out
+
+    def replication_factor(self, file: str) -> int:
+        return self.shard_of(file).replication_factor(file)
+
+    def entry_count(self) -> int:
+        return sum(shard.entry_count() for shard in self.shards)
+
+    # -- access heat (warm-start ranking) --------------------------------------
+    def note_access(self, file: str, n: int = 1) -> None:
+        self.shard_of(file).note_access(file, n)
+
+    def hot_objects(self, k: int) -> List[Tuple[str, int]]:
+        """Global top-k by access count: merge of per-shard top-k lists."""
+        merged: List[Tuple[str, int]] = []
+        for shard in self.shards:
+            merged.extend(shard.hot_objects(k))
+        merged.sort(key=lambda kv: (-kv[1], kv[0]))
+        return merged[:k]

@@ -25,13 +25,14 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from ..core.dispatch import POLICIES, DataAwareDispatcher
-from ..core.index import CentralizedIndex
+from ..core.index import CacheLocationIndex, CentralizedIndex
 from ..core.provisioner import DynamicResourceProvisioner, ProvisionRequest
 from ..core.store import BandwidthResource
 from ..core.task import ExecutorState
 from ..diffusion.prefetch import Prefetcher
 from ..diffusion.tiers import TieredStore, TierSpec, default_tier_weights
 from ..diffusion.transfer import TransferEngine
+from ..index.warmstart import WarmStartReport, WarmStartStats, clone_hottest
 
 __all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "LatencyReservoir",
            "ReplicaStore", "RoutedRequest", "RouterStats"]
@@ -83,7 +84,7 @@ class ReplicaStore:
         self,
         name: str,
         capacity_bytes: float,
-        index: CentralizedIndex,
+        index: CacheLocationIndex,
         eviction: str = "lru",
         rng=None,
         on_evict: Optional[Callable[[str, str], None]] = None,
@@ -232,12 +233,13 @@ class CacheAffinityRouter:
         replica_capacity_bytes: float = float("inf"),
         eviction: str = "lru",
         object_size_fn: Callable[[str], float] = lambda obj: 1.0,
-        index: Optional[CentralizedIndex] = None,
+        index: Optional[CacheLocationIndex] = None,
         provisioner: Optional[DynamicResourceProvisioner] = None,
         spawn_replica: Optional[Callable[[str], None]] = None,
         stop_replica: Optional[Callable[[str], None]] = None,
         on_object_evicted: Optional[Callable[[str, str], None]] = None,
         pickup_batch: int = 1,
+        gcc_delay_tier_floor: float = 0.0,
         # ---- tiered data-diffusion plane (None = flat PR-1 behavior) ----
         tier_specs: Optional[Sequence[TierSpec]] = None,
         tier_weights: Optional[Dict[str, float]] = None,
@@ -246,6 +248,10 @@ class CacheAffinityRouter:
         transfer_max_inflight: int = 8,
         use_peer_transfer: bool = True,
         prefetch_depth: int = 0,
+        # ---- replica warm-start (index plane): clone this many of the
+        # hottest index objects into each DRP-provisioned replica ----
+        warmstart_objects: int = 0,
+        warmstart_admit_tier: int = 1,
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
@@ -258,6 +264,7 @@ class CacheAffinityRouter:
             max_replicas=max_object_replicas,
             index=self.index,
             tier_weights=tier_weights,
+            gcc_delay_tier_floor=gcc_delay_tier_floor,
         )
         self.replica_capacity_bytes = replica_capacity_bytes
         self.eviction = eviction
@@ -282,6 +289,9 @@ class CacheAffinityRouter:
             if prefetch_depth > 0:
                 self.prefetcher = Prefetcher(self.engine, object_size_fn)
         self.prefetch_depth = prefetch_depth
+        self.warmstart_objects = warmstart_objects
+        self.warmstart_admit_tier = warmstart_admit_tier
+        self.warmstart = WarmStartStats()
         self._requests: Dict[int, RoutedRequest] = {}   # in flight, by id
         self._idle_since: Dict[str, Optional[float]] = {}
         self._pending_provisions: List[ProvisionRequest] = []
@@ -375,6 +385,9 @@ class CacheAffinityRouter:
             request.dispatch_time_s = now
             self.stats.routed += 1
             for obj in request.objects:
+                # Access-heat feed: the warm-start plane ranks clone
+                # candidates by these per-object counters.
+                self.index.note_access(obj)
                 if not use_cache:
                     # first-available: every access replays from persistent
                     # storage and nothing is kept.
@@ -428,6 +441,27 @@ class CacheAffinityRouter:
         swap = self.object_size_fn(obj) / max(bw.available(), 1e-9)
         return max(pending, swap)
 
+    def warm_start(self, name: str, now: Optional[float] = None) -> WarmStartReport:
+        """Bulk-clone the hottest index objects into replica ``name``.
+
+        Runs automatically on DRP scale-up when ``warmstart_objects > 0``;
+        callable directly for manually added replicas.  Clones ride the
+        transfer engine's *speculative* priority class, so live demand
+        fetches preempt them instead of queueing behind the warm-up."""
+        now = time.monotonic() if now is None else now
+        report = clone_hottest(
+            self.index,
+            self.stores[name].tiers,
+            name,
+            self.object_size_fn,
+            now,
+            max_objects=self.warmstart_objects,
+            engine=self.engine,
+            admit_tier=self.warmstart_admit_tier,
+        )
+        self.warmstart.merge(report)
+        return report
+
     def persistent_bytes_read(self) -> float:
         """Total bytes pulled from the persistent store (both modes)."""
         if self.engine is not None:
@@ -470,6 +504,11 @@ class CacheAffinityRouter:
                 self.stats.scale_ups += 1
                 if self._spawn is not None:
                     self._spawn(name)
+                if self.warmstart_objects > 0:
+                    # Scale-up happened because load is high — exactly when a
+                    # cold replica's miss streak hurts most.  Clone the
+                    # hottest peer-held objects in before it takes work.
+                    self.warm_start(name, now)
 
     def _maybe_release(self, now: float) -> None:
         if self.drp is None or self.dispatcher.queue_length() > 0:

@@ -221,6 +221,113 @@ class TestPrefetcher:
         assert pf.stats.redundant == 1
 
 
+# ------------------------------------- priority classes / admission control
+class TestTransferPriority:
+    def test_demand_preempts_latest_landing_prefetch(self):
+        _, _, eng, stores = engine_fixture(max_inflight=1)
+        eng.fetch("spec", 10.0, "r0", 0.0, kind="prefetch")
+        assert "spec" in stores["r0"]         # placeholder admitted
+        tr = eng.fetch("hot", 10.0, "r1", 0.0)
+        assert tr.start_s == 0.0              # demand did NOT queue
+        assert eng.stats.preempted == 1
+        assert eng.inflight("r0", "spec") is None
+        assert "spec" not in stores["r0"]     # placeholder withdrawn
+        assert eng.index.locations("spec") == set()
+
+    def test_prefetch_refused_when_slots_saturated(self):
+        _, _, eng, _ = engine_fixture(max_inflight=2)   # spec cap = 1
+        assert eng.fetch("p1", 10.0, "r0", 0.0, kind="prefetch") is not None
+        assert eng.fetch("p2", 10.0, "r1", 0.0, kind="prefetch") is None
+        assert eng.stats.refused_speculative == 1
+
+    def test_demand_join_promotes_inflight_prefetch(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        tr = eng.fetch("obj", 10.0, "r0", 0.0, kind="prefetch")
+        same = eng.fetch("obj", 10.0, "r0", 0.1)        # demand rides it
+        assert same is tr and tr.kind == "demand"
+        # promoted flight is no longer preemptable: next demand queues
+        other = eng.fetch("d2", 10.0, "r1", 0.1)
+        assert eng.stats.preempted == 0
+        assert other.start_s == pytest.approx(tr.ready_s)
+
+    def test_preempting_queued_speculation_respects_the_slot_cap(self):
+        """Regression: cancelling a *queued* speculative flight frees no
+        active slot, so the demand still queues behind the demand flights
+        ahead of it — it must not run concurrently with them."""
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        d1 = eng.fetch("d1", 10.0, "r0", 0.0)           # active slot
+        d2 = eng.fetch("d2", 10.0, "r1", 0.0)           # queued demand
+        eng.fetch("ws", 10.0, "r0", 0.0, kind="warmstart",
+                  allow_queue=True)                     # queued speculation
+        d3 = eng.fetch("d3", 10.0, "r1", 0.5)
+        assert eng.stats.preempted == 1                 # ws stood in the way
+        assert eng.inflight("r0", "ws") is None
+        assert d3.start_s == pytest.approx(d2.ready_s)  # behind demand only
+        assert d3.start_s >= d1.ready_s                 # cap of 1 respected
+
+    def test_demand_clears_all_blocking_speculation_and_starts_now(self):
+        """Regression: one cancel is not enough — a queued clone keeps its
+        issued schedule, so demand preempts speculation until a slot frees
+        *now* instead of queueing behind any surviving speculative flight."""
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        eng.fetch("spec", 10.0, "r0", 0.0, kind="prefetch")   # active
+        eng.fetch("ws", 10.0, "r1", 0.0, kind="warmstart",
+                  allow_queue=True)                           # queued, lands later
+        tr = eng.fetch("hot", 10.0, "r1", 0.5)
+        assert eng.stats.preempted == 2
+        assert eng.inflight("r0", "spec") is None
+        assert eng.inflight("r1", "ws") is None
+        assert tr.start_s == 0.5                              # no queueing
+
+    def test_load_frac_is_clamped_with_a_queue_backlog(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        for i in range(3):
+            eng.fetch(f"d{i}", 10.0, "r0", 0.0)         # 1 active + 2 queued
+        assert eng.load_frac() == 1.0
+
+    def test_demand_still_queues_behind_demand(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        first = eng.fetch("d1", 10.0, "r0", 0.0)
+        second = eng.fetch("d2", 10.0, "r1", 0.0)
+        assert second.start_s == pytest.approx(first.ready_s)
+        assert eng.stats.preempted == 0
+
+    def test_cancel_releases_engaged_bandwidth(self):
+        _, link, eng, stores = engine_fixture(max_inflight=1)
+        eng.fetch("spec", 10.0, "r0", 0.0, kind="prefetch")
+        assert link.omega == 1
+        eng.fetch("hot", 10.0, "r1", 0.0)     # preempts spec
+        assert link.omega == 1                # spec's engagement released
+        assert eng.stats.preempted_bytes == 10.0
+
+    def test_warmstart_queues_instead_of_refusal(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        first = eng.fetch("d1", 10.0, "r0", 0.0)
+        ws = eng.fetch("clone", 10.0, "r1", 0.0, kind="warmstart",
+                       allow_queue=True)
+        assert ws is not None                 # bulk clone serializes, not dropped
+        assert ws.start_s == pytest.approx(first.ready_s)
+        assert eng.stats.refused_speculative == 0
+
+    def test_prefetcher_throttles_on_engine_load(self):
+        _, _, eng, _ = engine_fixture(max_inflight=2)
+        pf = Prefetcher(eng, size_fn=lambda obj: 10.0,
+                        max_engine_load_frac=0.5)
+        eng.fetch("d1", 10.0, "r0", 0.0)      # load 0.5 = threshold
+        assert pf.warm("r1", ["obj"], now=0.0) == []
+        assert pf.stats.throttled == 1
+
+    def test_prefetcher_tracks_preempted_warms(self):
+        _, _, eng, _ = engine_fixture(max_inflight=1)
+        pf = Prefetcher(eng, size_fn=lambda obj: 10.0,
+                        max_engine_load_frac=1.0)
+        pf.warm("r0", ["spec"], now=0.0)
+        eng.fetch("hot", 10.0, "r1", 0.0)     # demand preempts the warm
+        assert pf.stats.preempted == 1
+        pf.on_access("r0", "spec", now=5.0)   # stale entry already cleaned
+        assert pf.stats.useful == 0 and pf.stats.late == 0
+
+
 # ------------------------------------------------- tier-aware dispatch scoring
 class TestTierAwareDispatch:
     def make(self, weights):

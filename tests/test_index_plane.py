@@ -1,0 +1,295 @@
+"""Sharded index plane: ring, coherence bus, drop-in equivalence, GCC floor.
+
+Complements ``test_index_properties.py`` (randomized invariants) with exact
+deterministic assertions: hash-ring stability, coherence batching/coalescing
+semantics, ``ShardedIndex`` behaving identically to ``CentralizedIndex`` on
+a seeded mixed-op trace, and the good-cache-compute tier-floor bypass.
+"""
+
+import random
+
+import pytest
+
+from repro.core.dispatch import DataAwareDispatcher
+from repro.core.index import (
+    CentralizedIndex,
+    CoherenceBus,
+    HashRing,
+    IndexShard,
+    ShardedIndex,
+)
+from repro.core.task import ExecutorState
+
+
+# ----------------------------------------------------------------- hash ring
+class TestHashRing:
+    def test_mapping_is_deterministic_across_instances(self):
+        a, b = HashRing(8), HashRing(8)
+        keys = [f"obj{i}" for i in range(500)]
+        assert [a.shard_of(k) for k in keys] == [b.shard_of(k) for k in keys]
+
+    def test_all_shards_receive_keys(self):
+        ring = HashRing(8, vnodes=64)
+        owners = {ring.shard_of(f"obj{i}") for i in range(2000)}
+        assert owners == set(range(8))
+
+    def test_single_shard_owns_everything(self):
+        ring = HashRing(1)
+        assert {ring.shard_of(f"k{i}") for i in range(100)} == {0}
+
+    def test_rejects_degenerate_configs(self):
+        with pytest.raises(ValueError):
+            HashRing(0)
+        with pytest.raises(ValueError):
+            HashRing(4, vnodes=0)
+
+    def test_growth_moves_keys_only_to_the_new_shard(self):
+        old, new = HashRing(6), HashRing(7)
+        moved = 0
+        for i in range(3000):
+            k = f"obj{i}"
+            before, after = old.shard_of(k), new.shard_of(k)
+            if before != after:
+                assert after == 6    # consistent hashing: movers join shard 6
+                moved += 1
+        assert 0 < moved < 3000      # some keys moved, far from all
+
+
+# ------------------------------------------------------------- coherence bus
+class TestCoherenceBus:
+    def test_ops_apply_only_when_due(self):
+        idx = ShardedIndex(shards=2, coherence_delay_s=5.0)
+        idx.enqueue_update(0.0, "add", "a", "e0")
+        assert idx.apply_updates(4.9) == 0
+        assert idx.locations("a") == set()
+        assert idx.apply_updates(5.0) == 1
+        assert idx.locations("a") == {"e0"}
+
+    def test_batch_coalesces_add_then_remove(self):
+        idx = ShardedIndex(shards=1, coherence_delay_s=0.0)
+        idx.enqueue_update(0.0, "add", "a", "e0")
+        idx.enqueue_update(0.0, "remove", "a", "e0")
+        applied = idx.apply_updates(0.0)
+        assert applied == 2                   # raw ops drained
+        assert idx.bus.stats.coalesced == 1   # one absorbed by last-wins
+        assert idx.bus.stats.mutations == 1   # only the net "remove" ran
+        assert idx.locations("a") == set()
+
+    def test_window_quantization_merges_drain_ticks(self):
+        bus = CoherenceBus(1, delay_s=0.0, batch_window_s=1.0)
+        for t in (0.1, 0.4, 0.8):
+            bus.enqueue(t, "add", f"o{t}", "e0", 0)
+        applied_batches = []
+        bus.apply(0.9, lambda sid, delta: applied_batches.append(len(delta)) or len(delta))
+        assert applied_batches == []          # all quantized to the 1.0 boundary
+        bus.apply(1.0, lambda sid, delta: applied_batches.append(len(delta)) or len(delta))
+        assert applied_batches == [3]         # one heartbeat batch
+        assert bus.stats.ops_per_batch == 3.0
+
+    def test_per_shard_batches_are_independent(self):
+        idx = ShardedIndex(shards=8, coherence_delay_s=0.0)
+        files = [f"f{i}" for i in range(40)]
+        for f in files:
+            idx.enqueue_update(0.0, "add", f, "e0")
+        idx.apply_updates(0.0)
+        touched = {idx.ring.shard_of(f) for f in files}
+        assert idx.bus.stats.batches == len(touched)   # one batch per shard
+
+
+# -------------------------------------------------- drop-in equivalence
+def _mirror_trace(shards, seed=42, ops=400):
+    """Apply one seeded op trace to both indices, comparing after each op."""
+    flat = CentralizedIndex(coherence_delay_s=1.0)
+    sharded = ShardedIndex(shards=shards, coherence_delay_s=1.0)
+    rng = random.Random(seed)
+    files = [f"f{i}" for i in range(30)]
+    execs = [f"e{i}" for i in range(6)]
+    tiers = [None, "hbm", "dram", "disk"]
+    t = 0.0
+    for _ in range(ops):
+        t += rng.random()
+        kind = rng.randrange(6)
+        f, e = rng.choice(files), rng.choice(execs)
+        if kind == 0:
+            tier = rng.choice(tiers)
+            flat.add(f, e, tier=tier)
+            sharded.add(f, e, tier=tier)
+        elif kind == 1:
+            flat.remove(f, e)
+            sharded.remove(f, e)
+        elif kind == 2:
+            snap = {rng.choice(files): rng.choice(tiers[1:])
+                    for _ in range(rng.randrange(8))}
+            assert flat.publish(e, snap) == sharded.publish(e, snap)
+        elif kind == 3:
+            flat.drop_executor(e)
+            sharded.drop_executor(e)
+        elif kind == 4:
+            op = rng.choice(["add", "remove"])
+            flat.enqueue_update(t, op, f, e)
+            sharded.enqueue_update(t, op, f, e)
+        else:
+            assert flat.apply_updates(t) == sharded.apply_updates(t)
+        # full query-surface comparison
+        probe = rng.sample(files, 3)
+        assert flat.locations(f) == sharded.locations(f)
+        assert flat.cached_at(e) == sharded.cached_at(e)
+        assert flat.tier_of(f, e) == sharded.tier_of(f, e)
+        assert flat.cache_hits(probe, e) == sharded.cache_hits(probe, e)
+        assert dict(flat.candidate_executors(probe)) == \
+            dict(sharded.candidate_executors(probe))
+        assert flat.replication_factor(f) == sharded.replication_factor(f)
+    # drain everything still pending and do a final sweep
+    assert flat.apply_updates(t + 10.0) == sharded.apply_updates(t + 10.0)
+    for f in files:
+        assert flat.locations(f) == sharded.locations(f)
+    for e in execs:
+        assert flat.cached_at(e) == sharded.cached_at(e)
+
+
+@pytest.mark.parametrize("shards", [1, 4, 16])
+def test_sharded_index_mirrors_flat_on_mixed_trace(shards):
+    _mirror_trace(shards)
+
+
+def test_bulk_locations_matches_pointwise():
+    idx = ShardedIndex(shards=4)
+    for i in range(20):
+        idx.add(f"f{i}", f"e{i % 3}")
+    files = [f"f{i}" for i in range(0, 20, 2)]
+    assert idx.bulk_locations(files) == {f: idx.locations(f) for f in files}
+
+
+def test_hot_objects_merges_shard_counters():
+    idx = ShardedIndex(shards=4)
+    for i in range(12):
+        for _ in range(i):
+            idx.note_access(f"f{i}")
+    top = idx.hot_objects(3)
+    assert top == [("f11", 11), ("f10", 10), ("f9", 9)]
+
+
+def test_entry_count_has_no_tier_side_table_inflation():
+    # Folding tier into the i_map value: a tiered copy is ONE record.
+    idx = ShardedIndex(shards=2)
+    for i in range(10):
+        idx.add(f"f{i}", "e0", tier="dram")
+    assert idx.entry_count() == 10
+
+
+def test_tierless_readd_preserves_known_tier():
+    """Regression: loose-coherence adds carry no tier; folding tier into
+    the i_map value must not let them erase it (flat-index parity)."""
+    flat, idx = CentralizedIndex(), ShardedIndex(shards=4)
+    for i in (flat, idx):
+        i.add("f", "e0", tier="hbm")
+        i.add("f", "e0")                          # direct tier-less re-add
+        i.enqueue_update(0.0, "add", "f", "e0")   # coherence re-add
+        i.apply_updates(0.0)
+    assert flat.tier_of("f", "e0") == "hbm"
+    assert idx.tier_of("f", "e0") == "hbm"
+
+
+def test_coalesced_tierless_add_keeps_earlier_tier():
+    idx = ShardedIndex(shards=1, coherence_delay_s=0.0)
+    idx.enqueue_update(0.0, "add", "f", "e0", tier="dram")
+    idx.enqueue_update(0.0, "add", "f", "e0")     # same batch, no tier
+    idx.apply_updates(0.0)
+    assert idx.tier_of("f", "e0") == "dram"       # sequential-equivalent
+
+
+def test_coalesced_remove_then_add_does_not_resurrect_tier():
+    """Regression: remove + tier-less add in one drained batch must end
+    with tier None (remove-first), exactly like sequential application —
+    not resurrect the pre-remove tier through the preserve branch."""
+    flat, idx = CentralizedIndex(coherence_delay_s=1.0), \
+        ShardedIndex(shards=2, coherence_delay_s=1.0)
+    for i in (flat, idx):
+        i.add("f", "e0", tier="disk")
+        i.enqueue_update(0.0, "remove", "f", "e0")
+        i.enqueue_update(0.0, "add", "f", "e0")
+        i.apply_updates(1.0)                      # both due in one drain
+    assert flat.tier_of("f", "e0") is None
+    assert idx.tier_of("f", "e0") is None
+    assert idx.locations("f") == {"e0"}
+
+
+def test_coalesced_remove_add_add_keeps_post_remove_tier():
+    idx = ShardedIndex(shards=1, coherence_delay_s=0.0)
+    idx.add("f", "e0", tier="disk")
+    idx.enqueue_update(0.0, "remove", "f", "e0")
+    idx.enqueue_update(0.0, "add", "f", "e0", tier="hbm")
+    idx.enqueue_update(0.0, "add", "f", "e0")     # preserves the *new* tier
+    idx.apply_updates(0.0)
+    assert idx.tier_of("f", "e0") == "hbm"
+
+
+def test_shard_maps_stay_mutually_consistent_after_drop():
+    shard = IndexShard()
+    shard.add("a", "e0", "hbm")
+    shard.add("a", "e1", None)
+    shard.add("b", "e0", "dram")
+    shard.drop_executor("e0")
+    assert shard.locations("a") == {"e1"}
+    assert shard.locations("b") == set()
+    assert shard.cached_at("e0") == set()
+    assert "b" not in shard.i_map                  # empty holder map pruned
+
+
+# --------------------------------------------------- dispatcher integration
+def _make_dispatcher(index, **kw):
+    d = DataAwareDispatcher(policy="good-cache-compute", index=index, **kw)
+    for name in ("e0", "e1"):
+        d.register_executor(name)
+    return d
+
+
+class Item:
+    def __init__(self, key, objects):
+        self.key = key
+        self.objects = tuple(objects)
+
+
+class TestGCCTierFloor:
+    WEIGHTS = {"hbm": 1.0, "dram": 0.5, "disk": 0.25}
+
+    def _dispatcher(self, index, tier, floor):
+        d = _make_dispatcher(
+            index,
+            tier_weights=self.WEIGHTS,
+            gcc_delay_tier_floor=floor,
+            cpu_util_threshold=0.0,     # always in cache mode
+            max_replicas=1,             # no replication headroom escape
+        )
+        index.add("obj", "e0", tier=tier)
+        d.set_state("e0", ExecutorState.BUSY)
+        d.submit(Item(0, ["obj"]))
+        return d
+
+    @pytest.mark.parametrize("index_cls", [CentralizedIndex,
+                                           lambda: ShardedIndex(shards=4)])
+    def test_disk_resident_copy_does_not_delay(self, index_cls):
+        d = self._dispatcher(index_cls(), "disk", floor=0.5)
+        pair = d.notify()
+        assert pair is not None and pair[0] == "e1"   # bypassed to free exec
+        assert d.stats.tier_floor_bypasses == 1
+
+    def test_hbm_resident_copy_still_delays(self):
+        d = self._dispatcher(CentralizedIndex(), "hbm", floor=0.5)
+        assert d.notify() is None
+        assert d.stats.delayed == 1
+        assert d.stats.tier_floor_bypasses == 0
+
+    def test_floor_disabled_by_default(self):
+        d = self._dispatcher(CentralizedIndex(), "disk", floor=0.0)
+        assert d.notify() is None                     # paper behavior: delay
+
+    def test_pick_items_bypasses_for_slow_tier_head(self):
+        idx = CentralizedIndex()
+        d = self._dispatcher(idx, "disk", floor=0.5)
+        # e1 (no cached objects) asks for work: GCC-above-threshold would
+        # normally refuse (rep at cap), but the only copy is disk-resident.
+        d.set_state("e1", ExecutorState.PENDING)
+        picked = d.pick_items("e1")
+        assert [d._key(i) for i in picked] == [0]
+        assert d.stats.tier_floor_bypasses >= 1

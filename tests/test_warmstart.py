@@ -1,0 +1,180 @@
+"""Replica warm-start: clone selection, router integration, ramp behavior."""
+
+import pytest
+
+from repro.core.index import CentralizedIndex, ShardedIndex
+from repro.core.provisioner import DynamicResourceProvisioner
+from repro.core.store import BandwidthResource
+from repro.diffusion.tiers import TieredStore, TierSpec
+from repro.diffusion.transfer import TransferEngine
+from repro.index.warmstart import clone_hottest
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+
+def plane(index=None, tiers=(TierSpec("hbm", 100.0), TierSpec("dram", 100.0, 10.0))):
+    idx = index if index is not None else CentralizedIndex()
+    eng = TransferEngine(idx, BandwidthResource("gpfs", 10.0), max_inflight=8)
+    stores = {}
+    for name in ("r0", "r1", "new"):
+        st = TieredStore(name, list(tiers), index=idx, nic_bw_bytes_per_s=100.0)
+        stores[name] = st
+        eng.register(name, st)
+    return idx, eng, stores
+
+
+def heat(idx, counts):
+    for obj, n in counts.items():
+        idx.note_access(obj, n)
+
+
+@pytest.mark.parametrize("index_factory", [CentralizedIndex,
+                                           lambda: ShardedIndex(shards=4)])
+def test_clones_exactly_the_hottest_peer_held_objects(index_factory):
+    idx, eng, stores = plane(index_factory())
+    for i in range(6):
+        stores["r0"].admit(f"o{i}", 1.0)
+    heat(idx, {f"o{i}": 10 - i for i in range(6)})
+    heat(idx, {"never-cached": 99})           # hot but no holder: skipped
+    report = clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                           max_objects=3, engine=eng)
+    assert report.cloned == 3 and report.skipped_cold == 1
+    assert all(f"o{i}" in stores["new"] for i in range(3))
+    assert "o3" not in stores["new"]          # budget cut off the tail
+
+
+def test_resident_objects_do_not_consume_budget():
+    idx, eng, stores = plane()
+    for i in range(4):
+        stores["r0"].admit(f"o{i}", 1.0)
+    stores["new"].admit("o0", 1.0)            # already resident
+    heat(idx, {f"o{i}": 10 - i for i in range(4)})
+    report = clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                           max_objects=2, engine=eng)
+    assert report.skipped_resident == 1
+    assert report.cloned == 2                 # o1, o2 — o0 didn't count
+    assert "o2" in stores["new"]
+
+
+def test_byte_budget_caps_the_clone_set():
+    idx, eng, stores = plane()
+    for i in range(5):
+        stores["r0"].admit(f"o{i}", 3.0)
+    heat(idx, {f"o{i}": 10 - i for i in range(5)})
+    report = clone_hottest(idx, stores["new"], "new", lambda o: 3.0, 0.0,
+                           max_objects=5, engine=eng, max_bytes=6.0)
+    assert report.cloned == 2 and report.bytes_cloned == 6.0
+
+
+def test_clones_land_below_the_top_tier():
+    idx, eng, stores = plane()
+    stores["r0"].admit("hot", 1.0)
+    heat(idx, {"hot": 5})
+    clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                  max_objects=1, engine=eng, admit_tier=1)
+    assert stores["new"].tier_of("hot") == "dram"   # speculative: not in HBM
+
+
+def test_engineless_warmstart_admits_directly():
+    idx, _, stores = plane()
+    stores["r0"].admit("a", 1.0)
+    heat(idx, {"a": 3})
+    report = clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                           max_objects=1, engine=None)
+    assert report.cloned == 1 and "a" in stores["new"]
+
+
+def test_two_runs_from_same_state_clone_the_same_set():
+    def run():
+        idx, eng, stores = plane()
+        for i in range(8):
+            stores["r0"].admit(f"o{i}", 1.0)
+        heat(idx, {f"o{i}": (i * 7) % 5 + 1 for i in range(8)})
+        clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                      max_objects=4, engine=eng)
+        return sorted(stores["new"].contents())
+    assert run() == run()                     # deterministic ranking + ties
+
+
+# ------------------------------------------------------- router integration
+def tiered_router(warmstart_objects, index=None, drp=False):
+    return CacheAffinityRouter(
+        policy="good-cache-compute",
+        object_size_fn=lambda o: 1.0,
+        index=index,
+        tier_specs=[TierSpec("hbm", 64.0), TierSpec("dram", 256.0, 50.0)],
+        persistent_bw_bytes_per_s=10.0,
+        nic_bw_bytes_per_s=100.0,
+        warmstart_objects=warmstart_objects,
+        provisioner=DynamicResourceProvisioner(
+            max_nodes=4, min_nodes=1, policy="one",
+            allocation_latency_s=(0.0, 0.0)) if drp else None,
+    )
+
+
+def _serve(router, rid, objects, now):
+    done = []
+    for a in router.submit(RoutedRequest(rid, tuple(objects)), now=now):
+        done.extend(a.requests)
+    for rr in list(done):
+        for a in router.complete(rr, now=now + 0.01):
+            done.extend(a.requests)
+    return done
+
+
+def test_drp_scale_up_triggers_warm_start():
+    r = tiered_router(warmstart_objects=8, drp=True)
+    r.add_replica()
+    r.drp.registered = 1
+    for i in range(8):                        # heat the pool's working set
+        _serve(r, i, [f"kv:s{i % 3}"], now=float(i))
+    # burst without completions: queue builds -> DRP provisions -> warm-start
+    for i in range(8, 16):
+        r.submit(RoutedRequest(i, (f"kv:s{i % 3}",)), now=float(i))
+    assert r.stats.scale_ups >= 1
+    assert r.warmstart.replicas_warmed == r.stats.scale_ups
+    assert r.warmstart.cloned >= 1
+    newbies = [n for n in r.replicas() if n != "replica0"]
+    assert any(len(r.stores[n].tiers) > 0 for n in newbies)
+
+
+def test_warm_replica_ramps_at_least_twice_cold():
+    """Deterministic ramp: same request sequence, warm vs cold newcomer."""
+    def ramp(warm):
+        r = tiered_router(warmstart_objects=8 if warm else 0)
+        for _ in range(2):
+            r.add_replica()
+        for i in range(12):                   # heat r0/r1 with 4 hot sessions
+            _serve(r, i, [f"kv:s{i % 4}"], now=float(i))
+        name = r.add_replica()
+        if warm:
+            r.warm_start(name, now=20.0)
+        # occupy the veterans so follow-ups land on the newcomer
+        pinned = []
+        for j, rep in enumerate(("a", "b")):
+            assigns = r.submit(RoutedRequest(100 + j, (f"kv:pin{rep}",)),
+                               now=21.0 + j * 0.001)
+            pinned.extend(req for a in assigns for req in a.requests)
+        hits = misses = 0
+        for k in range(8):
+            served = _serve(r, 200 + k, [f"kv:s{k % 4}"], now=22.0 + k)
+            for req in served:
+                if req.replica == name:
+                    hits += req.hits
+                    misses += req.misses
+        return hits / max(1, hits + misses)
+    cold, warm = ramp(False), ramp(True)
+    assert warm >= 2 * cold or (cold == 0.0 and warm > 0.0)
+    assert warm > 0.0
+
+
+def test_warmstart_stats_aggregate_over_replicas():
+    r = tiered_router(warmstart_objects=4)
+    a = r.add_replica()
+    for i in range(4):
+        _serve(r, i, [f"kv:s{i}"], now=float(i))
+    b = r.add_replica()
+    rep1 = r.warm_start(b, now=10.0)
+    c = r.add_replica()
+    rep2 = r.warm_start(c, now=11.0)
+    assert r.warmstart.replicas_warmed == 2
+    assert r.warmstart.cloned == rep1.cloned + rep2.cloned
