@@ -35,6 +35,7 @@ def main() -> None:
     from . import (
         bench_cache_throughput,
         bench_diffusion_tiers,
+        bench_dispatch_vec,
         bench_index_scale,
         bench_model_error,
         bench_pi_speedup,
@@ -49,6 +50,10 @@ def main() -> None:
         ("scheduler", lambda: bench_scheduler.main(n_sched)),
         ("serve_routing", lambda: bench_serve_routing.main(n_serve)),
         ("diffusion_tiers", lambda: bench_diffusion_tiers.main(n_serve)),
+        # dispatch_vec asserts bit-identical reference-vs-vectorized
+        # assignment sequences (all five policies) and writes
+        # BENCH_dispatch.json; divergence raises -> ERROR row -> CI fails.
+        ("dispatch_vec", lambda: bench_dispatch_vec.main(n_idx)),
         # index_scale's decisions_equal section raises on any sharded-vs-flat
         # dispatch divergence -> ERROR row -> the smoke gate (CI) fails.
         ("index_scale", lambda: bench_index_scale.main(n_idx)),

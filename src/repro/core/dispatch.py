@@ -339,6 +339,24 @@ class DataAwareDispatcher:
         self._dispatch_item(item, name)
         return (name, item)
 
+    def notify_batch(self, limit: Optional[int] = None) -> List[Tuple[str, Any]]:
+        """Drain phase 1: repeated ``notify()`` until it yields nothing.
+
+        The reference engine simply loops (one full window scan per
+        assignment); ``repro.dispatch_vec.VectorizedDispatcher`` overrides
+        this with a single-scan batched drain that produces the *identical*
+        assignment sequence.  Valid only when nothing else mutates dispatcher
+        or index state between the emulated calls — which is how the
+        simulator's ``_try_notify`` and the dispatch benchmarks drive it.
+        """
+        out: List[Tuple[str, Any]] = []
+        while limit is None or len(out) < limit:
+            pair = self.notify()
+            if pair is None:
+                break
+            out.append(pair)
+        return out
+
     # -------------------------------------------------------------- phase 2
     def pick_items(self, executor: str, m: int = 1) -> List[Any]:
         """Phase 2: executor asks for up to ``m`` items (window-scored).
@@ -410,7 +428,14 @@ class DataAwareDispatcher:
             self.set_state(executor, ExecutorState.BUSY)
             return picked
 
-        # No cache hits at all: policy-dependent fallback (paper Section 3.2).
+        return self._no_hit_fallback(executor, m)
+
+    def _no_hit_fallback(self, executor: str, m: int) -> List[Any]:
+        """Phase-2 tail when the window scan found no cache hits at all:
+        the policy-dependent fallback of paper Section 3.2.  Shared with the
+        vectorized engine (``repro.dispatch_vec``) so both implementations
+        stay decision-identical by construction on this path."""
+        picked: List[Any] = []
         cache_mode = self._cache_mode()
         if cache_mode and self.policy == "max-cache-hit":
             # Return executor to the free pool; item waits for its data.

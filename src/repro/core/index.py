@@ -25,9 +25,19 @@ from __future__ import annotations
 
 from collections import defaultdict, deque
 from typing import (
-    Deque, Dict, Iterable, List, Mapping, Optional, Protocol, Set, Tuple,
-    runtime_checkable,
+    Callable, Deque, Dict, Iterable, Iterator, List, Mapping, Optional,
+    Protocol, Set, Tuple, runtime_checkable,
 )
+
+# Index event listener: called with (op, file, executor, tier) where op is
+#   "add"    — a (file, executor) presence entry was created (tier = the
+#              tier it landed in, or None for flat stores),
+#   "tier"   — an existing entry's holding tier changed (tier = new tier),
+#   "remove" — an existing presence entry was withdrawn.
+# Listeners fire only on *actual* state changes (an idempotent re-add is
+# silent), which is what lets the vectorized dispatch plane maintain its
+# presence/score arrays incrementally instead of rebuilding per decision.
+IndexListener = Callable[[str, str, str, Optional[str]], None]
 
 
 @runtime_checkable
@@ -53,14 +63,25 @@ class CacheLocationIndex(Protocol):
     def cache_hits(self, files: Iterable[str], executor: str) -> int: ...
     def candidate_executors(self, files: Iterable[str]) -> Dict[str, int]: ...
     def replication_factor(self, file: str) -> int: ...
-    def note_access(self, file: str, n: int = 1) -> None: ...
-    def hot_objects(self, k: int) -> List[Tuple[str, int]]: ...
+    def subscribe(self, listener: IndexListener) -> None: ...
+    def entries(self) -> Iterator[Tuple[str, str, Optional[str]]]: ...
+    def note_access(self, file: str, n: int = 1,
+                    now: Optional[float] = None) -> None: ...
+    def hot_objects(self, k: int,
+                    now: Optional[float] = None) -> List[Tuple[str, float]]: ...
+
+
+# ``HeatCounter`` (decayed per-object access heat) lives in
+# ``repro.index.shard`` — a leaf module this one imports at the bottom — and
+# is re-exported here; ``CentralizedIndex`` references it at instantiation
+# time, after the bottom imports have run.
 
 
 class CentralizedIndex:
     """Dispatcher-side index. Supports loose coherence via an update queue."""
 
-    def __init__(self, coherence_delay_s: float = 0.0):
+    def __init__(self, coherence_delay_s: float = 0.0,
+                 heat_half_life_s: Optional[float] = None):
         self.i_map: Dict[str, Set[str]] = defaultdict(set)
         self.e_map: Dict[str, Set[str]] = defaultdict(set)
         self.coherence_delay_s = coherence_delay_s
@@ -73,29 +94,54 @@ class CentralizedIndex:
         # Constant delay => appends arrive in time order => deque pop-left.
         self._pending: Deque[Tuple[float, str, str, str]] = deque()
         # Per-object access heat (router-fed): the warm-start ranking signal.
-        self._access_counts: Dict[str, int] = defaultdict(int)
+        self._access = HeatCounter(heat_half_life_s)
+        self._listeners: List[IndexListener] = []
 
     # -- synchronous mutation (coherent view) --------------------------------
     version: int = 0  # bumped on every mutation (scheduler scan memoization)
 
+    def subscribe(self, listener: IndexListener) -> None:
+        """Register an entry-change listener (see ``IndexListener``)."""
+        self._listeners.append(listener)
+
+    def _emit(self, op: str, file: str, executor: str,
+              tier: Optional[str]) -> None:
+        for cb in self._listeners:
+            cb(op, file, executor, tier)
+
     def add(self, file: str, executor: str, tier: Optional[str] = None) -> None:
         self.version += 1
-        self.i_map[file].add(executor)
+        holders = self.i_map[file]
+        new = executor not in holders
+        holders.add(executor)
         self.e_map[executor].add(file)
+        old_tier = self._tiers.get((file, executor))
         if tier is not None:
             self._tiers[(file, executor)] = tier
+        if self._listeners:
+            if new:
+                self._emit("add", file, executor,
+                           tier if tier is not None else old_tier)
+            elif tier is not None and tier != old_tier:
+                self._emit("tier", file, executor, tier)
 
     def remove(self, file: str, executor: str) -> None:
         self.version += 1
-        self.i_map.get(file, set()).discard(executor)
+        holders = self.i_map.get(file, set())
+        present = executor in holders
+        holders.discard(executor)
         self.e_map.get(executor, set()).discard(file)
         self._tiers.pop((file, executor), None)
+        if present and self._listeners:
+            self._emit("remove", file, executor, None)
 
     def drop_executor(self, executor: str) -> None:
         """Executor released/failed: forget all its cache contents."""
         for f in self.e_map.pop(executor, set()):
             self.i_map.get(f, set()).discard(executor)
             self._tiers.pop((f, executor), None)
+            if self._listeners:
+                self._emit("remove", f, executor, None)
 
     def publish(
         self,
@@ -166,14 +212,29 @@ class CentralizedIndex:
     def replication_factor(self, file: str) -> int:
         return len(self.i_map.get(file, set()))
 
-    # -- access heat (warm-start ranking) -------------------------------------
-    def note_access(self, file: str, n: int = 1) -> None:
-        self._access_counts[file] += n
+    def entry_count(self) -> int:
+        """Resident (file, executor) records (memory-footprint metric)."""
+        return sum(len(es) for es in self.i_map.values())
 
-    def hot_objects(self, k: int) -> List[Tuple[str, int]]:
-        """Top-k objects by access count (count desc, then name)."""
-        ranked = sorted(self._access_counts.items(), key=lambda kv: (-kv[1], kv[0]))
-        return ranked[:k]
+    def entries(self) -> Iterator[Tuple[str, str, Optional[str]]]:
+        """Iterate every (file, executor, tier) presence record (bootstrap
+        path for incremental consumers that subscribe mid-stream)."""
+        for f, execs in self.i_map.items():
+            for e in execs:
+                yield f, e, self._tiers.get((f, e))
+
+    # -- access heat (warm-start ranking) -------------------------------------
+    def note_access(self, file: str, n: int = 1,
+                    now: Optional[float] = None) -> None:
+        self._access.note(file, n, now)
+
+    def hot_objects(self, k: int,
+                    now: Optional[float] = None) -> List[Tuple[str, float]]:
+        """Top-k objects by (decayed) access heat (heat desc, then name)."""
+        return self._access.top(k, now)
+
+    def heat_of(self, file: str, now: Optional[float] = None) -> float:
+        return self._access.heat_of(file, now)
 
 
 class LocalIndex:
@@ -198,7 +259,7 @@ class LocalIndex:
 # acyclic regardless of which module loads first.
 from ..index.coherence import CoherenceBus  # noqa: E402
 from ..index.ring import HashRing  # noqa: E402
-from ..index.shard import IndexShard  # noqa: E402
+from ..index.shard import HeatCounter, IndexShard  # noqa: E402
 from ..index.sharded import ShardedIndex  # noqa: E402
 
 __all__ = [
@@ -206,6 +267,8 @@ __all__ = [
     "CentralizedIndex",
     "CoherenceBus",
     "HashRing",
+    "HeatCounter",
+    "IndexListener",
     "IndexShard",
     "LocalIndex",
     "ShardedIndex",

@@ -32,7 +32,7 @@ from typing import Union
 from ..diffusion.tiers import TieredStore, TierSpec
 from .index import CentralizedIndex, ShardedIndex
 from .provisioner import DynamicResourceProvisioner, ProvisionRequest
-from .scheduler import DataAwareScheduler
+from .scheduler import make_scheduler
 from .store import BandwidthResource, PersistentStore, TransientStore
 from .task import ExecutorState, Task, TaskState
 from .workload import Workload
@@ -110,6 +110,18 @@ class SimConfig:
     # decisions are identical either way (bench_index_scale asserts it) —
     # the knob exists so DES studies can measure the coherence/scan planes.
     index_shards: int = 0
+    # Coherence heartbeat quantization (sharded plane only): update messages
+    # landing inside one window ride a single batched delta application.
+    # > 0 trades index staleness for batch amortization — the DES's
+    # stale-claim counters quantify the dispatch-quality cost (the paper's
+    # Sec 3.1.1 loose-coherence argument, measured).
+    coherence_batch_window_s: float = 0.0
+    # Array-backed dispatch plane (repro.dispatch_vec): decision-identical
+    # to the reference scheduler — asserted by tests and the
+    # bench_dispatch_vec smoke gate — but batched: phase 1 drains all free
+    # executors from one window scan, scores come from incrementally
+    # maintained demand x presence matrices.
+    vectorized_dispatch: bool = False
 
 
 @dataclass
@@ -152,6 +164,8 @@ class SimResult:
     interval_completion: Dict[int, float]   # arrival-interval -> last done t
     avg_cpu_util: float
     scheduler_decisions: int
+    stale_claims: int = 0                   # index overstated locality
+    misdirected: int = 0                    # locality promised, none found
 
     # -- derived metrics (paper Section 5.2.x definitions) -------------------
     @property
@@ -225,10 +239,12 @@ class Simulator:
             self.index = ShardedIndex(
                 shards=config.index_shards,
                 coherence_delay_s=config.coherence_delay_s,
+                batch_window_s=config.coherence_batch_window_s,
             )
         else:
             self.index = CentralizedIndex(coherence_delay_s=config.coherence_delay_s)
-        self.sched = DataAwareScheduler(
+        self.sched = make_scheduler(
+            vectorized=config.vectorized_dispatch,
             policy=config.policy,
             window=config.window,
             cpu_util_threshold=config.cpu_util_threshold,
@@ -252,6 +268,13 @@ class Simulator:
         self.hits_local = 0
         self.hits_remote = 0
         self.misses = 0
+        # Coherence-quality counters: a *stale claim* is a task whose index
+        # view at execution time promised more local objects than the store
+        # actually held (loose coherence overstating locality); a
+        # *misdirected dispatch* is the worst case — locality promised,
+        # nothing local at all.  Both rise with coherence_batch_window_s.
+        self.stale_claims = 0
+        self.misdirected = 0
         self.done = 0
         self.peak_queue = 0
         self.exec_seconds = 0.0
@@ -366,11 +389,11 @@ class Simulator:
                 self._push(req.ready_time_s, "provision_ready", req)
 
     def _try_notify(self) -> None:
-        while True:
-            pair = self.sched.notify()
-            if pair is None:
-                return
-            executor, task = pair
+        # Batched phase-1 drain: nothing mutates scheduler/index state
+        # between assignments here, which is exactly the notify_batch
+        # contract — the reference engine loops notify() internally, the
+        # vectorized engine drains every free executor from a single scan.
+        for executor, task in self.sched.notify_batch():
             self._push(self.now + self.hw.dispatch_latency_s, "exec_tasks",
                        (executor, [task]))
 
@@ -420,6 +443,9 @@ class Simulator:
         engaged: List[Tuple[BandwidthResource, float]] = []
         use_cache = cfg.policy != "first-available"
         tiered = bool(cfg.tiers)
+        claimed = self.index.cache_hits(task.files, task.executor) \
+            if use_cache and task.executor else 0
+        local_before = task.hits_local
         for f in task.files:
             size = self.obj_size[f]
             if use_cache and tiered:
@@ -460,6 +486,11 @@ class Simulator:
                 self._bucket_bytes["gpfs"] += size
             if use_cache:
                 self._insert_cached(node, f, size)
+        actual_local = task.hits_local - local_before
+        if claimed > actual_local:
+            self.stale_claims += 1
+            if actual_local == 0:
+                self.misdirected += 1
         return o + data_t + task.compute_time_s, engaged
 
     def _find_peer(self, f: str, exclude: str) -> Optional[Node]:
@@ -601,6 +632,8 @@ class Simulator:
             interval_completion=dict(self.interval_completion),
             avg_cpu_util=avg_util,
             scheduler_decisions=self.sched.stats.decisions,
+            stale_claims=self.stale_claims,
+            misdirected=self.misdirected,
         )
 
 

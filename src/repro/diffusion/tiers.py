@@ -41,6 +41,7 @@ __all__ = [
     "StoreTier",
     "TieredStore",
     "default_tier_weights",
+    "roofline_tier_bw",
     "serving_tier_specs",
 ]
 
@@ -53,6 +54,33 @@ class TierSpec:
     capacity_bytes: float
     bw_bytes_per_s: float = float("inf")       # read bandwidth for swap-ins
     eviction: str = "lru"
+
+    @classmethod
+    def from_roofline(cls, name: str, capacity_bytes: float,
+                      eviction: str = "lru") -> "TierSpec":
+        """Tier spec with bandwidth calibrated from the roofline constants
+        the perf driver uses (``launch.rooflines``), instead of nominal values:
+
+          hbm   -> HBM_BW   (accelerator memory bandwidth)
+          dram  -> ICI_BW   (host<->device swap-ins ride the interconnect)
+          other -> ICI_BW/25 (local-disk class: the nominal 2 GB/s at the
+                   reference 50 GB/s link, kept as a pinned ratio)
+
+        ``tests/test_diffusion.py`` pins this mapping so the locality sweeps
+        stay anchored to the same machine model as the kernel roofline.
+        """
+        return cls(name, capacity_bytes, roofline_tier_bw(name), eviction)
+
+
+def roofline_tier_bw(name: str) -> float:
+    """Tier read bandwidth derived from the ``launch.rooflines`` constants
+    (the side-effect-free home of the dryrun/perf machine model)."""
+    from ..launch.rooflines import HBM_BW, ICI_BW
+    if name == "hbm":
+        return HBM_BW
+    if name == "dram":
+        return ICI_BW
+    return ICI_BW / 25.0
 
 
 def serving_tier_specs(

@@ -1,0 +1,5 @@
+"""Vectorized batch-dispatch plane (see ``dispatch_vec.core``)."""
+
+from .core import VectorizedDispatcher
+
+__all__ = ["VectorizedDispatcher"]

@@ -1,0 +1,623 @@
+"""Array-backed vectorized dispatch core: batched window scoring.
+
+``core.dispatch.DataAwareDispatcher`` implements the paper's two-phase
+algorithm over hash maps and sorted sets — the promised O(|theta(T_i)| +
+min(|Q|, W)) per decision, but paid in pure-Python dict/set iteration:
+``notify`` re-walks up to W queued items and ``pick_items`` re-sorts the
+executor's cached set on every call.  At serving rates the dispatcher
+becomes the critical path.  This module keeps the *decisions* bit-identical
+while moving the arithmetic into dense numpy state:
+
+  demand     : each queued item is a row of object-column ids (the window x
+               objects demand bitmap, stored row-sparse; ``demand_matrix()``
+               materializes the dense bitmap for the bulk/kernel path);
+  presence   : (executors x objects) bitmap + tier-weighted matrix, mirroring
+               the index for *registered* executors;
+  Sb / Sw    : (items x executors) unweighted-hit-count / weighted score
+               matrices — exactly ``demand @ presence.T`` — maintained
+               *incrementally* from three sources (no per-decision rebuild):
+                 * ``submit`` / ``_remove_from_queue`` (row lifecycle),
+                 * index entry-change events (``CacheLocationIndex.subscribe``),
+                 * executor registration (column lifecycle).
+
+Phase 1 then reduces to an argmax over score rows and phase 2 to a top-k
+over a score column.  ``notify_batch`` drains every free executor from a
+single window scan; repeated ``notify`` calls produce the same sequence (the
+golden reference semantics), so consumers that must interleave work between
+assignments (the serving router mutates tiers per assignment) keep calling
+``notify`` one at a time and still get the array-fast path.
+
+Bulk (re)scoring — ``rebuild_scores()`` — runs the one-shot matmul on the
+materialized bitmaps: numpy always; ``score_backend="pallas"`` routes it
+through the tiled Pallas kernel in ``repro.kernels.dispatch_score`` (engaged
+for large window x executor x object extents on TPU; interpret mode on CPU).
+The incremental plane never needs it in steady state — it exists for
+bootstrap-from-snapshot, consistency verification, and the benchmark's
+kernel-vs-numpy comparison.
+
+Decision equivalence (the ``bench_dispatch_vec`` gate and the property tests
+in ``tests/test_dispatch_vec.py`` assert bit-identical assignment sequences
+against the reference on seeded streams, all five policies x tier weights x
+GCC floor) relies on two documented properties:
+
+  * score updates are exact: with tier weights drawn from dyadic values
+    (``default_tier_weights`` uses 0.5**i) every incremental add/subtract is
+    exact in float64, so vectorized comparisons see the same ties the
+    reference's sequential accumulation sees;
+  * tie-breaks replay the reference iteration order: among free executors
+    with the maximal weighted count, the reference keeps the first to
+    *reach* that count (objects in item order, holders in name order) —
+    equivalently the one whose last contributing object comes earliest,
+    then the smaller name.
+"""
+
+from __future__ import annotations
+
+from itertools import islice
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.dispatch import DataAwareDispatcher
+from ..core.task import ExecutorState
+
+__all__ = ["VectorizedDispatcher"]
+
+
+class VectorizedDispatcher(DataAwareDispatcher):
+    """Drop-in ``DataAwareDispatcher`` with array-backed scoring state.
+
+    Same constructor surface plus ``score_backend`` ("numpy" | "pallas") for
+    the bulk-rescore path.  Requires an index that supports ``subscribe`` /
+    ``entries`` (both ``CentralizedIndex`` and ``ShardedIndex`` do).
+    """
+
+    def __init__(self, *args, score_backend: str = "numpy", **kwargs):
+        super().__init__(*args, **kwargs)
+        if not hasattr(self.index, "subscribe") or not hasattr(self.index, "entries"):
+            raise TypeError(
+                "VectorizedDispatcher needs an index with subscribe()/entries() "
+                f"(got {type(self.index).__name__}); use CentralizedIndex or "
+                "ShardedIndex")
+        self.score_backend = score_backend
+        # -- object columns --------------------------------------------------
+        o_cap = 256
+        self._obj_col: Dict[str, int] = {}
+        self._col_obj: List[Optional[str]] = [None] * o_cap
+        self._col_free: List[int] = list(range(o_cap - 1, -1, -1))
+        self._col_holders = np.zeros(o_cap, dtype=np.int32)   # replication factor
+        self._colmax_w = np.zeros(o_cap, dtype=np.float64)    # max weight over
+        #                                                       registered execs
+        # -- executor rows ---------------------------------------------------
+        e_cap = 16
+        self._exec_row: Dict[str, int] = {}
+        self._row_execname: List[Optional[str]] = [None] * e_cap
+        self._erow_free: List[int] = list(range(e_cap - 1, -1, -1))
+        self._presence = np.zeros((e_cap, o_cap), dtype=np.uint8)
+        self._presence_w = np.zeros((e_cap, o_cap), dtype=np.float64)
+        # -- item rows (the demand bitmap, row-sparse) -----------------------
+        r_cap, maxobj = 256, 8
+        self._item_row: Dict[Hashable, int] = {}
+        self._row_key: List[Optional[Hashable]] = [None] * r_cap
+        self._irow_free: List[int] = list(range(r_cap - 1, -1, -1))
+        self._row_cols = np.full((r_cap, maxobj), -1, dtype=np.int32)
+        self._row_nobj = np.zeros(r_cap, dtype=np.int32)
+        self._row_seq = np.zeros(r_cap, dtype=np.int64)
+        # -- score matrices: Sb = demand @ presence.T (counts), Sw weighted --
+        self._Sb = np.zeros((r_cap, e_cap), dtype=np.int32)
+        self._Sw = np.zeros((r_cap, e_cap), dtype=np.float64)
+        # Bootstrap holder counts from entries that predate this dispatcher
+        # (presence rows are built per executor at register_executor).
+        for f, _e, _tier in self.index.entries():
+            self._col_holders[self._col_for(f)] += 1
+        self.index.subscribe(self._on_index_event)
+
+    # ------------------------------------------------------------ capacity
+    def _grow_cols(self) -> None:
+        old = self._presence.shape[1]
+        new = old * 2
+        self._presence = np.hstack(
+            [self._presence, np.zeros((self._presence.shape[0], old), np.uint8)])
+        self._presence_w = np.hstack(
+            [self._presence_w, np.zeros((self._presence_w.shape[0], old), np.float64)])
+        self._col_holders = np.concatenate(
+            [self._col_holders, np.zeros(old, np.int32)])
+        self._colmax_w = np.concatenate(
+            [self._colmax_w, np.zeros(old, np.float64)])
+        self._col_obj.extend([None] * old)
+        self._col_free.extend(range(new - 1, old - 1, -1))
+
+    def _grow_execs(self) -> None:
+        old = self._presence.shape[0]
+        o_cap = self._presence.shape[1]
+        self._presence = np.vstack(
+            [self._presence, np.zeros((old, o_cap), np.uint8)])
+        self._presence_w = np.vstack(
+            [self._presence_w, np.zeros((old, o_cap), np.float64)])
+        self._Sb = np.hstack([self._Sb, np.zeros((self._Sb.shape[0], old), np.int32)])
+        self._Sw = np.hstack([self._Sw, np.zeros((self._Sw.shape[0], old), np.float64)])
+        self._row_execname.extend([None] * old)
+        self._erow_free.extend(range(2 * old - 1, old - 1, -1))
+
+    def _grow_rows(self) -> None:
+        old = self._Sb.shape[0]
+        e_cap = self._Sb.shape[1]
+        maxobj = self._row_cols.shape[1]
+        self._Sb = np.vstack([self._Sb, np.zeros((old, e_cap), np.int32)])
+        self._Sw = np.vstack([self._Sw, np.zeros((old, e_cap), np.float64)])
+        self._row_cols = np.vstack(
+            [self._row_cols, np.full((old, maxobj), -1, np.int32)])
+        self._row_nobj = np.concatenate([self._row_nobj, np.zeros(old, np.int32)])
+        self._row_seq = np.concatenate([self._row_seq, np.zeros(old, np.int64)])
+        self._row_key.extend([None] * old)
+        self._irow_free.extend(range(2 * old - 1, old - 1, -1))
+
+    def _grow_maxobj(self, need: int) -> None:
+        have = self._row_cols.shape[1]
+        new = max(need, have * 2)
+        pad = np.full((self._row_cols.shape[0], new - have), -1, np.int32)
+        self._row_cols = np.hstack([self._row_cols, pad])
+
+    # ------------------------------------------------------------- columns
+    def _col_for(self, file: str) -> int:
+        col = self._obj_col.get(file)
+        if col is not None:
+            return col
+        if not self._col_free:
+            self._grow_cols()
+        col = self._col_free.pop()
+        self._obj_col[file] = col
+        self._col_obj[col] = file
+        return col
+
+    def _maybe_free_col(self, file: str, col: int) -> None:
+        """Release a column once nothing holds and nothing demands it."""
+        if self._col_holders[col] == 0 and file not in self._demand \
+                and self._obj_col.get(file) == col:
+            del self._obj_col[file]
+            self._col_obj[col] = None
+            self._colmax_w[col] = 0.0
+            self._col_free.append(col)
+
+    def _weight_value(self, tier: Optional[str]) -> float:
+        """Mirror of the reference ``_weight``: flat entries weigh 1.0."""
+        if self.tier_weights is None or tier is None:
+            return 1.0
+        return self.tier_weights.get(tier, 1.0)
+
+    def _refresh_colmax(self, col: int) -> None:
+        self._colmax_w[col] = float(self._presence_w[:, col].max())
+
+    # ----------------------------------------------------- incremental plane
+    def _bump(self, file: str, erow: int, db: int, dw: float) -> None:
+        """Apply a presence delta at (file, executor) to every demanding row,
+        honoring per-item object multiplicity (an item naming ``file`` twice
+        scores it twice, as the reference accumulation does)."""
+        keys = self._demand.get(file)
+        if not keys:
+            return
+        col = self._obj_col[file]
+        rows = np.fromiter((self._item_row[k] for k in keys),
+                           dtype=np.intp, count=len(keys))
+        mult = (self._row_cols[rows] == col).sum(axis=1)
+        if db:
+            self._Sb[rows, erow] += db * mult
+        if dw:
+            self._Sw[rows, erow] += dw * mult
+
+    def _on_index_event(self, op: str, file: str, executor: str,
+                        tier: Optional[str]) -> None:
+        if op == "add":
+            col = self._col_for(file)
+            self._col_holders[col] += 1
+            erow = self._exec_row.get(executor)
+            if erow is not None:
+                w = self._weight_value(tier)
+                self._presence[erow, col] = 1
+                self._presence_w[erow, col] = w
+                if w > self._colmax_w[col]:
+                    self._colmax_w[col] = w
+                self._bump(file, erow, 1, w)
+        elif op == "tier":
+            col = self._obj_col.get(file)
+            erow = self._exec_row.get(executor)
+            if col is None or erow is None or not self._presence[erow, col]:
+                return
+            w = self._weight_value(tier)
+            old = self._presence_w[erow, col]
+            if w != old:
+                self._presence_w[erow, col] = w
+                self._refresh_colmax(col)
+                self._bump(file, erow, 0, w - old)
+        else:  # remove
+            col = self._obj_col.get(file)
+            if col is None:
+                return
+            self._col_holders[col] -= 1
+            erow = self._exec_row.get(executor)
+            if erow is not None and self._presence[erow, col]:
+                old = self._presence_w[erow, col]
+                self._presence[erow, col] = 0
+                self._presence_w[erow, col] = 0.0
+                self._refresh_colmax(col)
+                self._bump(file, erow, -1, -old)
+            self._maybe_free_col(file, col)
+
+    # ------------------------------------------------------------ executors
+    def register_executor(self, name: str) -> None:
+        super().register_executor(name)
+        if name in self._exec_row:
+            return
+        if not self._erow_free:
+            self._grow_execs()
+        erow = self._erow_free.pop()
+        self._exec_row[name] = erow
+        self._row_execname[erow] = name
+        # Late registration: mirror any presence the index already records.
+        for f in self.index.cached_at(name):
+            col = self._col_for(f)
+            w = self._weight_value(self.index.tier_of(f, name))
+            self._presence[erow, col] = 1
+            self._presence_w[erow, col] = w
+            if w > self._colmax_w[col]:
+                self._colmax_w[col] = w
+            self._bump(f, erow, 1, w)
+
+    def deregister_executor(self, name: str) -> None:
+        erow = self._exec_row.get(name)
+        # super() drops the executor from the index, which fires per-entry
+        # remove events through _on_index_event while the row still exists.
+        super().deregister_executor(name)
+        if erow is None:
+            return
+        del self._exec_row[name]
+        self._row_execname[erow] = None
+        self._presence[erow, :] = 0
+        self._presence_w[erow, :] = 0.0
+        self._Sb[:, erow] = 0
+        self._Sw[:, erow] = 0.0
+        self._erow_free.append(erow)
+
+    # ---------------------------------------------------------------- queue
+    def submit(self, item: Any) -> None:
+        key = self._key(item)
+        old_row = self._item_row.pop(key, None)
+        if old_row is not None:
+            # Re-submit of an already-queued key: the reference engine
+            # replaces the queue entry in place; release the stale row so it
+            # cannot linger with nonzero scores.  (If the new item names
+            # *different* objects, the reference additionally keeps the old
+            # objects' demand-index entries around as a quirk; here scores
+            # reflect the current item only.)
+            n_old = int(self._row_nobj[old_row])
+            self._row_cols[old_row, :n_old] = -1
+            self._row_nobj[old_row] = 0
+            self._row_key[old_row] = None
+            self._Sb[old_row, :] = 0
+            self._Sw[old_row, :] = 0.0
+            self._irow_free.append(old_row)
+        super().submit(item)
+        objs = self._objects(item)
+        n = len(objs)
+        if n > self._row_cols.shape[1]:
+            self._grow_maxobj(n)
+        if not self._irow_free:
+            self._grow_rows()
+        row = self._irow_free.pop()
+        self._item_row[key] = row
+        self._row_key[row] = key
+        self._row_nobj[row] = n
+        self._row_seq[row] = self._seq_of[key]
+        if n:
+            cols = np.fromiter((self._col_for(f) for f in objs),
+                               dtype=np.int32, count=n)
+            self._row_cols[row, :n] = cols
+            self._Sb[row, :] = self._presence[:, cols].sum(axis=1, dtype=np.int32)
+            self._Sw[row, :] = self._presence_w[:, cols].sum(axis=1)
+
+    def _remove_from_queue(self, item: Any) -> None:
+        key = self._key(item)
+        super()._remove_from_queue(item)
+        row = self._item_row.pop(key, None)
+        if row is None:
+            return
+        n = int(self._row_nobj[row])
+        cols = self._row_cols[row, :n].tolist()
+        self._row_cols[row, :n] = -1
+        self._row_nobj[row] = 0
+        self._row_key[row] = None
+        self._Sb[row, :] = 0
+        self._Sw[row, :] = 0.0
+        self._irow_free.append(row)
+        for c in set(cols):
+            obj = self._col_obj[c]
+            if obj is not None:
+                self._maybe_free_col(obj, c)
+
+    # ------------------------------------------------------------- phase 1
+    def _free_arrays(self) -> Tuple[List[str], np.ndarray]:
+        names = list(self._free)
+        rows = np.fromiter((self._exec_row[n] for n in names),
+                           dtype=np.intp, count=len(names))
+        return names, rows
+
+    def _tie_break(self, row: int, names: List[str], erows: List[int]) -> str:
+        """Reference tie-break among free executors sharing the max weighted
+        count: first to *reach* it in (object order, holder-name order) ==
+        min over ties of (index of last contributing object, name)."""
+        n = int(self._row_nobj[row])
+        cols = self._row_cols[row, :n]
+        best_key: Optional[Tuple[int, str]] = None
+        best_name = names[0]
+        for name, er in zip(names, erows):
+            w = self._presence_w[er, cols]
+            nz = np.nonzero(w > 0.0)[0]
+            j = int(nz[-1])             # max>0 guarantees a contribution
+            k = (j, name)
+            if best_key is None or k < best_key:
+                best_key, best_name = k, name
+        return best_name
+
+    def _choose_executor(self, row: int) -> str:
+        """Best free executor for one item (phase-1 decision), reference-
+        identical: weighted-count argmax among frees, else first free."""
+        names, rows = self._free_arrays()
+        vals = self._Sw[row, rows]
+        mx = vals.max()
+        if mx <= 0.0:
+            return names[0]
+        ties = np.nonzero(vals == mx)[0]
+        if ties.size == 1:
+            return names[int(ties[0])]
+        return self._tie_break(row, [names[i] for i in ties],
+                               [int(rows[i]) for i in ties])
+
+    def notify(self) -> Optional[Tuple[str, Any]]:
+        head = self._head()
+        if head is None or not self._free:
+            return None
+        self.stats.decisions += 1
+        if self.policy == "first-available":
+            return self._assign(next(iter(self._free)), head)
+        cache_mode = self._cache_mode()
+        if (cache_mode and not self._scan_dirty
+                and self._idx_version_seen == self.index.version):
+            self.stats.delayed += 1
+            return None
+        if not cache_mode:
+            # Non-delaying policies always place the queue head.
+            row = self._item_row[self._key(head)]
+            return self._assign(self._choose_executor(row), head)
+        pairs = self._cache_scan(limit=1, batch=False)
+        if pairs:
+            return pairs[0]
+        self._scan_dirty = False
+        self._idx_version_seen = self.index.version
+        return None
+
+    def notify_batch(self, limit: Optional[int] = None) -> List[Tuple[str, Any]]:
+        """Single-scan drain, decision-identical to looping ``notify()``.
+
+        Valid only when nothing mutates dispatcher or index state between
+        the emulated calls (the DES ``_try_notify`` contract); the serving
+        router interleaves tier promotions per assignment, so it keeps the
+        one-at-a-time ``notify`` path.  ``stats.decisions`` stays exact;
+        ``stats.delayed`` counts each delayed item once per scan instead of
+        once per emulated call.
+        """
+        out: List[Tuple[str, Any]] = []
+        if self.policy == "first-available":
+            while self._queue and self._free and (limit is None or len(out) < limit):
+                self.stats.decisions += 1
+                out.append(self._assign(next(iter(self._free)), self._head()))
+            return out
+        cache_mode = self._cache_mode()   # constant while states stay PENDING
+        if not cache_mode:
+            while self._queue and self._free and (limit is None or len(out) < limit):
+                self.stats.decisions += 1
+                head = self._head()
+                row = self._item_row[self._key(head)]
+                out.append(self._assign(self._choose_executor(row), head))
+            return out
+        if not self._queue or not self._free:
+            return out
+        if not self._scan_dirty and self._idx_version_seen == self.index.version:
+            self.stats.decisions += 1     # the memoized failing call
+            self.stats.delayed += 1
+            return out
+        out.extend(self._cache_scan(limit=limit, batch=True))
+        if self._queue and self._free and (limit is None or len(out) < limit):
+            # The terminal emulated call completed a full failed scan.
+            self.stats.decisions += 1
+            self._scan_dirty = False
+            self._idx_version_seen = self.index.version
+        return out
+
+    def _cache_scan(self, limit: Optional[int], batch: bool) -> List[Tuple[str, Any]]:
+        """Window scan for the delaying policies (MCH / GCC-above-threshold).
+
+        Emulates the reference per-call scan; in batch mode the scan
+        continues past each assignment instead of restarting (delayed items
+        stay delayed — nothing an assignment changes can free their
+        preferred holders), with the visit budget extended exactly as the
+        restarts would have: an item is visitable while the count of
+        delayed-in-place items ahead of it is below the window.
+        """
+        free_names, free_rows = self._free_arrays()
+        F = len(free_names)
+        budget = min(len(self._queue), self.window + (F if batch else 0))
+        keys = list(islice(self._queue, budget))
+        rows = np.fromiter((self._item_row[k] for k in keys),
+                           dtype=np.intp, count=len(keys))
+        SwF = self._Sw[np.ix_(rows, free_rows)]           # (n, F)
+        maxw = SwF.max(axis=1)
+        argw = SwF.argmax(axis=1)
+        anylive = self._Sb[rows].any(axis=1)
+        gcc = self.policy == "good-cache-compute"
+        if gcc:
+            idx = self._row_cols[rows]                     # (n, maxobj), -1 pad
+            valid = idx >= 0
+            safe = np.where(valid, idx, 0)
+            rep = np.where(valid, self._col_holders[safe], 0).max(axis=1)
+            floor_on = self.tier_weights is not None and self.gcc_delay_tier_floor > 0.0
+            if floor_on:
+                worthwhile = np.where(
+                    valid, self._colmax_w[safe] >= self.gcc_delay_tier_floor,
+                    False).any(axis=1)
+        active = np.ones(F, dtype=bool)
+        out: List[Tuple[str, Any]] = []
+        delayed = 0
+        name_to_fcol = {n: i for i, n in enumerate(free_names)}
+
+        def assign(i: int, name: str) -> None:
+            if batch:
+                self.stats.decisions += 1  # one emulated call per assignment
+            out.append(self._assign(name, self._queue[keys[i]]))
+            active[name_to_fcol[name]] = False
+
+        for i, key in enumerate(keys):
+            if delayed >= self.window or not active.any():
+                break
+            if limit is not None and len(out) >= limit:
+                break
+            # Lazily repair the row max if its argmax column was consumed.
+            if not active[argw[i]]:
+                live = np.nonzero(active)[0]
+                vals = SwF[i, live]
+                j = int(vals.argmax())
+                maxw[i] = vals[j]
+                argw[i] = live[j]
+            if maxw[i] > 0.0:
+                ties_mask = active & (SwF[i] == maxw[i])
+                ties = np.nonzero(ties_mask)[0]
+                if ties.size == 1:
+                    name = free_names[int(ties[0])]
+                else:
+                    name = self._tie_break(
+                        int(rows[i]), [free_names[t] for t in ties],
+                        [int(free_rows[t]) for t in ties])
+                assign(i, name)
+                continue
+            if not anylive[i]:
+                assign(i, next(iter(self._free)))
+                continue
+            # Preferred holder(s) busy.
+            if gcc:
+                if rep[i] < self.max_replicas:
+                    assign(i, next(iter(self._free)))
+                    continue
+                if floor_on and not worthwhile[i]:
+                    self.stats.tier_floor_bypasses += 1
+                    assign(i, next(iter(self._free)))
+                    continue
+            self.stats.delayed += 1
+            delayed += 1
+        return out
+
+    # ------------------------------------------------------------- phase 2
+    def pick_items(self, executor: str, m: int = 1) -> List[Any]:
+        erow = self._exec_row.get(executor)
+        if erow is None:           # unregistered executor: reference path
+            return super().pick_items(executor, m)
+        if not self._queue:
+            self.set_state(executor, ExecutorState.FREE)
+            return []
+        self.stats.window_scans += 1
+        head_seq = self._seq_of[next(iter(self._queue))]
+        horizon = head_seq + self.window
+        cand = np.nonzero(self._Sb[:, erow] > 0)[0]       # active rows only
+        if cand.size:
+            cand = cand[self._row_seq[cand] < horizon]
+        picked: List[Any] = []
+        if cand.size:
+            self.stats.tasks_scanned += int(cand.size)
+            frac = self._Sw[cand, erow] / self._row_nobj[cand]
+            perfect_mask = frac >= 1.0
+            perfect = cand[perfect_mask]
+
+            def fstar(r: int) -> str:
+                """First cached object the reference traversal visits the
+                item at: min demanded-and-cached object name."""
+                n = int(self._row_nobj[r])
+                cols = self._row_cols[r, :n]
+                held = cols[self._presence[erow, cols] > 0]
+                return min(self._col_obj[c] for c in held)
+
+            perf_rows = sorted(perfect.tolist(),
+                               key=lambda r: (fstar(r), self._row_key[r]))
+            for r in perf_rows[:m]:
+                item = self._queue[self._row_key[r]]
+                self.stats.perfect_hits += 1
+                self._dispatch_item(item, executor)
+                picked.append(item)
+            if len(picked) >= m:
+                self.set_state(executor, ExecutorState.BUSY)
+                return picked
+            # Fewer than m perfect hits: highest-scoring partials next,
+            # ordered by (-score, FIFO seq) exactly as the reference sort.
+            prows = cand[~perfect_mask]
+            if prows.size:
+                order = np.lexsort((self._row_seq[prows], -frac[~perfect_mask]))
+                for oi in order:
+                    if len(picked) >= m:
+                        break
+                    item = self._queue[self._row_key[int(prows[oi])]]
+                    self._dispatch_item(item, executor)
+                    picked.append(item)
+        if picked:
+            self.set_state(executor, ExecutorState.BUSY)
+            return picked
+        return self._no_hit_fallback(executor, m)
+
+    # ------------------------------------------------- bulk scoring / debug
+    def demand_matrix(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rows, dense window-x-objects demand bitmap) for active items, in
+        row-id order; entry counts per-item object multiplicity."""
+        rows = np.fromiter(sorted(self._item_row.values()), dtype=np.intp,
+                           count=len(self._item_row))
+        o_cap = self._presence.shape[1]
+        dm = np.zeros((len(rows), o_cap), dtype=np.float32)
+        for i, r in enumerate(rows):
+            n = int(self._row_nobj[r])
+            np.add.at(dm[i], self._row_cols[r, :n], 1.0)
+        return rows, dm
+
+    def presence_matrices(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self._presence, self._presence_w
+
+    def rebuild_scores(self, backend: Optional[str] = None,
+                       apply: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+        """One-shot ``demand @ presence.T`` over the materialized bitmaps.
+
+        Returns (Sb, Sw) for active rows (row-id order).  ``backend`` falls
+        back to ``self.score_backend``; "pallas" runs the tiled scoring
+        kernel from ``repro.kernels.dispatch_score`` (float32, interpret
+        mode off-TPU), "numpy" the float64 BLAS path.  With ``apply=True``
+        the incremental matrices are overwritten — the recovery path after
+        adopting a pre-populated index snapshot.
+        """
+        backend = backend or self.score_backend
+        rows, dm = self.demand_matrix()
+        pb = self._presence.astype(np.float64)
+        pw = self._presence_w
+        if backend == "pallas":
+            from ..kernels.dispatch_score.ops import dispatch_scores
+            sb = np.asarray(dispatch_scores(dm, pb.astype(np.float32)))
+            sw = np.asarray(dispatch_scores(dm, pw.astype(np.float32)))
+        else:
+            sb = dm.astype(np.float64) @ pb.T
+            sw = dm.astype(np.float64) @ pw.T
+        if apply:
+            self._Sb[rows] = np.rint(sb).astype(np.int32)
+            self._Sw[rows] = sw.astype(np.float64)
+        return sb, sw
+
+    def check_consistency(self) -> bool:
+        """Exact invariant check: the incremental Sb/Sw equal the one-shot
+        matmul over the materialized bitmaps (numpy float64 path)."""
+        rows, dm = self.demand_matrix()
+        sb = dm.astype(np.float64) @ self._presence.astype(np.float64).T
+        sw = dm.astype(np.float64) @ self._presence_w.T
+        ok_b = np.array_equal(self._Sb[rows].astype(np.float64), sb)
+        ok_w = bool(np.all(self._Sw[rows] == sw))
+        return ok_b and ok_w

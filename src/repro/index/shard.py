@@ -14,10 +14,13 @@ entry + one tier entry per copy) and is exactly what profiles of the flat
 index showed growing first; folding it makes presence and tier one record
 with one lifetime.
 
-Shards also keep per-object access counters (bumped by the router on every
+Shards also keep per-object access heat (bumped by the router on every
 routed object via ``note_access``) — the ranking signal the replica
 warm-start plane uses to decide *which* objects are worth bulk-cloning into
-a fresh executor (``index.warmstart``).
+a fresh executor (``index.warmstart``).  With ``heat_half_life_s`` set the
+heat decays exponentially (``core.index.HeatCounter``), so ``hot_objects``
+ranks the *current* hot set instead of the lifetime one — a long-running
+router no longer warm-starts yesterday's sessions.
 
 The invariant property-tested in ``tests/test_index_properties.py``: after
 any sequence of add/remove/publish/drop_executor, ``e in i_map[f]`` iff
@@ -29,20 +32,79 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
-__all__ = ["IndexShard"]
+__all__ = ["HeatCounter", "IndexShard"]
+
+
+class HeatCounter:
+    """Per-object access heat, optionally exponentially decayed.
+
+    With ``half_life_s=None`` this is the original lifetime counter (the
+    count never decays, ``now`` is ignored).  With a finite half-life, each
+    access adds 1 to a value that halves every ``half_life_s`` seconds of
+    wall/virtual time, so ``hot_objects`` ranks the *current* hot set — a
+    long-running router no longer warm-starts yesterday's sessions.
+
+    Decay is applied lazily (at access and at ranking time); the counter
+    stores (value-at-last-touch, last-touch-time) per object.
+    """
+
+    __slots__ = ("half_life_s", "_heat", "_touched", "_now_hint")
+
+    def __init__(self, half_life_s: Optional[float] = None):
+        self.half_life_s = half_life_s
+        self._heat: Dict[str, float] = defaultdict(float)
+        self._touched: Dict[str, float] = {}
+        self._now_hint = 0.0            # latest time observed (ranking default)
+
+    def note(self, file: str, n: int = 1, now: Optional[float] = None) -> None:
+        if self.half_life_s is None or now is None:
+            self._heat[file] += n
+            return
+        self._now_hint = max(self._now_hint, now)
+        last = self._touched.get(file)
+        if last is not None and now > last:
+            self._heat[file] *= 0.5 ** ((now - last) / self.half_life_s)
+        self._touched[file] = max(now, last if last is not None else now)
+        self._heat[file] += n
+
+    @property
+    def now_hint(self) -> float:
+        """Latest time this counter has observed (cross-shard merge anchor)."""
+        return self._now_hint
+
+    def heat_of(self, file: str, now: Optional[float] = None) -> float:
+        v = self._heat.get(file, 0.0)
+        if self.half_life_s is None or v == 0.0:
+            return v
+        now = self._now_hint if now is None else now
+        last = self._touched.get(file, now)
+        if now > last:
+            v *= 0.5 ** ((now - last) / self.half_life_s)
+        return v
+
+    def top(self, k: int, now: Optional[float] = None) -> List[Tuple[str, float]]:
+        """Top-k by (decayed) heat, ties by name (reproducible clone sets)."""
+        if self.half_life_s is None:
+            ranked = sorted(self._heat.items(), key=lambda kv: (-kv[1], kv[0]))
+            return ranked[:k]
+        now = self._now_hint if now is None else now
+        decayed = [(f, self.heat_of(f, now)) for f in self._heat]
+        decayed.sort(key=lambda kv: (-kv[1], kv[0]))
+        return decayed[:k]
 
 
 class IndexShard:
     """I_map/E_map for one consistent-hash slice of the object namespace."""
 
-    __slots__ = ("shard_id", "i_map", "e_map", "access_counts")
+    __slots__ = ("shard_id", "i_map", "e_map", "heat")
 
-    def __init__(self, shard_id: int = 0):
+    def __init__(self, shard_id: int = 0,
+                 heat_half_life_s: Optional[float] = None):
         self.shard_id = shard_id
         # file -> {executor: tier-or-None}; tier folded into the entry value.
         self.i_map: Dict[str, Dict[str, Optional[str]]] = {}
         self.e_map: Dict[str, Set[str]] = defaultdict(set)
-        self.access_counts: Dict[str, int] = defaultdict(int)
+        self.heat = HeatCounter(heat_half_life_s)
 
     # -- mutation (the coherence bus applies batched deltas through these) ---
     def add(self, file: str, executor: str, tier: Optional[str] = None) -> None:
@@ -104,14 +166,15 @@ class IndexShard:
         return sum(len(h) for h in self.i_map.values())
 
     # -- access heat (warm-start ranking signal) -----------------------------
-    def note_access(self, file: str, n: int = 1) -> None:
-        self.access_counts[file] += n
+    def note_access(self, file: str, n: int = 1,
+                    now: Optional[float] = None) -> None:
+        self.heat.note(file, n, now)
 
-    def hot_objects(self, k: int) -> List[Tuple[str, int]]:
-        """Top-``k`` objects by access count (count desc, then name — the
+    def hot_objects(self, k: int,
+                    now: Optional[float] = None) -> List[Tuple[str, float]]:
+        """Top-``k`` objects by (decayed) heat (heat desc, then name — the
         tie-break keeps warm-start clone sets reproducible across runs)."""
-        ranked = sorted(self.access_counts.items(), key=lambda kv: (-kv[1], kv[0]))
-        return ranked[:k]
+        return self.heat.top(k, now)
 
     # -- bulk ----------------------------------------------------------------
     def diff_snapshot(

@@ -28,7 +28,9 @@ What sharding buys at "millions of users" scale:
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
+from typing import (
+    Callable, Dict, Iterable, Iterator, List, Mapping, Optional, Set, Tuple,
+)
 
 from .coherence import CoherenceBus
 from .ring import HashRing
@@ -46,15 +48,20 @@ class ShardedIndex:
         coherence_delay_s: float = 0.0,
         vnodes: int = 64,
         batch_window_s: float = 0.0,
+        heat_half_life_s: Optional[float] = None,
     ):
         self.ring = HashRing(shards, vnodes=vnodes)
-        self.shards: List[IndexShard] = [IndexShard(i) for i in range(shards)]
+        self.shards: List[IndexShard] = [
+            IndexShard(i, heat_half_life_s=heat_half_life_s)
+            for i in range(shards)
+        ]
         self.bus = CoherenceBus(shards, delay_s=coherence_delay_s,
                                 batch_window_s=batch_window_s)
         self.version = 0            # bumped on every mutation (scan memo)
         self.publishes = 0
         self.publish_added = 0
         self.publish_removed = 0
+        self._listeners: List[Callable[[str, str, str, Optional[str]], None]] = []
 
     @property
     def coherence_delay_s(self) -> float:
@@ -67,20 +74,58 @@ class ShardedIndex:
     def shard_of(self, file: str) -> IndexShard:
         return self.shards[self.ring.shard_of(file)]
 
+    # -- entry-change listeners (see core.index.IndexListener) ----------------
+    def subscribe(self, listener: Callable[[str, str, str, Optional[str]], None]) -> None:
+        self._listeners.append(listener)
+
+    def _emit(self, op: str, file: str, executor: str,
+              tier: Optional[str]) -> None:
+        for cb in self._listeners:
+            cb(op, file, executor, tier)
+
+    def _shard_add(self, shard: IndexShard, file: str, executor: str,
+                   tier: Optional[str]) -> None:
+        """Shard add + listener emission (every mutation path funnels here)."""
+        if not self._listeners:
+            shard.add(file, executor, tier)
+            return
+        old_tier = shard.tier_of(file, executor)
+        new = not shard.holds(file, executor)
+        shard.add(file, executor, tier)
+        if new:
+            self._emit("add", file, executor,
+                       tier if tier is not None else old_tier)
+        elif tier is not None and tier != old_tier:
+            self._emit("tier", file, executor, tier)
+
+    def _shard_remove(self, shard: IndexShard, file: str, executor: str) -> None:
+        if not self._listeners:
+            shard.remove(file, executor)
+            return
+        present = shard.holds(file, executor)
+        shard.remove(file, executor)
+        if present:
+            self._emit("remove", file, executor, None)
+
     # -- synchronous mutation (coherent view) --------------------------------
     def add(self, file: str, executor: str, tier: Optional[str] = None) -> None:
         self.version += 1
-        self.shard_of(file).add(file, executor, tier)
+        self._shard_add(self.shard_of(file), file, executor, tier)
 
     def remove(self, file: str, executor: str) -> None:
         self.version += 1
-        self.shard_of(file).remove(file, executor)
+        self._shard_remove(self.shard_of(file), file, executor)
 
     def drop_executor(self, executor: str) -> None:
         """Executor released/failed: forget its entries in every shard."""
         removed = 0
         for shard in self.shards:
-            removed += shard.drop_executor(executor)
+            if self._listeners:
+                for f in list(shard.e_map.get(executor, ())):
+                    self._shard_remove(shard, f, executor)
+                    removed += 1
+            else:
+                removed += shard.drop_executor(executor)
         if removed:
             self.version += 1
 
@@ -107,17 +152,18 @@ class ShardedIndex:
             added, removed = shard.diff_snapshot(executor, by_shard.get(sid, ()))
             for f in added:
                 self.version += 1
-                shard.add(f, executor, tiers.get(f) if tiers else None)
+                self._shard_add(shard, f, executor,
+                                tiers.get(f) if tiers else None)
             for f in removed:
                 self.version += 1
-                shard.remove(f, executor)
+                self._shard_remove(shard, f, executor)
             if tiers:
                 for f in by_shard.get(sid, ()):
                     t = tiers.get(f)
                     if t is not None and f not in added \
                             and shard.tier_of(f, executor) != t:
                         self.version += 1
-                        shard.add(f, executor, tier=t)
+                        self._shard_add(shard, f, executor, tier=t)
             added_n += len(added)
             removed_n += len(removed)
         self.publishes += 1
@@ -142,12 +188,12 @@ class ShardedIndex:
         mutations = 0
         for (f, e), (op, tier) in delta.items():
             if op == "add":
-                shard.add(f, e, tier)
+                self._shard_add(shard, f, e, tier)
             elif op == "readd":                 # coalesced remove-then-add
-                shard.remove(f, e)
-                shard.add(f, e, tier)
+                self._shard_remove(shard, f, e)
+                self._shard_add(shard, f, e, tier)
             else:
-                shard.remove(f, e)
+                self._shard_remove(shard, f, e)
             mutations += 1
         if mutations:
             self.version += 1       # one bump per batch: amortized memo churn
@@ -204,14 +250,31 @@ class ShardedIndex:
     def entry_count(self) -> int:
         return sum(shard.entry_count() for shard in self.shards)
 
-    # -- access heat (warm-start ranking) --------------------------------------
-    def note_access(self, file: str, n: int = 1) -> None:
-        self.shard_of(file).note_access(file, n)
-
-    def hot_objects(self, k: int) -> List[Tuple[str, int]]:
-        """Global top-k by access count: merge of per-shard top-k lists."""
-        merged: List[Tuple[str, int]] = []
+    def entries(self) -> Iterator[Tuple[str, str, Optional[str]]]:
+        """Iterate every (file, executor, tier) record across all shards."""
         for shard in self.shards:
-            merged.extend(shard.hot_objects(k))
+            for f, holders in shard.i_map.items():
+                for e, tier in holders.items():
+                    yield f, e, tier
+
+    # -- access heat (warm-start ranking) --------------------------------------
+    def note_access(self, file: str, n: int = 1,
+                    now: Optional[float] = None) -> None:
+        self.shard_of(file).note_access(file, n, now)
+
+    def hot_objects(self, k: int,
+                    now: Optional[float] = None) -> List[Tuple[str, float]]:
+        """Global top-k by (decayed) heat: merge of per-shard top-k lists.
+
+        With decay enabled the merge re-ranks per-shard heads decayed to a
+        common ``now`` so cross-shard ordering is consistent."""
+        if now is None and self.shards and self.shards[0].heat.half_life_s:
+            now = max(s.heat.now_hint for s in self.shards)
+        merged: List[Tuple[str, float]] = []
+        for shard in self.shards:
+            merged.extend(shard.hot_objects(k, now))
         merged.sort(key=lambda kv: (-kv[1], kv[0]))
         return merged[:k]
+
+    def heat_of(self, file: str, now: Optional[float] = None) -> float:
+        return self.shard_of(file).heat.heat_of(file, now)

@@ -34,6 +34,7 @@ class WarmStartReport:
 
     replica: str = ""
     cloned: int = 0                 # objects placed (or transfer-started)
+    cloned_to_hbm: int = 0          # clones admitted straight to the top tier
     bytes_cloned: float = 0.0
     skipped_resident: int = 0       # already at the destination
     skipped_cold: int = 0           # hot but no live peer holds a copy
@@ -47,6 +48,7 @@ class WarmStartStats:
 
     replicas_warmed: int = 0
     cloned: int = 0
+    cloned_to_hbm: int = 0
     bytes_cloned: float = 0.0
     skipped_cold: int = 0
     throttled: int = 0
@@ -54,6 +56,7 @@ class WarmStartStats:
     def merge(self, report: WarmStartReport) -> None:
         self.replicas_warmed += 1
         self.cloned += report.cloned
+        self.cloned_to_hbm += report.cloned_to_hbm
         self.bytes_cloned += report.bytes_cloned
         self.skipped_cold += report.skipped_cold
         self.throttled += report.throttled
@@ -69,21 +72,29 @@ def clone_hottest(
     engine: Optional[Any] = None,
     admit_tier: int = 1,
     max_bytes: float = float("inf"),
+    hbm_heat_threshold: Optional[float] = None,
 ) -> WarmStartReport:
     """Warm ``dest``'s tier stack with the index's hottest peer-held objects.
 
-    ``index`` needs ``hot_objects(k)`` + ``locations(file)``; ``store`` is the
-    destination's ``TieredStore`` (``__contains__`` / ``admit`` / ``tiers``);
-    ``engine``, when given, routes each clone through ``TransferEngine.fetch``
-    with ``kind="warmstart"`` — a *speculative* priority class, so demand
-    fetches preempt warm-start copies rather than queue behind them.
+    ``index`` needs ``hot_objects(k, now=...)`` + ``locations(file)``;
+    ``store`` is the destination's ``TieredStore`` (``__contains__`` /
+    ``admit`` / ``tiers``); ``engine``, when given, routes each clone through
+    ``TransferEngine.fetch`` with ``kind="warmstart"`` — a *speculative*
+    priority class, so demand fetches preempt warm-start copies rather than
+    queue behind them.
+
+    ``hbm_heat_threshold``: objects whose (decayed) heat is at or above this
+    value are cloned straight into the top tier (HBM, admit_tier 0) — the
+    head of the working set should not pay a swap-in on its first hit;
+    everything else lands in ``admit_tier`` so speculative bulk does not
+    evict the live batch's HBM residency.
     """
     report = WarmStartReport(replica=dest)
     if max_objects <= 0:
         return report
     # Over-fetch the ranking: resident/cold entries don't count against the
     # clone budget, so ask for enough candidates to fill it.
-    for obj, _count in index.hot_objects(max_objects * 4):
+    for obj, heat in index.hot_objects(max_objects * 4, now=now):
         if report.cloned >= max_objects or report.bytes_cloned >= max_bytes:
             break
         if obj in store:
@@ -93,8 +104,11 @@ def clone_hottest(
             report.skipped_cold += 1
             continue
         size = size_fn(obj)
+        to_hbm = hbm_heat_threshold is not None and heat >= hbm_heat_threshold
+        tier = 0 if to_hbm else admit_tier
+        if hasattr(store, "tiers"):
+            tier = min(tier, len(store.tiers) - 1)
         if engine is not None:
-            tier = min(admit_tier, len(store.tiers) - 1)
             # allow_queue: a bulk clone serializes behind the slot pool
             # instead of being refused; demand can still preempt each copy.
             tr = engine.fetch(obj, size, dest, now, kind="warmstart",
@@ -104,8 +118,12 @@ def clone_hottest(
                 break
             report.transfer_time_s = max(report.transfer_time_s,
                                          tr.remaining_s(now))
-        else:
+        elif hasattr(store, "tiers"):
+            store.admit(obj, size, start_tier=tier)
+        else:                       # flat store: zero-cost admit
             store.admit(obj, size)
         report.cloned += 1
+        if to_hbm:
+            report.cloned_to_hbm += 1
         report.bytes_cloned += size
     return report

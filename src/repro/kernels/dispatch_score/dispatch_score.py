@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: tiled dispatch window scoring (demand @ presence.T).
+
+The bulk-rescore path of the vectorized dispatch plane is one rectangular
+matmul: a [W, O] demand bitmap (W = scheduling window, O = live object
+columns) against a [E, O] tier-weighted presence matrix, giving the [W, E]
+phase-1/phase-2 score table in one shot.  O is the contraction axis and is
+by far the largest extent (every cached object anywhere), so the kernel
+tiles it innermost and accumulates in a VMEM scratch block — demand and
+presence tiles stream HBM->VMEM once per (i, j) output tile, and the f32
+accumulator never leaves VMEM until the last O-step writes it out.
+
+Grid (W/BW, E/BE, O/BO), contraction sequential (minor); both operands are
+zero-padded to tile multiples by the wrapper (zeros contribute nothing to
+the overlap scores, so padding is semantically free).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _score_kernel(d_ref, p_ref, o_ref, acc_ref, *, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        d_ref[...], p_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),   # contract object axis
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def dispatch_score_pallas(demand, presence, *, block_w: int = 256,
+                          block_e: int = 128, block_o: int = 512,
+                          interpret: bool = False):
+    """demand: [W, O] f32; presence: [E, O] f32 -> scores [W, E] f32.
+
+    Shapes must already be padded to the block sizes (see ops.py).
+    """
+    W, O = demand.shape
+    E, O2 = presence.shape
+    assert O == O2 and W % block_w == 0 and E % block_e == 0 and O % block_o == 0
+    grid = (W // block_w, E // block_e, O // block_o)
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except (AttributeError, TypeError):
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_score_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, block_o), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_e, block_o), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_w, block_e), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((W, E), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_w, block_e), jnp.float32)],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(demand, presence)

@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the dispatch window-scoring kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dispatch_score import dispatch_score_pallas
+from .ref import dispatch_scores_ref
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_e", "block_o",
+                                             "interpret"))
+def dispatch_scores(demand, presence, *, block_w=256, block_e=128,
+                    block_o=512, interpret=False):
+    """Window scores demand @ presence.T. demand: [W, O]; presence: [E, O].
+
+    Pads both operands to tile multiples (zero columns/rows score zero) and
+    slices the [W, E] result back.  ``interpret=True`` runs the Pallas
+    kernel in interpreter mode (CPU correctness path).
+    """
+    assert demand.ndim == 2 and presence.ndim == 2
+    assert demand.shape[1] == presence.shape[1]
+    W, E = demand.shape[0], presence.shape[0]
+    block_w = min(block_w, max(8, W))
+    block_e = min(block_e, max(8, E))
+    block_o = min(block_o, max(128, demand.shape[1]))
+    d = _pad_to(demand.astype(jnp.float32), block_w, block_o)
+    p = _pad_to(presence.astype(jnp.float32), block_e, block_o)
+    out = dispatch_score_pallas(d, p, block_w=block_w, block_e=block_e,
+                                block_o=block_o, interpret=interpret)
+    return out[:W, :E]
+
+
+__all__ = ["dispatch_scores", "dispatch_scores_ref"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the dispatch window-scoring kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dispatch_scores_ref(demand, presence):
+    """Window scores S = demand @ presence.T in float32.
+
+    demand:   [W, O]  per queued-item object bitmap (multiplicity-weighted)
+    presence: [E, O]  per executor cached-object (tier-weighted) matrix
+    returns   [W, E]  weighted cache-overlap score per (item, executor)
+    """
+    return jnp.dot(demand.astype(jnp.float32), presence.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)

@@ -39,10 +39,9 @@ from .hlo_analysis import analyze_hlo_text
 from .mesh import make_ctx, make_production_mesh
 from .shardings import batch_specs, opt_state_specs, step_out_shardings, with_shardings
 
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12         # bf16
-HBM_BW = 819e9              # bytes/s
-ICI_BW = 50e9               # bytes/s per link
+# TPU v5e constants (per chip) — canonical home is launch.rooflines (which
+# is importable without this module's XLA_FLAGS side effect).
+from .rooflines import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402,F401
 
 
 def model_flops(cfg, shape) -> float:

@@ -1,0 +1,15 @@
+"""Roofline constants for the target accelerator (TPU v5e, per chip).
+
+Side-effect-free home for the machine model: ``launch.dryrun`` (which MUST
+set XLA_FLAGS before jax initializes and therefore cannot be imported
+without consequences) and ``launch.perf`` consume these for the compile-time
+roofline terms, and ``diffusion.tiers.roofline_tier_bw`` calibrates tier
+bandwidths from the same numbers so the locality sweeps and the kernel
+rooflines describe one machine.
+"""
+
+PEAK_FLOPS = 197e12         # bf16
+HBM_BW = 819e9              # bytes/s
+ICI_BW = 50e9               # bytes/s per link
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -32,6 +32,10 @@ def main() -> None:
                          "and swap back in instead of replaying the prefill")
     ap.add_argument("--eviction", default="lru",
                     choices=("random", "fifo", "lru", "lfu"))
+    ap.add_argument("--dispatcher", default="reference",
+                    choices=("reference", "vectorized"),
+                    help="dispatch engine: pure-Python reference or the "
+                         "array-backed vectorized plane (same decisions)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--cache-cap", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -44,7 +48,8 @@ def main() -> None:
                           min_replicas=args.min_replicas, cache_cap=args.cache_cap,
                           max_sessions=args.max_sessions,
                           host_cache_sessions=args.host_cache_sessions,
-                          eviction=args.eviction)
+                          eviction=args.eviction,
+                          dispatcher_impl=args.dispatcher)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}

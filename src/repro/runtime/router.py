@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 
 from ..core.dispatch import POLICIES, DataAwareDispatcher
 from ..core.index import CacheLocationIndex, CentralizedIndex
+from ..dispatch_vec import VectorizedDispatcher
 from ..core.provisioner import DynamicResourceProvisioner, ProvisionRequest
 from ..core.store import BandwidthResource
 from ..core.task import ExecutorState
@@ -252,12 +253,24 @@ class CacheAffinityRouter:
         # hottest index objects into each DRP-provisioned replica ----
         warmstart_objects: int = 0,
         warmstart_admit_tier: int = 1,
+        # Objects at or above this (decayed) heat bypass warmstart_admit_tier
+        # and clone straight into HBM (tier 0); None disables.
+        warmstart_hbm_heat: Optional[float] = None,
+        # ---- dispatch engine: "reference" (pure-Python golden semantics)
+        # or "vectorized" (repro.dispatch_vec — same decisions, array-backed
+        # scoring; the router keeps per-assignment notify calls because each
+        # assignment promotes tiers before the next decision) ----
+        dispatcher_impl: str = "reference",
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
         if tier_weights is None and self.tier_specs is not None:
             tier_weights = default_tier_weights(self.tier_specs)
-        self.dispatcher = DataAwareDispatcher(
+        if dispatcher_impl not in ("reference", "vectorized"):
+            raise ValueError(f"unknown dispatcher_impl {dispatcher_impl!r}")
+        engine_cls = (VectorizedDispatcher if dispatcher_impl == "vectorized"
+                      else DataAwareDispatcher)
+        self.dispatcher = engine_cls(
             policy=policy,
             window=window,
             cpu_util_threshold=cpu_util_threshold,
@@ -291,6 +304,7 @@ class CacheAffinityRouter:
         self.prefetch_depth = prefetch_depth
         self.warmstart_objects = warmstart_objects
         self.warmstart_admit_tier = warmstart_admit_tier
+        self.warmstart_hbm_heat = warmstart_hbm_heat
         self.warmstart = WarmStartStats()
         self._requests: Dict[int, RoutedRequest] = {}   # in flight, by id
         self._idle_since: Dict[str, Optional[float]] = {}
@@ -386,8 +400,9 @@ class CacheAffinityRouter:
             self.stats.routed += 1
             for obj in request.objects:
                 # Access-heat feed: the warm-start plane ranks clone
-                # candidates by these per-object counters.
-                self.index.note_access(obj)
+                # candidates by these per-object counters (decayed toward
+                # the *current* hot set when the index has a heat half-life).
+                self.index.note_access(obj, now=now)
                 if not use_cache:
                     # first-available: every access replays from persistent
                     # storage and nothing is kept.
@@ -458,6 +473,7 @@ class CacheAffinityRouter:
             max_objects=self.warmstart_objects,
             engine=self.engine,
             admit_tier=self.warmstart_admit_tier,
+            hbm_heat_threshold=self.warmstart_hbm_heat,
         )
         self.warmstart.merge(report)
         return report

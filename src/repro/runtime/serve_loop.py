@@ -105,6 +105,7 @@ class DiffusionServer:
         max_sessions: int = 8,
         host_cache_sessions: int = 0,
         eviction: str = "lru",
+        dispatcher_impl: str = "reference",
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
@@ -142,6 +143,7 @@ class DiffusionServer:
             spawn_replica=self._build_replica,
             stop_replica=self._drop_replica,
             on_object_evicted=self._on_session_evicted,
+            dispatcher_impl=dispatcher_impl,
         )
         self.replicas: Dict[str, Replica] = {}
         for _ in range(min_replicas):

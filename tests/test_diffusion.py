@@ -517,3 +517,24 @@ def test_bench_diffusion_tiers_smoke():
     verdict = [r for r in rows if r[0].endswith("tiered_beats_flat")]
     assert len(verdict) == 1
     assert "ok=True" in verdict[0][2]
+
+
+def test_tier_spec_from_roofline_pins_the_mapping():
+    """Tier bandwidths calibrate from the perf driver's roofline constants
+    (launch.rooflines — importable without dryrun's XLA_FLAGS side effect),
+    not nominal values — the mapping is pinned here."""
+    import os
+    flags_before = os.environ.get("XLA_FLAGS")
+    from repro.diffusion.tiers import roofline_tier_bw
+    from repro.launch.rooflines import HBM_BW, ICI_BW
+
+    hbm = TierSpec.from_roofline("hbm", 1024.0)
+    dram = TierSpec.from_roofline("dram", 2048.0, eviction="fifo")
+    disk = TierSpec.from_roofline("disk", 4096.0)
+    assert hbm.bw_bytes_per_s == HBM_BW
+    assert dram.bw_bytes_per_s == ICI_BW and dram.eviction == "fifo"
+    assert disk.bw_bytes_per_s == ICI_BW / 25.0
+    assert roofline_tier_bw("hbm") > roofline_tier_bw("dram") > roofline_tier_bw("disk")
+    assert (hbm.capacity_bytes, dram.capacity_bytes) == (1024.0, 2048.0)
+    # the calibration path must NOT trip dryrun's 512-fake-device env hack
+    assert os.environ.get("XLA_FLAGS") == flags_before

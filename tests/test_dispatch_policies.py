@@ -12,12 +12,33 @@ prescribes, including good-cache-compute's maximum-replication-factor bound.
 import pytest
 
 from repro.core.dispatch import DataAwareDispatcher
-from repro.core.scheduler import POLICIES, DataAwareScheduler
+from repro.core.scheduler import (
+    POLICIES, DataAwareScheduler, VectorizedScheduler,
+)
 from repro.core.task import ExecutorState, Task, TaskState
+from repro.dispatch_vec import VectorizedDispatcher
+
+# The whole matrix runs against both dispatch engines: the pure-Python
+# reference and the array-backed vectorized plane, which must make the
+# exact same decisions (repro.dispatch_vec's drop-in guarantee).
+_IMPLS = {
+    "reference": (DataAwareScheduler, DataAwareDispatcher),
+    "vectorized": (VectorizedScheduler, VectorizedDispatcher),
+}
+SCHED_CLS = DataAwareScheduler
+DISPATCHER_CLS = DataAwareDispatcher
+
+
+@pytest.fixture(params=list(_IMPLS), autouse=True)
+def dispatch_impl(request):
+    global SCHED_CLS, DISPATCHER_CLS
+    SCHED_CLS, DISPATCHER_CLS = _IMPLS[request.param]
+    yield request.param
+    SCHED_CLS, DISPATCHER_CLS = _IMPLS["reference"]
 
 
 def make_sched(policy, n_exec=4, **kw):
-    s = DataAwareScheduler(policy=policy, **kw)
+    s = SCHED_CLS(policy=policy, **kw)
     for i in range(n_exec):
         s.register_executor(f"e{i}")
     s.index.add("hot", "e2")
@@ -144,7 +165,7 @@ def test_pick_perfect_hit_skips_fifo_order(policy):
 def test_pick_first_available_is_fifo():
     """FA ships no location info: the index never learns who caches what, so
     phase 2 degenerates to plain FIFO (fresh scheduler, unseeded index)."""
-    s = DataAwareScheduler(policy="first-available")
+    s = SCHED_CLS(policy="first-available")
     s.register_executor("e0")
     s.submit(Task(0, ("cold",), 0.1))
     s.submit(Task(1, ("hot",), 0.1))
@@ -225,7 +246,7 @@ class _Item:
 
 
 def test_generic_dispatcher_routes_duck_typed_items():
-    d = DataAwareDispatcher(policy="max-compute-util")
+    d = DISPATCHER_CLS(policy="max-compute-util")
     d.register_executor("r0")
     d.register_executor("r1")
     d.index.add("obj", "r1")
@@ -237,7 +258,7 @@ def test_generic_dispatcher_routes_duck_typed_items():
 def test_generic_dispatcher_on_dispatch_hook():
     seen = []
 
-    class Hooked(DataAwareDispatcher):
+    class Hooked(DISPATCHER_CLS):
         def _on_dispatch(self, item, executor):
             seen.append((item.key, executor))
 

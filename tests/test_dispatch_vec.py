@@ -1,0 +1,324 @@
+"""Vectorized dispatch plane: decision equivalence + incremental state.
+
+Three layers of guarantees:
+
+  * property tests (hypothesis-shim) — random policy/queue/executor/tier
+    configurations driven through the reference and vectorized engines with
+    the identical op sequence must produce bit-identical assignment logs;
+  * unit tests — the incrementally-maintained presence/score arrays track
+    submit / dispatch / evict / tier-change / deregister, verified against
+    the one-shot ``demand @ presence.T`` rebuild;
+  * integration — the DES (``SimConfig.vectorized_dispatch``) and the
+    serving router (``dispatcher_impl="vectorized"``) reproduce the
+    reference results exactly on seeded streams.
+"""
+
+import random
+
+import pytest
+
+from repro.core.dispatch import POLICIES, DataAwareDispatcher
+from repro.core.index import CentralizedIndex, ShardedIndex
+from repro.core.task import ExecutorState
+from repro.dispatch_vec import VectorizedDispatcher
+
+from _hypothesis_compat import given, settings, st
+
+TIER_WEIGHTS = {"hbm": 1.0, "dram": 0.5, "disk": 0.25}
+
+
+class Item:
+    def __init__(self, key, objects):
+        self.key = key
+        self.objects = tuple(objects)
+
+
+def _drive(cls, seed, policy, tiered, floor, sharded, steps=200):
+    """Seeded op soup: submits, batch drains, pickups, index churn,
+    deregistrations.  Returns the assignment log."""
+    rng = random.Random(seed)
+    idx = ShardedIndex(shards=4) if sharded else CentralizedIndex()
+    d = cls(policy=policy, window=rng.choice([4, 16, 64]),
+            cpu_util_threshold=0.5, max_replicas=rng.choice([1, 2, 4]),
+            index=idx, tier_weights=TIER_WEIGHTS if tiered else None,
+            gcc_delay_tier_floor=floor if tiered else 0.0)
+    execs = [f"e{i}" for i in range(rng.randint(2, 8))]
+    for e in execs:
+        d.register_executor(e)
+    objs = [f"o{i}" for i in range(20)]
+    for _ in range(30):
+        idx.add(rng.choice(objs), rng.choice(execs),
+                tier=rng.choice(["hbm", "dram", "disk"]) if tiered else None)
+    log, busy, nextkey = [], [], 0
+
+    def drain():
+        for name, item in d.notify_batch():
+            log.append(("n", item.key, name))
+            d.set_state(name, ExecutorState.BUSY)
+            busy.append(name)
+
+    for _ in range(steps):
+        op = rng.random()
+        if op < 0.45:
+            d.submit(Item(nextkey, [rng.choice(objs)
+                                    for _ in range(rng.randint(1, 4))]))
+            nextkey += 1
+            drain()
+        elif op < 0.65 and busy:
+            e = busy.pop(rng.randrange(len(busy)))
+            if e not in d._executors:
+                continue
+            d.set_state(e, ExecutorState.PENDING)
+            picked = d.pick_items(e, m=rng.choice([1, 2]))
+            log.append(("p", e, tuple(d._key(i) for i in picked)))
+            if picked:
+                busy.append(e)
+        elif op < 0.75:
+            idx.add(rng.choice(objs), rng.choice(execs),
+                    tier=rng.choice(["hbm", "dram", "disk"]) if tiered else None)
+        elif op < 0.85:
+            idx.remove(rng.choice(objs), rng.choice(execs))
+        elif op < 0.90 and len(d._executors) > 1:
+            e = rng.choice(sorted(d._executors))
+            d.deregister_executor(e)
+            busy[:] = [b for b in busy if b != e]
+        else:
+            drain()
+    return d, log
+
+
+# ------------------------------------------------------- property: equality
+@settings(max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       policy=st.sampled_from(POLICIES),
+       tiered=st.sampled_from([False, True]),
+       floor=st.sampled_from([0.0, 0.5]),
+       sharded=st.sampled_from([False, True]))
+def test_vectorized_equals_reference(seed, policy, tiered, floor, sharded):
+    ref, ref_log = _drive(DataAwareDispatcher, seed, policy, tiered, floor, sharded)
+    vec, vec_log = _drive(VectorizedDispatcher, seed, policy, tiered, floor, sharded)
+    assert ref_log == vec_log
+    assert ref.stats.decisions == vec.stats.decisions
+    assert vec.check_consistency()
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       policy=st.sampled_from(POLICIES))
+def test_notify_batch_equals_notify_loop(seed, policy):
+    """The vectorized single-scan batch == its own one-at-a-time loop."""
+    rng = random.Random(seed)
+    logs = []
+    for use_batch in (False, True):
+        idx = CentralizedIndex()
+        d = VectorizedDispatcher(policy=policy, window=8,
+                                 cpu_util_threshold=0.5, index=idx)
+        for i in range(4):
+            d.register_executor(f"e{i}")
+        objs = [f"o{i}" for i in range(8)]
+        r = random.Random(seed + 1)
+        for _ in range(10):
+            idx.add(r.choice(objs), f"e{r.randrange(4)}")
+        for k in range(12):
+            d.submit(Item(k, [r.choice(objs)]))
+        if use_batch:
+            pairs = d.notify_batch()
+        else:
+            pairs = []
+            while True:
+                p = d.notify()
+                if p is None:
+                    break
+                pairs.append(p)
+        logs.append([(i.key, e) for e, i in pairs])
+    assert logs[0] == logs[1]
+
+
+# --------------------------------------------------- unit: incremental state
+def make_vec(policy="good-cache-compute", tiered=False, **kw):
+    d = VectorizedDispatcher(policy=policy,
+                             tier_weights=TIER_WEIGHTS if tiered else None,
+                             **kw)
+    for i in range(3):
+        d.register_executor(f"e{i}")
+    return d
+
+
+def test_submit_initializes_scores_and_dispatch_clears_them():
+    d = make_vec()
+    d.index.add("a", "e1")
+    d.index.add("b", "e1")
+    d.index.add("b", "e2")
+    d.submit(Item(0, ("a", "b")))
+    row = d._item_row[0]
+    e1, e2 = d._exec_row["e1"], d._exec_row["e2"]
+    assert d._Sb[row, e1] == 2 and d._Sb[row, e2] == 1
+    assert d.check_consistency()
+    name, _ = d.notify()
+    assert name == "e1"
+    assert 0 not in d._item_row
+    assert d.check_consistency()
+
+
+def test_index_events_update_scores_incrementally():
+    d = make_vec()
+    d.submit(Item(0, ("a",)))
+    row = d._item_row[0]
+    e0 = d._exec_row["e0"]
+    assert d._Sb[row, e0] == 0
+    d.index.add("a", "e0")                    # cache insert lands
+    assert d._Sb[row, e0] == 1
+    d.index.remove("a", "e0")                 # eviction withdraws presence
+    assert d._Sb[row, e0] == 0
+    assert d.check_consistency()
+
+
+def test_tier_change_updates_weighted_scores():
+    d = make_vec(tiered=True)
+    d.index.add("a", "e0", tier="disk")
+    d.submit(Item(0, ("a",)))
+    row, e0 = d._item_row[0], d._exec_row["e0"]
+    assert d._Sw[row, e0] == 0.25
+    d.index.add("a", "e0", tier="hbm")        # promotion: tier-only event
+    assert d._Sw[row, e0] == 1.0
+    assert d._Sb[row, e0] == 1                # presence unchanged
+    assert d.check_consistency()
+
+
+def test_deregister_clears_executor_column():
+    d = make_vec()
+    d.index.add("a", "e1")
+    d.submit(Item(0, ("a",)))
+    row, e1 = d._item_row[0], d._exec_row["e1"]
+    assert d._Sb[row, e1] == 1
+    d.deregister_executor("e1")
+    assert d._Sb[row, e1] == 0 and not d._presence[e1].any()
+    assert d.check_consistency()
+
+
+def test_duplicate_objects_score_with_multiplicity():
+    """An item naming the same object twice scores it twice (reference
+    accumulates per occurrence)."""
+    d = make_vec()
+    d.submit(Item(0, ("a", "a")))
+    row, e0 = d._item_row[0], d._exec_row["e0"]
+    d.index.add("a", "e0")
+    assert d._Sb[row, e0] == 2
+    d.index.remove("a", "e0")
+    assert d._Sb[row, e0] == 0
+    assert d.check_consistency()
+
+
+def test_capacity_growth_keeps_consistency():
+    d = make_vec()
+    for e in range(40):                        # grows executor rows
+        d.register_executor(f"x{e}")
+    for k in range(600):                       # grows item rows + obj columns
+        d.submit(Item(k, (f"obj{k % 400}", f"obj{(k * 7) % 400}")))
+    for k in range(0, 400, 3):
+        d.index.add(f"obj{k}", f"x{k % 40}")
+    assert d.check_consistency()
+
+
+def test_column_reuse_after_release():
+    d = make_vec()
+    d.submit(Item(0, ("a",)))
+    col = d._obj_col["a"]
+    pair = d.notify()                          # dispatches item 0
+    assert pair is not None
+    assert "a" not in d._obj_col               # no holders, no demand: freed
+    d.submit(Item(1, ("b",)))                  # may reuse the column
+    if d._obj_col["b"] == col:
+        row = d._item_row[1]
+        assert d._Sb[row].max() == 0
+    assert d.check_consistency()
+
+
+def test_rebuild_scores_matches_incremental():
+    import numpy as np
+    d = make_vec(tiered=True)
+    rng = random.Random(3)
+    for e in range(3):
+        for o in rng.sample(range(30), 10):
+            d.index.add(f"o{o}", f"e{e}", tier=rng.choice(["hbm", "dram", "disk"]))
+    for k in range(50):
+        d.submit(Item(k, [f"o{rng.randrange(30)}" for _ in range(3)]))
+    sb, sw = d.rebuild_scores(backend="numpy")
+    rows = sorted(d._item_row.values())
+    assert np.array_equal(sb, d._Sb[rows].astype(sb.dtype))
+    assert np.array_equal(sw, d._Sw[rows])
+
+
+def test_requires_subscribable_index():
+    class Opaque:
+        version = 0
+
+    with pytest.raises(TypeError):
+        VectorizedDispatcher(index=Opaque())
+
+
+# ------------------------------------------------------- integration parity
+def test_simulator_parity_reference_vs_vectorized():
+    from repro.core.simulator import SimConfig, run_experiment
+    from repro.core.workload import locality_workload
+
+    mb = 1024 ** 2
+    base = dict(policy="good-cache-compute", static_nodes=4, max_nodes=4,
+                coherence_delay_s=0.0, cache_size_per_node_bytes=16 * mb)
+    r0 = run_experiment(locality_workload(10.0, 400), SimConfig(**base))
+    r1 = run_experiment(locality_workload(10.0, 400),
+                        SimConfig(vectorized_dispatch=True, **base))
+    assert r0.wet_s == r1.wet_s
+    assert r0.tasks_done == r1.tasks_done
+    assert (r0.hits_local, r0.hits_remote, r0.misses) == \
+           (r1.hits_local, r1.hits_remote, r1.misses)
+    assert r0.scheduler_decisions == r1.scheduler_decisions
+    assert r0.avg_response_s == r1.avg_response_s
+
+
+def test_router_parity_reference_vs_vectorized():
+    import heapq
+
+    from repro.diffusion.tiers import TierSpec
+    from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+    def run(impl):
+        rng = random.Random(11)
+        router = CacheAffinityRouter(
+            policy="good-cache-compute", window=32,
+            object_size_fn=lambda obj: 1.0,
+            tier_specs=[TierSpec("hbm", 8.0), TierSpec("dram", 64.0, 10.0)],
+            persistent_bw_bytes_per_s=100.0, nic_bw_bytes_per_s=50.0,
+            dispatcher_impl=impl,
+        )
+        for _ in range(3):
+            router.add_replica()
+        stream = []
+        t = 0.0
+        for i in range(200):
+            t += rng.expovariate(100.0)
+            objs = tuple(f"s{rng.randrange(12)}:b{b}" for b in range(2))
+            stream.append((t, RoutedRequest(i, objs, submit_time_s=t)))
+        events, eseq, log, completed = [], 0, [], 0
+        for at, req in stream:
+            heapq.heappush(events, (at, eseq, "arrive", req))
+            eseq += 1
+        while events and completed < len(stream):
+            now, _, kind, req = heapq.heappop(events)
+            if kind == "arrive":
+                assigns = router.submit(req, now=now)
+            else:
+                completed += 1
+                assigns = router.complete(req, now=now)
+            for a in assigns:
+                for r in a.requests:
+                    log.append((r.request_id, a.replica))
+                    heapq.heappush(
+                        events, (now + 0.01 + r.restore_cost_s, eseq, "done", r))
+                    eseq += 1
+        return log, router.stats.hit_rate
+
+    ref_log, ref_hit = run("reference")
+    vec_log, vec_hit = run("vectorized")
+    assert ref_log == vec_log
+    assert ref_hit == vec_hit

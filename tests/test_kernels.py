@@ -10,6 +10,8 @@ pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~1 min on CPU
 
 from repro.kernels import (
     attention_ref,
+    dispatch_scores,
+    dispatch_scores_ref,
     flash_attention,
     gmm_ref,
     moe_gmm,
@@ -18,6 +20,31 @@ from repro.kernels import (
     wkv6,
     wkv6_ref,
 )
+
+
+# ------------------------------------------------------- dispatch scoring
+@pytest.mark.parametrize(
+    "W,O,E,density",
+    [
+        (16, 64, 4, 0.2),        # tiny: exercises padding on every axis
+        (256, 512, 64, 0.05),    # one full tile
+        (300, 1200, 96, 0.02),   # ragged: multi-tile contraction + padding
+    ],
+)
+def test_dispatch_scores_matches_ref(W, O, E, density):
+    rng = np.random.default_rng(42)
+    demand = (rng.random((W, O)) < density).astype(np.float32)
+    # tier-weighted presence: dyadic weights like the dispatch plane uses
+    presence = (rng.random((E, O)) < 0.3).astype(np.float32)
+    presence *= rng.choice([1.0, 0.5, 0.25], size=(E, O)).astype(np.float32)
+    out = dispatch_scores(jnp.asarray(demand), jnp.asarray(presence),
+                          interpret=True)
+    ref = dispatch_scores_ref(jnp.asarray(demand), jnp.asarray(presence))
+    assert out.shape == (W, E)
+    assert rel_err(out, ref) < 1e-6
+    # exactness against float64 numpy for the dyadic-weight regime
+    exact = demand.astype(np.float64) @ presence.astype(np.float64).T
+    assert np.abs(np.asarray(out, np.float64) - exact).max() == 0.0
 
 
 def rel_err(a, b):

@@ -178,3 +178,80 @@ def test_warmstart_stats_aggregate_over_replicas():
     rep2 = r.warm_start(c, now=11.0)
     assert r.warmstart.replicas_warmed == 2
     assert r.warmstart.cloned == rep1.cloned + rep2.cloned
+
+
+# ------------------------------------------------ heat decay (ranking decay)
+class TestHeatDecay:
+    def test_legacy_counter_ignores_time(self):
+        idx = CentralizedIndex()                       # no half-life
+        idx.note_access("a", 5, now=0.0)
+        idx.note_access("b", 3, now=1000.0)
+        assert idx.hot_objects(2) == [("a", 5), ("b", 3)]
+
+    def test_heat_halves_per_half_life(self):
+        idx = CentralizedIndex(heat_half_life_s=10.0)
+        idx.note_access("a", 8, now=0.0)
+        assert idx.heat_of("a", now=10.0) == pytest.approx(4.0)
+        assert idx.heat_of("a", now=30.0) == pytest.approx(1.0)
+
+    def test_ranking_prefers_current_hot_set(self):
+        """Yesterday's blockbuster loses to the currently-hot object —
+        exactly the warm-start regression decay exists to prevent."""
+        idx = CentralizedIndex(heat_half_life_s=60.0)
+        for _ in range(100):
+            idx.note_access("yesterday", now=0.0)      # huge, old
+        for _ in range(10):
+            idx.note_access("now-hot", now=600.0)      # modest, fresh
+        top = idx.hot_objects(2, now=600.0)
+        assert top[0][0] == "now-hot"
+        # without decay the lifetime count would have kept "yesterday" first
+        flat = CentralizedIndex()
+        for _ in range(100):
+            flat.note_access("yesterday")
+        for _ in range(10):
+            flat.note_access("now-hot")
+        assert flat.hot_objects(1)[0][0] == "yesterday"
+
+    def test_sharded_merge_ranks_by_decayed_heat(self):
+        idx = ShardedIndex(shards=4, heat_half_life_s=60.0)
+        for _ in range(100):
+            idx.note_access("old0", now=0.0)
+        for _ in range(10):
+            idx.note_access("fresh1", now=600.0)
+        assert idx.hot_objects(1, now=600.0)[0][0] == "fresh1"
+        # merge without an explicit now anchors to the latest observed time
+        assert idx.hot_objects(1)[0][0] == "fresh1"
+
+
+class TestHotToHbm:
+    def test_hot_objects_above_threshold_clone_into_hbm(self):
+        idx, eng, stores = plane()
+        stores["r0"].admit("blazing", 1.0)
+        stores["r0"].admit("tepid", 1.0)
+        heat(idx, {"blazing": 50, "tepid": 2})
+        report = clone_hottest(idx, stores["new"], "new", lambda o: 1.0, 0.0,
+                               max_objects=2, engine=eng, admit_tier=1,
+                               hbm_heat_threshold=10.0)
+        assert report.cloned == 2 and report.cloned_to_hbm == 1
+        assert stores["new"].tier_of("blazing") == "hbm"
+        assert stores["new"].tier_of("tepid") == "dram"
+
+    def test_router_threads_heat_threshold_through_warm_start(self):
+        idx = CentralizedIndex(heat_half_life_s=300.0)
+        router = CacheAffinityRouter(
+            policy="good-cache-compute",
+            object_size_fn=lambda o: 1.0,
+            index=idx,
+            tier_specs=[TierSpec("hbm", 100.0), TierSpec("dram", 100.0, 10.0)],
+            warmstart_objects=2,
+            warmstart_hbm_heat=10.0,
+        )
+        router.add_replica("r0")
+        for obj, n in (("blazing", 50), ("tepid", 2)):
+            router.stores["r0"].admit(obj, 1.0)
+            idx.note_access(obj, n, now=0.0)
+        name = router.add_replica("fresh")
+        report = router.warm_start(name, now=1.0)
+        assert report.cloned == 2 and report.cloned_to_hbm == 1
+        assert router.stores["fresh"].tier_of("blazing") == "hbm"
+        assert router.stores["fresh"].tier_of("tepid") == "dram"
