@@ -234,6 +234,35 @@ def coherence_sweep_rows(num_tasks: int) -> List[Tuple[str, float, str]]:
                 f"ops_per_batch={sim.index.bus.stats.ops_per_batch:.1f};"
                 f"wet_s={r.wet_s:.1f};tasks={r.tasks_done}",
             ))
+        # Closed loop: start at the widest (cheapest, stalest) heartbeat and
+        # let CoherenceBus.adapt steer the window from the measured
+        # stale-claim rate — the auto-tuner should land between the sweep's
+        # extremes, recovering hit rate without giving up all amortization.
+        wl = locality_workload(30.0, num_tasks)
+        cfg = SimConfig(
+            policy="good-cache-compute",
+            static_nodes=8,
+            max_nodes=8,
+            coherence_delay_s=1.0,
+            coherence_batch_window_s=10.0,
+            coherence_autotune=True,
+            tiers=tiers,
+            index_shards=4,
+            vectorized_dispatch=True,
+        )
+        sim = Simulator(wl, cfg, teragrid_profile())
+        r = sim.run()
+        bus = sim.index.bus
+        rows.append((
+            f"diffusion_tiers/coherence_{label}_autotune",
+            r.wet_s * 1e6 / max(1, r.tasks_done),
+            f"hit_local={r.hit_rate_local:.3f};"
+            f"hit_delta={r.hit_rate_local - (base_hit or 0.0):+.3f};"
+            f"stale_claims={r.stale_claims};"
+            f"final_window_s={bus.batch_window_s:.3f};"
+            f"shrunk={bus.stats.shrunk};widened={bus.stats.widened};"
+            f"ops_per_batch={bus.stats.ops_per_batch:.1f}",
+        ))
     return rows
 
 

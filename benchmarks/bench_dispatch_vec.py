@@ -21,12 +21,12 @@ phase-2 pickup path.  Three sections:
     sanity-checking that steady state never wants the bulk path.
 
 Writes ``BENCH_dispatch.json`` (decisions/sec for both engines at the
-paper-default config) so the perf trajectory is tracked from this PR on.
+paper-default config); every run appends a timestamped entry to the file's
+``history`` list so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
-import json
 import random
 import sys
 import time
@@ -35,6 +35,10 @@ from typing import Dict, List, Optional, Tuple
 
 if __package__ in (None, ""):
     sys.path.insert(0, "src")
+    sys.path.insert(0, "benchmarks")
+    from bench_util import append_history
+else:
+    from .bench_util import append_history
 
 from repro.core.dispatch import POLICIES, DataAwareDispatcher
 from repro.core.index import CentralizedIndex
@@ -228,17 +232,16 @@ def main(n: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]]:
     rows.extend(policy_rows(n))
     rows.extend(bulk_rescore_rows(n))
     if default_metrics:
-        with open("BENCH_dispatch.json", "w") as f:
-            json.dump({
-                "config": {"window": 3200, "executors": 64,
-                           "objects_per_item": 4,
-                           "policy": "good-cache-compute"},
-                "reference_decisions_per_s": round(default_metrics["ref_dps"], 1),
-                "vectorized_decisions_per_s": round(default_metrics["vec_dps"], 1),
-                "speedup": round(default_metrics["speedup"], 2),
-                "decisions": int(default_metrics["decisions"]),
-                "equal": True,
-            }, f, indent=1)
+        append_history("BENCH_dispatch.json", {
+            "config": {"window": 3200, "executors": 64,
+                       "objects_per_item": 4,
+                       "policy": "good-cache-compute"},
+            "reference_decisions_per_s": round(default_metrics["ref_dps"], 1),
+            "vectorized_decisions_per_s": round(default_metrics["vec_dps"], 1),
+            "speedup": round(default_metrics["speedup"], 2),
+            "decisions": int(default_metrics["decisions"]),
+            "equal": True,
+        })
     return rows
 
 

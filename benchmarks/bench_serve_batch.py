@@ -1,0 +1,248 @@
+"""Serving batch plane benchmark: single-scan batched drain vs per-request loop.
+
+Drives ``CacheAffinityRouter`` through a round-based virtual-time serving
+harness — each round completes the previous wave (``complete_batch``),
+enqueues a burst of Zipf prefix-reuse requests, and runs one ``tick`` — in
+three modes over the byte-identical call sequence:
+
+  * ``looped``   — ``batch_drain=False`` + the reference dispatcher: the
+    incumbent per-request ``notify()`` loop (one full window scan and one
+    tier-promotion pass per decision);
+  * ``loop_vec`` — ``batch_drain=False`` + the vectorized dispatcher
+    (attribution row: array scoring without the batched drain);
+  * ``batched``  — ``batch_drain=True`` + the vectorized dispatcher: every
+    free replica drained from one ``notify_batch`` window scan against a
+    frozen presence snapshot, tier promotions applied as a per-batch delta,
+    and misses admitted through one batched ``TransferEngine`` resolution.
+
+Every row *asserts* the decision-parity escape hatch: the three modes must
+produce bit-identical assignment logs, and looped vs batched must end with
+identical per-replica tier contents.  Divergence raises -> ERROR row -> the
+``run.py --smoke`` gate and CI fail (the same contract as
+``bench_dispatch_vec`` / ``bench_index_scale``).
+
+The headline rows run max-cache-hit — the *delaying* policy, where the
+looped path re-scans the affinity-delayed backlog on every decision and the
+batched drain amortizes all of it into one scan (>= 3x requests/sec at
+batch=32 at full scale).  Two companion rows keep the other planes honest:
+a tight-HBM stream whose hits constantly promote from the host tier
+(exercising the deferred promote/demote delta log) and a good-cache-compute
+stream with cold arrivals (exercising the batched admission path).  Under
+GCC the batch-entry snapshot can legitimately differ from the looped path's
+evolving view once the replication cap binds mid-burst (bulk-scheduling
+semantics); the companion rows therefore run with replication headroom,
+where the decisions are provably interleaving-insensitive.
+
+Writes ``BENCH_serve.json`` with an appended ``history`` entry per run.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+if __package__ in (None, ""):
+    sys.path.insert(0, "src")
+    sys.path.insert(0, "benchmarks")
+    from bench_util import append_history, zipf_sessions
+else:
+    from .bench_util import append_history, zipf_sessions
+
+from repro.diffusion.tiers import TierSpec
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+BLOCK = 2.0 * 1024**2
+
+MODES = {
+    "looped": (False, "reference"),
+    "loop_vec": (False, "vectorized"),
+    "batched": (True, "vectorized"),
+}
+
+
+def build_router(policy: str, batch_drain: bool, impl: str, replicas: int,
+                 hbm_blocks: int, dram_blocks: int, window: int,
+                 max_object_replicas: int) -> CacheAffinityRouter:
+    router = CacheAffinityRouter(
+        policy=policy,
+        window=window,
+        max_object_replicas=max_object_replicas,
+        object_size_fn=lambda obj: BLOCK,
+        tier_specs=[TierSpec("hbm", hbm_blocks * BLOCK),
+                    TierSpec("dram", dram_blocks * BLOCK, 64e9)],
+        persistent_bw_bytes_per_s=4e9,
+        nic_bw_bytes_per_s=16e9,
+        batch_drain=batch_drain,
+        dispatcher_impl=impl,
+        log_assignments=True,
+    )
+    for _ in range(replicas):
+        router.add_replica()
+    return router
+
+
+def drive(router: CacheAffinityRouter, sids: List[int], batch: int,
+          blocks: int, decode_s: float = 0.004) -> int:
+    """Round-based serving pump (virtual time): complete the previous wave
+    as one batch, enqueue this round's burst, drain once.  Identical call
+    sequence for every mode — only the router's drain strategy differs."""
+    t = 1000.0
+    served = 0
+    rid = 0
+    i = 0
+    wave: List = []
+    stall = 0
+    while i < len(sids) or router.queue_length() > 0 or wave:
+        before = served
+        finished = [rr for a in wave for rr in a.requests]
+        served += len(finished)
+        nxt = list(router.complete_batch(finished, now=t)) if finished else []
+        burst = sids[i:i + batch]
+        i += len(burst)
+        for sid in burst:
+            objs = tuple(f"kv:s{sid}:b{b}" for b in range(blocks))
+            router.enqueue(RoutedRequest(rid, objs, submit_time_s=t), now=t)
+            rid += 1
+        nxt.extend(router.tick(t))
+        wave = nxt
+        t += decode_s
+        stall = stall + 1 if served == before and not wave else 0
+        if stall > 3:
+            break               # policy refuses the remainder
+    return served
+
+
+def _contents(router: CacheAffinityRouter) -> Dict[str, Dict[str, str]]:
+    return {name: store.tiers.contents()
+            for name, store in router.stores.items()}
+
+
+def run_case(label: str, policy: str, batch: int, blocks: int,
+             hbm_blocks: int, dram_blocks: int, sessions: int, replicas: int,
+             n: int, alpha: float = 1.0, window: int = 512,
+             max_object_replicas: Optional[int] = None,
+             reps: int = 1) -> Dict[str, float]:
+    if max_object_replicas is None:
+        max_object_replicas = 2 * replicas   # headroom: cap never binds
+    results = {}
+    for mode, (batch_drain, impl) in MODES.items():
+        best = None
+        for _ in range(max(1, reps)):
+            # Best-of-reps with a fresh router per rep: allocator/GC jitter
+            # swings a single run by ~1.5x; the run is deterministic, so
+            # the logs must agree across reps (asserted) and min wall time
+            # is the measurement.
+            router = build_router(policy, batch_drain, impl, replicas,
+                                  hbm_blocks, dram_blocks, window,
+                                  max_object_replicas)
+            drive(router, list(range(sessions)), 1, blocks)  # warm sessions
+            sids = zipf_sessions(n, sessions, alpha, seed=7)
+            t0 = time.perf_counter()
+            served = drive(router, sids, batch, blocks)
+            wall = time.perf_counter() - t0
+            if best is not None and best["log"] != router.assignment_log:
+                raise RuntimeError(
+                    f"serve_batch[{label}]: non-deterministic assignment "
+                    f"log across repetitions of the {mode} drive")
+            if best is None or served / wall > best["rps"]:
+                best = {
+                    "log": router.assignment_log,
+                    "rps": served / max(wall, 1e-9),
+                    "served": served,
+                    "router": router,
+                }
+        results[mode] = best
+    ref, bat = results["looped"], results["batched"]
+    for mode in ("loop_vec", "batched"):
+        if results[mode]["log"] != ref["log"]:
+            a, b = ref["log"], results[mode]["log"]
+            d = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                     min(len(a), len(b)))
+            raise RuntimeError(
+                f"serve_batch[{label}]: {mode} drain diverged from the "
+                f"per-request loop at decision {d}: "
+                f"looped={a[d:d + 3]} {mode}={b[d:d + 3]}")
+    if _contents(ref["router"]) != _contents(bat["router"]):
+        raise RuntimeError(
+            f"serve_batch[{label}]: batched drain left different tier "
+            f"contents than the per-request loop")
+    promos = sum(st.tiers.promotions
+                 for st in bat["router"].stores.values())
+    deferred = sum(st.tiers.deferred_applied
+                   for st in bat["router"].stores.values())
+    engine = bat["router"].engine
+    return {
+        "looped_rps": ref["rps"],
+        "loop_vec_rps": results["loop_vec"]["rps"],
+        "batched_rps": bat["rps"],
+        "speedup": bat["rps"] / max(ref["rps"], 1e-9),
+        "served": ref["served"],
+        "hit_rate": bat["router"].stats.hit_rate,
+        "promotions": promos,
+        "deferred_applied": deferred,
+        "batch_drains": bat["router"].dispatcher.stats.batch_drains,
+        "shared_flights": engine.stats.shared if engine else 0,
+    }
+
+
+def main(n: int = 3000, seed: int = 0) -> List[Tuple[str, float, str]]:
+    n = max(300, n)
+    reps = 1 if n <= 1000 else 2     # smoke stays fast; full scale de-jitters
+    rows: List[Tuple[str, float, str]] = []
+    batch32: Dict[str, float] = {}
+    # Headline: the delaying policy under affinity backlog, batch-size sweep.
+    for batch in (1, 8, 32, 128):
+        m = run_case(f"mch_b{batch}", "max-cache-hit", batch, blocks=3,
+                     hbm_blocks=12, dram_blocks=24, sessions=96, replicas=32,
+                     n=n, reps=reps)
+        if batch == 32:
+            batch32 = m
+        rows.append((
+            f"serve_batch/mch_b{batch}",
+            1e6 / max(m["batched_rps"], 1e-9),
+            f"looped_rps={m['looped_rps']:.0f};"
+            f"loop_vec_rps={m['loop_vec_rps']:.0f};"
+            f"batched_rps={m['batched_rps']:.0f};"
+            f"speedup={m['speedup']:.2f};equal=True;"
+            f"hit_rate={m['hit_rate']:.2f};served={int(m['served'])}",
+        ))
+    # Deferred-promotion plane: tight HBM, every hit swaps in from the host
+    # tier, the batch applies the coalesced promote delta per drain.
+    m = run_case("promote_b32", "max-cache-hit", 32, blocks=1, hbm_blocks=2,
+                 dram_blocks=16, sessions=96, replicas=32, n=n)
+    rows.append((
+        "serve_batch/promote_b32",
+        1e6 / max(m["batched_rps"], 1e-9),
+        f"speedup={m['speedup']:.2f};equal=True;"
+        f"promotions={int(m['promotions'])};"
+        f"deferred_applied={int(m['deferred_applied'])}",
+    ))
+    # Batched-admission plane: GCC with replication headroom + cold arrivals
+    # exercising one-pass union resolution through the transfer engine.
+    m = run_case("gcc_admit_b32", "good-cache-compute", 32, blocks=1,
+                 hbm_blocks=2, dram_blocks=16, sessions=max(96, n // 6),
+                 replicas=32, n=n)
+    rows.append((
+        "serve_batch/gcc_admit_b32",
+        1e6 / max(m["batched_rps"], 1e-9),
+        f"speedup={m['speedup']:.2f};equal=True;"
+        f"hit_rate={m['hit_rate']:.2f};"
+        f"shared_flights={int(m['shared_flights'])}",
+    ))
+    if batch32:
+        append_history("BENCH_serve.json", {
+            "config": {"policy": "max-cache-hit", "batch": 32, "blocks": 3,
+                       "replicas": 32, "window": 512, "requests": n},
+            "looped_rps": round(batch32["looped_rps"], 1),
+            "loop_vec_rps": round(batch32["loop_vec_rps"], 1),
+            "batched_rps": round(batch32["batched_rps"], 1),
+            "speedup": round(batch32["speedup"], 2),
+            "equal": True,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

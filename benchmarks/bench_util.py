@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: BENCH_*.json history tracking.
+
+The perf-trajectory files (``BENCH_dispatch.json``, ``BENCH_serve.json``)
+used to be overwritten per run, losing the across-PR trajectory.
+``append_history`` keeps the latest run's fields at the top level (so
+existing consumers keep working) and appends every run — timestamped — to a
+``history`` list.  A pre-history file's snapshot is migrated into the list
+so the first tracked point is not lost.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from datetime import datetime, timezone
+from typing import Any, Dict, List
+
+
+def zipf_sessions(n: int, sessions: int, alpha: float, seed: int) -> List[int]:
+    """``n`` Zipf(alpha)-distributed session ids — the skewed serving
+    workload shape the serving benches share (hot head, long tail).  One
+    ``choices`` call (same value stream as per-draw, verified) so the
+    cumulative-weight table builds once, not n times."""
+    rng = random.Random(seed)
+    weights = [1.0 / (s + 1) ** alpha for s in range(sessions)]
+    return rng.choices(range(sessions), weights=weights, k=n)
+
+
+def append_history(path: str, entry: Dict[str, Any]) -> Dict[str, Any]:
+    """Write ``entry`` (+ ``ts``) as the latest run, appending to history."""
+    entry = dict(entry)
+    entry["ts"] = datetime.now(timezone.utc).isoformat(timespec="seconds")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {}
+    history = doc.get("history")
+    if history is None:
+        history = []
+        if doc:                     # migrate a pre-history snapshot
+            history.append(dict(doc, migrated=True))
+    history.append(entry)
+    out = dict(entry)
+    out["history"] = history
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

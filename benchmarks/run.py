@@ -3,11 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV.  Default scale runs the DES
 experiments at 25K tasks (minutes); ``--full`` reproduces the paper's 250K
 (the EXPERIMENTS.md numbers).  ``--quick`` drops to 6K for CI.
+
+Bench modules are imported *lazily*, one per suite, at the moment the suite
+runs: importing this module (or starting a ``--smoke`` / ``--only`` run)
+must not pay for the JAX-heavy benches (roofline/model-error pull in the
+launch/model stack), so the smoke gate starts in a couple of seconds on a
+bare CPU install and an import-time failure in one bench degrades to that
+suite's ERROR row instead of killing the whole harness.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
 
@@ -32,46 +40,35 @@ def main() -> None:
         n_scale = 40_000 if args.full else 8_000
         n_idx = 2_000 if args.quick else (8_000 if args.full else 4_000)
 
-    from . import (
-        bench_cache_throughput,
-        bench_diffusion_tiers,
-        bench_dispatch_vec,
-        bench_index_scale,
-        bench_model_error,
-        bench_pi_speedup,
-        bench_provisioning,
-        bench_roofline,
-        bench_scale,
-        bench_scheduler,
-        bench_serve_routing,
-    )
-
+    # (suite name, module, main() argument) — module import deferred to run
+    # time.  The serve_batch / dispatch_vec / index_scale suites *assert*
+    # decision parity (batched-vs-looped serving drain, vectorized-vs-
+    # reference dispatch, sharded-vs-flat index); any divergence raises ->
+    # ERROR row -> the smoke gate (CI) fails.
     suites = [
-        ("scheduler", lambda: bench_scheduler.main(n_sched)),
-        ("serve_routing", lambda: bench_serve_routing.main(n_serve)),
-        ("diffusion_tiers", lambda: bench_diffusion_tiers.main(n_serve)),
-        # dispatch_vec asserts bit-identical reference-vs-vectorized
-        # assignment sequences (all five policies) and writes
-        # BENCH_dispatch.json; divergence raises -> ERROR row -> CI fails.
-        ("dispatch_vec", lambda: bench_dispatch_vec.main(n_idx)),
-        # index_scale's decisions_equal section raises on any sharded-vs-flat
-        # dispatch divergence -> ERROR row -> the smoke gate (CI) fails.
-        ("index_scale", lambda: bench_index_scale.main(n_idx)),
-        ("provisioning", lambda: bench_provisioning.main(n)),
-        ("cache_throughput", lambda: bench_cache_throughput.main(n)),
-        ("pi_speedup", lambda: bench_pi_speedup.main(n)),
-        ("model_error", lambda: bench_model_error.main(n_model)),
-        ("scale", lambda: bench_scale.main(n_scale)),
-        ("roofline", lambda: bench_roofline.main()),
+        ("scheduler", "bench_scheduler", n_sched),
+        ("serve_routing", "bench_serve_routing", n_serve),
+        ("serve_batch", "bench_serve_batch", n_serve),
+        ("diffusion_tiers", "bench_diffusion_tiers", n_serve),
+        ("dispatch_vec", "bench_dispatch_vec", n_idx),
+        ("index_scale", "bench_index_scale", n_idx),
+        ("provisioning", "bench_provisioning", n),
+        ("cache_throughput", "bench_cache_throughput", n),
+        ("pi_speedup", "bench_pi_speedup", n),
+        ("model_error", "bench_model_error", n_model),
+        ("scale", "bench_scale", n_scale),
+        ("roofline", "bench_roofline", None),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
-    for name, fn in suites:
+    for name, mod_name, arg in suites:
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            for row in fn():
+            mod = importlib.import_module(f".{mod_name}", __package__)
+            rows = mod.main() if arg is None else mod.main(arg)
+            for row in rows:
                 print(",".join(str(x) for x in row), flush=True)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)

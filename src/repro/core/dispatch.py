@@ -70,6 +70,8 @@ class SchedulerStats:
     fallback_dispatches: int = 0
     delayed: int = 0
     tier_floor_bypasses: int = 0    # GCC skipped a delay: holders too slow
+    batch_drains: int = 0           # notify_batch calls (amortization factor:
+    #                                 decisions / batch_drains per single scan)
 
 
 class DataAwareDispatcher:
@@ -347,8 +349,12 @@ class DataAwareDispatcher:
         this with a single-scan batched drain that produces the *identical*
         assignment sequence.  Valid only when nothing else mutates dispatcher
         or index state between the emulated calls — which is how the
-        simulator's ``_try_notify`` and the dispatch benchmarks drive it.
+        simulator's ``_try_notify``, the dispatch benchmarks, and the
+        serving router's batched drain (``CacheAffinityRouter(batch_drain=
+        True)``, which defers tier promotions out of the decision path)
+        drive it.
         """
+        self.stats.batch_drains += 1
         out: List[Tuple[str, Any]] = []
         while limit is None or len(out) < limit:
             pair = self.notify()

@@ -116,6 +116,14 @@ class SimConfig:
     # stale-claim counters quantify the dispatch-quality cost (the paper's
     # Sec 3.1.1 loose-coherence argument, measured).
     coherence_batch_window_s: float = 0.0
+    # Coherence window auto-tuning (closes the sweep's loop): at every
+    # sample tick the bus adapts ``batch_window_s`` from the stale-claim
+    # rate measured since the previous adaptation — shrink when dispatch
+    # quality suffers, widen toward ``coherence_autotune_max_window_s``
+    # when claims are comfortably under ``coherence_autotune_target``.
+    coherence_autotune: bool = False
+    coherence_autotune_target: float = 0.02
+    coherence_autotune_max_window_s: float = 10.0
     # Array-backed dispatch plane (repro.dispatch_vec): decision-identical
     # to the reference scheduler — asserted by tests and the
     # bench_dispatch_vec smoke gate — but batched: phase 1 drains all free
@@ -275,6 +283,8 @@ class Simulator:
         # nothing local at all.  Both rise with coherence_batch_window_s.
         self.stale_claims = 0
         self.misdirected = 0
+        self._adapt_last_claims = 0
+        self._adapt_last_done = 0
         self.done = 0
         self.peak_queue = 0
         self.exec_seconds = 0.0
@@ -297,6 +307,24 @@ class Simulator:
     def _push(self, t: float, kind: str, payload: object = None) -> None:
         heapq.heappush(self._events, (t, self._eseq, kind, payload))
         self._eseq += 1
+
+    def _maybe_adapt_coherence(self) -> None:
+        """Feed the measured stale-claim rate back into the coherence bus
+        (``CoherenceBus.adapt``) — the auto-tuning loop the sweep in
+        ``bench_diffusion_tiers`` quantified the tradeoff for."""
+        if not self.cfg.coherence_autotune or not hasattr(self.index, "bus"):
+            return
+        done_d = self.done - self._adapt_last_done
+        if done_d < 20:
+            return              # too few completions for a stable rate
+        rate = (self.stale_claims - self._adapt_last_claims) / done_d
+        self.index.bus.adapt(
+            rate,
+            target_rate=self.cfg.coherence_autotune_target,
+            max_window_s=self.cfg.coherence_autotune_max_window_s,
+        )
+        self._adapt_last_claims = self.stale_claims
+        self._adapt_last_done = self.done
 
     def _account(self, t: float) -> None:
         """Integrate executor-seconds and utilization up to time t."""
@@ -323,6 +351,7 @@ class Simulator:
             # emit samples for every bucket boundary crossed
             while next_sample <= t:
                 self._sample(next_sample)
+                self._maybe_adapt_coherence()
                 next_sample += self.cfg.sample_dt_s
             self._account(t)
             self.now = t

@@ -24,13 +24,26 @@ Invariants (property-tested in ``tests/test_diffusion_properties.py``):
   * each tier's used bytes never exceed its capacity;
   * demotion preserves the node's total object count until the bottom tier
     evicts (or an object fits in no tier and passes through uncached).
+
+Deferred promotion epochs (the serving batch plane): ``defer_promotions()``
+switches the store into intent-logging mode — an ``access()`` that would
+relocate an object toward the top tier instead records a promote intent in a
+delta log keyed by object with last-writer-wins coalescing (the
+``CoherenceBus`` delta shape, one level down).  ``apply_promotions()`` ends
+the epoch and applies the coalesced delta in one pass: N hot-object accesses
+inside one batch become a single relocation and a single index tier update,
+and — critically for the batched router drain — presence and tier entries in
+the index stay *frozen* while a batch of dispatch decisions is being made,
+so ``notify_batch`` sees one consistent snapshot.  Intents whose object was
+dropped, demoted away, or already promoted by the time the epoch closes are
+discarded (they are hints, not obligations).
 """
 
 from __future__ import annotations
 
 import random as _random
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.cache import Cache
 from ..core.index import CentralizedIndex
@@ -150,6 +163,12 @@ class TieredStore:
         self.demotions = 0
         self.promotions = 0
         self.drops = 0
+        # Deferred-promotion epoch: None = immediate relocation (classic
+        # behavior); a dict = intent log ``obj -> (op, target tier index)``
+        # with last-writer-wins coalescing, applied by apply_promotions().
+        self._promo_log: Optional[Dict[str, Tuple[str, int]]] = None
+        self.deferred_applied = 0       # intents that became relocations
+        self.deferred_coalesced = 0     # intents absorbed by a later intent
 
     # -- queries --------------------------------------------------------------
     def __contains__(self, obj: str) -> bool:
@@ -203,9 +222,103 @@ class TieredStore:
             # nothing (which defeats the dispatcher's failed-scan memo).
             size = self._sizes[obj]
             if any(t.spec.capacity_bytes >= size for t in self.tiers[:i]):
-                self._relocate(obj, target=0)
-                self.promotions += 1
+                if self._promo_log is not None:
+                    self._log_intent(obj, "promote", 0)
+                else:
+                    self._relocate(obj, target=0)
+                    self.promotions += 1
         return tier.name
+
+    # -- deferred promotion epochs (serving batch plane) ----------------------
+    def defer_promotions(self) -> None:
+        """Begin (or continue) a deferred-promotion epoch: relocations from
+        ``access`` are recorded as intents instead of applied, freezing the
+        store's tier layout and its index entries until
+        ``apply_promotions``.  Idempotent — re-entering keeps the open log."""
+        if self._promo_log is None:
+            self._promo_log = {}
+
+    @property
+    def deferring(self) -> bool:
+        return self._promo_log is not None
+
+    def pending_promotions(self) -> int:
+        return len(self._promo_log) if self._promo_log is not None else 0
+
+    def has_intent(self, obj: str) -> bool:
+        """Is a promote/demote intent logged for ``obj`` in the open epoch?"""
+        return self._promo_log is not None and obj in self._promo_log
+
+    def _log_intent(self, obj: str, op: str, target: int) -> None:
+        if obj in self._promo_log:
+            self.deferred_coalesced += 1    # last-writer-wins, CoherenceBus-style
+        self._promo_log[obj] = (op, target)
+
+    def demote(self, obj: str, target: int) -> bool:
+        """Push a resident object down to tier ``target`` (cache-pressure
+        relief).  Deferred to the delta log inside an epoch.  Returns whether
+        the demotion applied (or was logged)."""
+        i = self._tier_idx.get(obj)
+        if i is None or i >= target or target >= len(self.tiers):
+            return False
+        if self._promo_log is not None:
+            self._log_intent(obj, "demote", target)
+            return True
+        self._relocate(obj, target)
+        self.demotions += 1
+        return True
+
+    def _apply_intent(self, obj: str, op: str, target: int) -> bool:
+        """Validate + apply one logged intent against the *current* layout —
+        an object dropped, already promoted, or no longer fitting is skipped
+        silently (intents are hints, not obligations)."""
+        i = self._tier_idx.get(obj)
+        if i is None:
+            return False                    # dropped/evicted since the intent
+        if op == "promote":
+            if i <= target:
+                return False                # already at or above the target
+            size = self._sizes[obj]
+            if not any(t.spec.capacity_bytes >= size
+                       for t in self.tiers[target:i]):
+                return False
+            self._relocate(obj, target)
+            self.promotions += 1
+            return True
+        if i >= target or target >= len(self.tiers):
+            return False
+        self._relocate(obj, target)
+        self.demotions += 1
+        return True
+
+    def apply_promotion(self, obj: str) -> bool:
+        """Apply (and discard) the logged intent for one object, if any.
+
+        The batched router replays a drained assignment's store mutations in
+        object order — promotion here, admission there — so recency order
+        evolves exactly as the looped per-decision path would have."""
+        if self._promo_log is None:
+            return False
+        ent = self._promo_log.pop(obj, None)
+        if ent is None:
+            return False
+        ok = self._apply_intent(obj, *ent)
+        if ok:
+            self.deferred_applied += 1
+        return ok
+
+    def apply_promotions(self) -> int:
+        """End the epoch: apply the remaining coalesced promote/demote delta
+        in one pass and return the number of relocations performed."""
+        log, self._promo_log = self._promo_log, None
+        if not log:
+            return 0
+        applied = 0
+        for obj, (op, target) in log.items():
+            if self._apply_intent(obj, op, target):
+                applied += 1
+        self.deferred_applied += applied
+        return applied
 
     def admit(self, obj: str, size_bytes: float, start_tier: int = 0) -> List[str]:
         """Place an object (new arrival), demoting victims down the stack.

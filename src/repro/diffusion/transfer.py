@@ -196,6 +196,78 @@ class TransferEngine:
         fetches always get a transfer (preempting speculation or queueing).
         """
         self.drain(now)
+        return self._fetch_resolved(obj, size_bytes, dest, now, kind,
+                                    admit_tier, allow_queue, None)
+
+    def fetch_batch(
+        self,
+        wants: List[Tuple[str, float, str]],
+        now: float,
+        kind: str = DEMAND,
+        admit_tier: int = 0,
+        admit: bool = True,
+    ) -> Dict[Tuple[str, str], Optional[Transfer]]:
+        """Batched miss admission for a drained assignment batch.
+
+        ``wants`` is ``[(obj, size_bytes, dest), ...]`` — the union of the
+        batch's missed objects.  One ``drain`` and one cheapest-source
+        resolution pass cover the whole batch: each object's sorted holder
+        list is computed once and reused across destinations (the per-call
+        re-sort is the hot cost of the looped path), while per-candidate
+        viability (store presence, in-flight exclusion, NIC load) stays
+        live, so source choices match what sequential ``fetch`` calls would
+        have made.  Duplicate ``(dest, obj)`` wants join the single flight
+        created by the first (``stats.shared``).  Returns a map keyed by
+        ``(dest, obj)``.
+
+        ``admit=False`` skips the destination-store bookkeeping admission:
+        the caller places the objects itself (the batched router replays
+        admissions in per-request object order so store recency evolves
+        exactly as the looped path's would).
+        """
+        fetch = self.batch_resolver(now, kind=kind)
+        out: Dict[Tuple[str, str], Optional[Transfer]] = {}
+        for obj, size_bytes, dest in wants:
+            out[(dest, obj)] = fetch(obj, size_bytes, dest, admit_tier, admit)
+        return out
+
+    def batch_resolver(self, now: float, kind: str = DEMAND):
+        """One-pass batched resolution: a single ``drain`` plus a shared
+        per-object sorted-candidate cache, returned as a fetch callable the
+        caller invokes at each miss's replay position.
+
+        Splitting resolution from the batch pre-pass matters for fidelity:
+        a source must be chosen against the store state *at its position in
+        the batch* — an earlier admission in the same batch may have
+        evicted a peer's only copy, and the live per-candidate checks in
+        ``_pick_source`` (store membership, in-flight exclusion, NIC load)
+        see that exactly as sequential ``fetch`` calls would.  Only the
+        drain and the candidate-list sorts are amortized across the batch.
+        """
+        self.drain(now)
+        loc_cache: Dict[str, List[str]] = {}
+
+        def fetch(obj: str, size_bytes: float, dest: str,
+                  admit_tier: int = 0, admit: bool = True
+                  ) -> Optional[Transfer]:
+            return self._fetch_resolved(obj, size_bytes, dest, now, kind,
+                                        admit_tier, None, loc_cache, admit)
+
+        return fetch
+
+    def _fetch_resolved(
+        self,
+        obj: str,
+        size_bytes: float,
+        dest: str,
+        now: float,
+        kind: str,
+        admit_tier: int,
+        allow_queue: Optional[bool],
+        loc_cache: Optional[Dict[str, List[str]]],
+        admit: bool = True,
+    ) -> Optional[Transfer]:
+        """Fetch body after the drain (shared by ``fetch``/``fetch_batch``)."""
         key = (dest, obj)
         existing = self._inflight.get(key)
         if existing is not None:
@@ -243,7 +315,8 @@ class TransferEngine:
             self.stats.queue_wait_s += start - now
 
         dst_store = self.stores[dest]
-        source, src_res = self._pick_source(obj, size_bytes, dest, dst_store)
+        source, src_res = self._pick_source(obj, size_bytes, dest, dst_store,
+                                            loc_cache)
         cost = copy_time(size_bytes, src_res, dst_store.nic, latency_s=self.latency_s)
         src_res.begin()
         dst_store.nic.begin()
@@ -258,20 +331,35 @@ class TransferEngine:
         else:
             self.stats.peer_fetches += 1
             self.stats.bytes_from_peers += size_bytes
-        dst_store.admit(obj, size_bytes, start_tier=admit_tier)
+        if admit:
+            dst_store.admit(obj, size_bytes, start_tier=admit_tier)
         return tr
 
     def _pick_source(
-        self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore
+        self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore,
+        loc_cache: Optional[Dict[str, List[str]]] = None,
     ) -> Tuple[str, BandwidthResource]:
-        """Cheapest of {least-loaded peer NIC, persistent store} by copy_time."""
+        """Cheapest of {least-loaded peer NIC, persistent store} by copy_time.
+
+        ``loc_cache`` (batch path) memoizes each object's sorted holder list
+        for the duration of one batch; per-candidate checks below stay live,
+        and any holder admitted *during* the batch is excluded anyway by the
+        in-flight check (its own copy has not landed), exactly as sequential
+        fetches would exclude it.
+        """
         best_peer: Optional[str] = None
         best_nic: Optional[BandwidthResource] = None
         if self.use_peers:
             # sorted: least-loaded ties break by name, not set-hash order,
             # so runs are reproducible across processes (paper: the index
             # maps are hash maps of *sorted* sets).
-            for e in sorted(self.index.locations(obj)):
+            if loc_cache is None:
+                candidates = sorted(self.index.locations(obj))
+            else:
+                candidates = loc_cache.get(obj)
+                if candidates is None:
+                    candidates = loc_cache[obj] = sorted(self.index.locations(obj))
+            for e in candidates:
                 if e == dest:
                     continue
                 peer = self.stores.get(e)

@@ -23,9 +23,11 @@ while moving the arithmetic into dense numpy state:
 Phase 1 then reduces to an argmax over score rows and phase 2 to a top-k
 over a score column.  ``notify_batch`` drains every free executor from a
 single window scan; repeated ``notify`` calls produce the same sequence (the
-golden reference semantics), so consumers that must interleave work between
-assignments (the serving router mutates tiers per assignment) keep calling
-``notify`` one at a time and still get the array-fast path.
+golden reference semantics).  Consumers that interleave state mutation
+between assignments keep calling ``notify`` one at a time and still get the
+array-fast path; the serving router's batch mode instead defers its tier
+promotions out of the decision path (``CacheAffinityRouter(batch_drain=
+True)``) so it can ride the single-scan drain.
 
 Bulk (re)scoring — ``rebuild_scores()`` — runs the one-shot matmul on the
 materialized bitmaps: numpy always; ``score_backend="pallas"`` routes it
@@ -399,12 +401,14 @@ class VectorizedDispatcher(DataAwareDispatcher):
         """Single-scan drain, decision-identical to looping ``notify()``.
 
         Valid only when nothing mutates dispatcher or index state between
-        the emulated calls (the DES ``_try_notify`` contract); the serving
-        router interleaves tier promotions per assignment, so it keeps the
-        one-at-a-time ``notify`` path.  ``stats.decisions`` stays exact;
+        the emulated calls — the DES ``_try_notify`` contract, and since the
+        router's batched drain (``CacheAffinityRouter(batch_drain=True)``)
+        defers tier promotions and miss admissions until after the scan,
+        the live serving path too.  ``stats.decisions`` stays exact;
         ``stats.delayed`` counts each delayed item once per scan instead of
         once per emulated call.
         """
+        self.stats.batch_drains += 1
         out: List[Tuple[str, Any]] = []
         if self.policy == "first-available":
             while self._queue and self._free and (limit is None or len(out) < limit):
@@ -442,18 +446,27 @@ class VectorizedDispatcher(DataAwareDispatcher):
         preferred holders), with the visit budget extended exactly as the
         restarts would have: an item is visitable while the count of
         delayed-in-place items ahead of it is below the window.
+
+        Items the policy delays in place are classified *vectorized* (no
+        free holder scores them, and for GCC the replication cap binds with
+        the tier floor satisfied) and never enter the python loop — under a
+        deep backlog of affinity-delayed requests (the serving saturation
+        regime) the loop body runs only for the <= F items that actually
+        produce assignments, plus the occasional lazy argmax repair.
         """
         free_names, free_rows = self._free_arrays()
         F = len(free_names)
         budget = min(len(self._queue), self.window + (F if batch else 0))
         keys = list(islice(self._queue, budget))
+        n = len(keys)
         rows = np.fromiter((self._item_row[k] for k in keys),
-                           dtype=np.intp, count=len(keys))
+                           dtype=np.intp, count=n)
         SwF = self._Sw[np.ix_(rows, free_rows)]           # (n, F)
         maxw = SwF.max(axis=1)
         argw = SwF.argmax(axis=1)
         anylive = self._Sb[rows].any(axis=1)
         gcc = self.policy == "good-cache-compute"
+        floor_on = False
         if gcc:
             idx = self._row_cols[rows]                     # (n, maxobj), -1 pad
             valid = idx >= 0
@@ -464,21 +477,40 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 worthwhile = np.where(
                     valid, self._colmax_w[safe] >= self.gcc_delay_tier_floor,
                     False).any(axis=1)
+        # Delay classification (exactly the loop body's fall-through path):
+        # no free holder scores the item, some live holder exists, and —
+        # under GCC — the replication cap binds while the floor says the
+        # wait is worthwhile.
+        no_free = (maxw <= 0.0) & anylive
+        if gcc:
+            delay_mask = no_free & (rep >= self.max_replicas)
+            if floor_on:
+                delay_mask &= worthwhile
+        else:
+            delay_mask = no_free
+        # delayed_ahead[i]: delayed-in-place items strictly before position i.
+        delayed_ahead = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(delay_mask, out=delayed_ahead[1:])
+        visit = np.nonzero(~delay_mask)[0]
         active = np.ones(F, dtype=bool)
+        n_active = F
         out: List[Tuple[str, Any]] = []
-        delayed = 0
-        name_to_fcol = {n: i for i, n in enumerate(free_names)}
+        extra_delayed = 0           # argmax-repaired items that became delayed
+        scan_end = n                # first position the emulated scan never saw
+        name_to_fcol = {nm: i for i, nm in enumerate(free_names)}
 
         def assign(i: int, name: str) -> None:
+            nonlocal n_active
             if batch:
                 self.stats.decisions += 1  # one emulated call per assignment
             out.append(self._assign(name, self._queue[keys[i]]))
             active[name_to_fcol[name]] = False
+            n_active -= 1
 
-        for i, key in enumerate(keys):
-            if delayed >= self.window or not active.any():
-                break
-            if limit is not None and len(out) >= limit:
+        for i in visit:
+            i = int(i)
+            if delayed_ahead[i] + extra_delayed >= self.window or n_active == 0:
+                scan_end = i
                 break
             # Lazily repair the row max if its argmax column was consumed.
             if not active[argw[i]]:
@@ -497,21 +529,26 @@ class VectorizedDispatcher(DataAwareDispatcher):
                         int(rows[i]), [free_names[t] for t in ties],
                         [int(free_rows[t]) for t in ties])
                 assign(i, name)
-                continue
-            if not anylive[i]:
+            elif not anylive[i]:
                 assign(i, next(iter(self._free)))
+            elif gcc and rep[i] < self.max_replicas:
+                # Preferred holder(s) busy (score consumed by the repair).
+                assign(i, next(iter(self._free)))
+            elif gcc and floor_on and not worthwhile[i]:
+                self.stats.tier_floor_bypasses += 1
+                assign(i, next(iter(self._free)))
+            else:
+                extra_delayed += 1
                 continue
-            # Preferred holder(s) busy.
-            if gcc:
-                if rep[i] < self.max_replicas:
-                    assign(i, next(iter(self._free)))
-                    continue
-                if floor_on and not worthwhile[i]:
-                    self.stats.tier_floor_bypasses += 1
-                    assign(i, next(iter(self._free)))
-                    continue
-            self.stats.delayed += 1
-            delayed += 1
+            if n_active == 0 or (limit is not None and len(out) >= limit):
+                # The emulated call returned at this assignment (limit), or
+                # the next emulated call returns at the no-free check before
+                # scanning anything: positions past it were never scanned
+                # (delayed stats stay reference-exact on both ends).
+                scan_end = i + 1
+                break
+        self.stats.delayed += min(
+            self.window, int(delayed_ahead[min(scan_end, n)]) + extra_delayed)
         return out
 
     # ------------------------------------------------------------- phase 2

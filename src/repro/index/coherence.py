@@ -47,6 +47,8 @@ class CoherenceStats:
     mutations: int = 0              # map mutations actually performed
     batches: int = 0                # per-shard batch applications
     coalesced: int = 0              # ops absorbed by last-writer-wins
+    widened: int = 0                # adapt() grew the batch window
+    shrunk: int = 0                 # adapt() cut the batch window
 
     @property
     def ops_per_batch(self) -> float:
@@ -84,10 +86,50 @@ class CoherenceBus:
         if self.batch_window_s > 0.0:
             # Quantize to the next heartbeat boundary: everything inside one
             # window rides the same batch.  Monotone in ``now`` (constant
-            # delay), so per-shard queues stay sorted by due time.
+            # delay), so per-shard queues stay sorted by due time.  An
+            # ``adapt()`` shrink can locally break the ordering for ops
+            # already queued under the wider window; those simply ride the
+            # batch their (stale) due time lands in — loose coherence.
             due = math.ceil(due / self.batch_window_s) * self.batch_window_s
         self._queues[shard_id].append((due, op, file, executor, tier))
         self.stats.enqueued += 1
+
+    def drain_shard(
+        self, shard_id: int, now: float
+    ) -> Tuple[Dict[Tuple[str, str], Tuple[str, Optional[str]]], int]:
+        """Pop + coalesce one shard's ops due at or before ``now``.
+
+        Returns ``(delta, raw_op_count)`` — the coalesced ``{(file,
+        executor): (op, tier)}`` batch and how many queued ops it absorbs
+        (``(… , 0)`` when nothing is due).  Factored out of ``apply`` so a
+        fanned-out caller (``ShardedIndex`` with a scan pool) can drain the
+        disjoint per-shard queues itself and apply the deltas in parallel.
+        """
+        q = self._queues[shard_id]
+        delta: Dict[Tuple[str, str], Tuple[str, Optional[str]]] = {}
+        batch_ops = 0
+        while q and q[0][0] <= now:
+            _, op, f, e, tier = q.popleft()
+            key = (f, e)
+            if key in delta:
+                self.stats.coalesced += 1
+                # Coalescing must leave the same net state sequential
+                # application would: a tier-less add over a prior add
+                # keeps the earlier tier, while an add over a prior
+                # remove becomes "readd" (remove-first), so stale tier
+                # info cannot survive the remove it should have died in.
+                prev_op, prev_tier = delta[key]
+                if op == "add":
+                    if prev_op == "remove":
+                        op = "readd"
+                    else:                       # prior add / readd
+                        if tier is None:
+                            tier = prev_tier
+                        if prev_op == "readd":
+                            op = "readd"
+            delta[key] = (op, tier)
+            batch_ops += 1
+        return delta, batch_ops
 
     def apply(
         self,
@@ -101,34 +143,53 @@ class CoherenceBus:
         Returns the raw op count drained (the flat index's return value).
         """
         drained = 0
-        for shard_id, q in enumerate(self._queues):
-            if not q or q[0][0] > now:
+        for shard_id in range(len(self._queues)):
+            delta, batch_ops = self.drain_shard(shard_id, now)
+            if not batch_ops:
                 continue
-            delta: Dict[Tuple[str, str], Tuple[str, Optional[str]]] = {}
-            batch_ops = 0
-            while q and q[0][0] <= now:
-                _, op, f, e, tier = q.popleft()
-                key = (f, e)
-                if key in delta:
-                    self.stats.coalesced += 1
-                    # Coalescing must leave the same net state sequential
-                    # application would: a tier-less add over a prior add
-                    # keeps the earlier tier, while an add over a prior
-                    # remove becomes "readd" (remove-first), so stale tier
-                    # info cannot survive the remove it should have died in.
-                    prev_op, prev_tier = delta[key]
-                    if op == "add":
-                        if prev_op == "remove":
-                            op = "readd"
-                        else:                       # prior add / readd
-                            if tier is None:
-                                tier = prev_tier
-                            if prev_op == "readd":
-                                op = "readd"
-                delta[key] = (op, tier)
-                batch_ops += 1
             self.stats.mutations += apply_fn(shard_id, delta)
             self.stats.applied += batch_ops
             self.stats.batches += 1
             drained += batch_ops
         return drained
+
+    # -- window auto-tuning ---------------------------------------------------
+    def adapt(
+        self,
+        stale_claim_rate: float,
+        *,
+        target_rate: float = 0.02,
+        min_window_s: float = 0.0,
+        max_window_s: float = 10.0,
+        gain: float = 2.0,
+        seed_window_s: float = 0.1,
+    ) -> float:
+        """Close the coherence auto-tuning loop from a measured signal.
+
+        ``stale_claim_rate`` is the fraction of recent dispatches whose
+        index view overstated locality (the DES's ``stale_claims`` counter,
+        or any equivalent observation).  Above ``target_rate`` the heartbeat
+        window shrinks by ``gain`` (fresher index, less amortization); at or
+        below half the target it widens by ``gain`` up to ``max_window_s``
+        (a dead band between the two avoids oscillation).  Widening from a
+        zero window starts at ``seed_window_s``.  Ops already enqueued keep
+        their quantized due times — adaptation applies to updates enqueued
+        from now on, so per-shard queues stay drainable in order.  Returns
+        the new window.
+        """
+        w = self.batch_window_s
+        if stale_claim_rate > target_rate:
+            new = w / gain
+            if new < max(min_window_s, 1e-6):
+                new = min_window_s
+            if new != w:
+                self.stats.shrunk += 1
+        elif stale_claim_rate <= target_rate / 2.0:
+            new = min(max_window_s, w * gain if w > 0.0
+                      else max(min_window_s, seed_window_s))
+            if new != w:
+                self.stats.widened += 1
+        else:
+            return w
+        self.batch_window_s = new
+        return new

@@ -36,6 +36,13 @@ def main() -> None:
                     choices=("reference", "vectorized"),
                     help="dispatch engine: pure-Python reference or the "
                          "array-backed vectorized plane (same decisions)")
+    ap.add_argument("--batch-drain", action="store_true",
+                    help="serving batch plane: decide each submitted burst "
+                         "in one single-scan notify_batch drain (deferred "
+                         "tier promotions, batched transfer admission)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="requests submitted per burst before step() when "
+                         "--batch-drain is on (1 = per-request, the loop)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--cache-cap", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
@@ -49,15 +56,18 @@ def main() -> None:
                           max_sessions=args.max_sessions,
                           host_cache_sessions=args.host_cache_sessions,
                           eviction=args.eviction,
-                          dispatcher_impl=args.dispatcher)
+                          dispatcher_impl=args.dispatcher,
+                          batch_drain=args.batch_drain)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
     sids = list(prompts)
+    burst = max(1, args.batch_size) if args.batch_drain else 1
     for i in range(args.requests):
         sid = sids[int(rng.integers(0, len(sids)))]
         srv.submit(sid, prompts[sid], max_new_tokens=args.new_tokens)
-        srv.step()
+        if (i + 1) % burst == 0 or i + 1 == args.requests:
+            srv.step()
     s, r = srv.stats, srv.router.stats
     print(f"served={s.served} prefix_hit={s.hit_rate:.0%} prefills={s.prefills} "
           f"swap_ins={s.swap_ins} decode_steps={s.decode_steps} "

@@ -258,9 +258,17 @@ class CacheAffinityRouter:
         warmstart_hbm_heat: Optional[float] = None,
         # ---- dispatch engine: "reference" (pure-Python golden semantics)
         # or "vectorized" (repro.dispatch_vec — same decisions, array-backed
-        # scoring; the router keeps per-assignment notify calls because each
-        # assignment promotes tiers before the next decision) ----
+        # scoring).  With ``batch_drain=False`` the router loops per-decision
+        # ``notify()``; with ``batch_drain=True`` it drains every free
+        # replica from one ``notify_batch()`` scan against a frozen presence
+        # snapshot (tier promotions deferred to a per-batch delta, missed
+        # objects admitted through one batched transfer resolution) ----
         dispatcher_impl: str = "reference",
+        batch_drain: bool = False,
+        # Decision-parity escape hatch: record "request_id->replica" for
+        # every started request so seeded streams can assert batched ≡
+        # looped assignment sequences (bench_serve_batch gates on it).
+        log_assignments: bool = False,
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
@@ -306,6 +314,8 @@ class CacheAffinityRouter:
         self.warmstart_admit_tier = warmstart_admit_tier
         self.warmstart_hbm_heat = warmstart_hbm_heat
         self.warmstart = WarmStartStats()
+        self.batch_drain = batch_drain
+        self.assignment_log: Optional[List[str]] = [] if log_assignments else None
         self._requests: Dict[int, RoutedRequest] = {}   # in flight, by id
         self._idle_since: Dict[str, Optional[float]] = {}
         self._pending_provisions: List[ProvisionRequest] = []
@@ -355,8 +365,10 @@ class CacheAffinityRouter:
         return list(self.stores)
 
     # --------------------------------------------------------------- submit
-    def submit(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
-        """Enqueue a request; returns any assignments routable right away."""
+    def enqueue(self, request: RoutedRequest, now: Optional[float] = None) -> None:
+        """Queue a request without running the drain — the batch-drain entry
+        point: callers enqueue a burst, then ``tick()`` once so the whole
+        burst is decided in a single window scan."""
         now = time.monotonic() if now is None else now
         if request.submit_time_s == 0.0:
             request.submit_time_s = now
@@ -366,6 +378,11 @@ class CacheAffinityRouter:
             req = self.drp.on_queue_change(now, self.dispatcher.queue_length())
             if req is not None:
                 self._pending_provisions.append(req)
+
+    def submit(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
+        """Enqueue a request; returns any assignments routable right away."""
+        now = time.monotonic() if now is None else now
+        self.enqueue(request, now)
         return self.tick(now)
 
     def queue_length(self) -> int:
@@ -382,6 +399,8 @@ class CacheAffinityRouter:
         return self._drain_notify(now)
 
     def _drain_notify(self, now: float) -> List[Assignment]:
+        if self.batch_drain:
+            return self._drain_batched(now)
         out: List[Assignment] = []
         while True:
             pair = self.dispatcher.notify()
@@ -390,7 +409,137 @@ class CacheAffinityRouter:
             replica, request = pair
             out.append(self._start(replica, [request], now))
 
-    def _start(self, replica: str, requests: List[RoutedRequest], now: float) -> Assignment:
+    def _drain_batched(self, now: float) -> List[Assignment]:
+        """Single-scan batched drain (the serving batch plane).
+
+        ``notify_batch`` decides every assignable (replica, request) pair
+        from one window scan over a frozen presence snapshot — nothing
+        mutates dispatcher or index state between the emulated per-decision
+        calls, which is exactly the precondition the vectorized engine's
+        batched drain documents.  The batch is then *executed*: hits are
+        accounted with tier promotions deferred into each store's delta log,
+        misses are collected and admitted through one batched transfer
+        resolution, and the promotion delta is applied once at the end.  The
+        outer loop re-scans after applying (mirroring the looped path's
+        terminal failed ``notify()``), so anything the batch's effects made
+        assignable still goes out this tick.
+        """
+        out: List[Assignment] = []
+        while True:
+            pairs = self.dispatcher.notify_batch()
+            if not pairs:
+                return out
+            for store in self.stores.values():
+                store.tiers.defer_promotions()
+            try:
+                sink: List[Tuple] = []
+                for replica, request in pairs:
+                    out.append(self._start(replica, [request], now,
+                                           miss_sink=sink))
+                self._replay_batch(pairs, sink, now)
+            finally:
+                for store in self.stores.values():
+                    store.tiers.apply_promotions()
+
+    def _replay_batch(self, pairs: List[Tuple[str, RoutedRequest]],
+                      sink: List[Tuple], now: float) -> None:
+        """Execute a drained batch's store mutations in looped order.
+
+        Each assignment's entries replay in per-request object order —
+        promotion here, admission there — so cache recency (and therefore
+        every future eviction victim) evolves exactly as the looped
+        per-decision path's would.  Source resolution happens *at the
+        replay position* through one shared batch resolver (one drain,
+        candidate sorts amortized), so an admission earlier in the batch
+        that evicted a peer's copy is seen exactly as sequential fetches
+        would see it.  A "hit" entry whose object an earlier admission's
+        eviction cascade dropped off the stack is converted back to the
+        miss the looped path would have taken (its recorded tier/cost
+        accounting is reversed exactly).  first-available records nothing
+        in the sink, so its replay is a no-op by construction.
+        """
+        resolve = None
+        by_replica: Dict[str, List[Tuple]] = {}
+        for replica, obj, kind, tier, amount in sink:
+            by_replica.setdefault(replica, []).append((obj, kind, tier, amount))
+
+        def admit_miss(request: RoutedRequest, store: ReplicaStore,
+                       replica: str, obj: str, size: float) -> None:
+            nonlocal resolve
+            if resolve is None:
+                resolve = self.engine.batch_resolver(now)
+            tr = resolve(obj, size, replica, admit=False)
+            request.sources[obj] = tr.source
+            cost = tr.remaining_s(now)
+            request.restore_cost_s += cost
+            self.stats.restore_time_s += cost
+            store.admit(obj, tr.size_bytes)
+
+        for replica, request in pairs:
+            store = self.stores[replica]
+            for obj, kind, tier, amount in by_replica.get(replica, ()):
+                if kind == "hit":
+                    if obj in store.tiers:
+                        store.tiers.apply_promotion(obj)
+                        continue
+                    # Cascade-dropped before its replay position: reverse
+                    # the hit accounting and take the looped path's miss.
+                    request.hits -= 1
+                    self.stats.object_hits -= 1
+                    self.stats.hits_by_tier[tier] -= 1
+                    if self.stats.hits_by_tier[tier] == 0:
+                        del self.stats.hits_by_tier[tier]   # as looped never
+                        #                                     created the key
+                    request.restore_cost_s -= amount
+                    self.stats.restore_time_s -= amount
+                    request.misses += 1
+                    self.stats.object_misses += 1
+                    admit_miss(request, store, replica, obj,
+                               self.object_size_fn(obj))
+                elif kind == "miss":        # counted at decision time
+                    admit_miss(request, store, replica, obj, amount)
+                else:                       # dupmiss: second occurrence of a
+                    # just-admitted object — a top-tier hit paying the
+                    # transfer's remaining time (unless a cascade dropped
+                    # it again in between, then it is a fresh miss).
+                    found = store.access(obj)
+                    if found is None:
+                        request.hits -= 1
+                        self.stats.object_hits -= 1
+                        request.misses += 1
+                        self.stats.object_misses += 1
+                        admit_miss(request, store, replica, obj, amount)
+                        continue
+                    self.stats.hits_by_tier[found] = \
+                        self.stats.hits_by_tier.get(found, 0) + 1
+                    request.sources[obj] = found
+                    cost = self.engine.remaining_s(replica, obj, now)
+                    request.restore_cost_s += cost
+                    self.stats.restore_time_s += cost
+        # Prefetch warms run after the replay (the looped path warms at the
+        # end of each _start, i.e. after that request's own admissions) —
+        # per-store mutation order is preserved.  In batch mode the warm
+        # targets the post-batch queue: the whole burst was already
+        # decided, so speculation goes to work actually still waiting.
+        if self.prefetcher is not None:
+            for replica, _request in pairs:
+                if self.dispatcher.queue_length() == 0:
+                    break
+                for item in self.dispatcher.peek(self.prefetch_depth):
+                    self.prefetcher.warm(
+                        replica, self.dispatcher.objects_of(item), now)
+
+    def _start(self, replica: str, requests: List[RoutedRequest], now: float,
+               miss_sink: Optional[List[Tuple]] = None,
+               ) -> Assignment:
+        """Start ``requests`` on ``replica`` (hit/miss accounting + data
+        movement).  With ``miss_sink`` (the batched drain), every cached-path
+        object position appends a replay entry ``(replica, obj, kind, tier,
+        amount)`` — kind "hit" (tier found, cost charged), "miss" (amount =
+        size), or "dupmiss" (same object's second occurrence riding the
+        first's admission) — and the store-mutating half (admissions, source
+        resolution, promotion application) is deferred to the caller's
+        ordered replay."""
         self.dispatcher.set_state(replica, ExecutorState.BUSY)
         store = self.stores[replica]
         use_cache = self.dispatcher.provides_location_info()
@@ -398,6 +547,9 @@ class CacheAffinityRouter:
             request.replica = replica
             request.dispatch_time_s = now
             self.stats.routed += 1
+            if self.assignment_log is not None:
+                self.assignment_log.append(f"{request.request_id}->{replica}")
+            sunk: set = set()       # objects this request already miss-sank
             for obj in request.objects:
                 # Access-heat feed: the warm-start plane ranks clone
                 # candidates by these per-object counters (decayed toward
@@ -410,15 +562,39 @@ class CacheAffinityRouter:
                     self.stats.object_misses += 1
                     self.stats.bytes_from_persistent += self.object_size_fn(obj)
                     continue
+                # Intent logged by a *previous* access of this request (the
+                # epoch holds at most this one request's intents): checked
+                # before access(), which may log one for obj itself.
+                pre_intent = miss_sink is not None and store.tiers.has_intent(obj)
                 tier = store.access(obj)
                 if tier is not None:
+                    if pre_intent and tier != store.top_tier:
+                        # Second hit on an object whose first hit (earlier
+                        # in this request) logged a promote intent: the
+                        # looped path already relocated it, so this access
+                        # would have found it at the top tier for free.
+                        tier = store.top_tier
                     request.hits += 1
                     self.stats.object_hits += 1
                     self.stats.hits_by_tier[tier] = \
                         self.stats.hits_by_tier.get(tier, 0) + 1
                     request.sources[obj] = tier
-                    request.restore_cost_s += self._hit_cost(
-                        store, replica, obj, tier, now)
+                    cost = self._hit_cost(store, replica, obj, tier, now)
+                    request.restore_cost_s += cost
+                    if miss_sink is not None and self.engine is not None:
+                        # flat mode (no engine) admits inline, so its hits
+                        # can never be invalidated by a deferred admission
+                        # — only the tiered path records hit entries.
+                        miss_sink.append((replica, obj, "hit", tier, cost))
+                elif miss_sink is not None and obj in sunk:
+                    # Batched drain, same object twice in one request: the
+                    # looped path would hit the copy its first miss just
+                    # admitted — count the hit now; tier/source/cost are
+                    # filled by the replay once the admission lands.
+                    request.hits += 1
+                    self.stats.object_hits += 1
+                    size = self.object_size_fn(obj)
+                    miss_sink.append((replica, obj, "dupmiss", None, size))
                 else:
                     # miss: diffuse the object in — cheapest of peer NIC vs
                     # persistent store (tiered mode), or PR-1's zero-cost
@@ -426,7 +602,14 @@ class CacheAffinityRouter:
                     request.misses += 1
                     self.stats.object_misses += 1
                     size = self.object_size_fn(obj)
-                    if self.engine is not None:
+                    if self.engine is not None and miss_sink is not None:
+                        # batched drain: defer to the one-pass union
+                        # resolution + ordered replay in _drain_batched
+                        # (sources/cost filled after every decision of the
+                        # batch is made).
+                        sunk.add(obj)
+                        miss_sink.append((replica, obj, "miss", None, size))
+                    elif self.engine is not None:
                         tr = self.engine.fetch(obj, size, replica, now)
                         request.sources[obj] = tr.source
                         request.restore_cost_s += tr.remaining_s(now)
@@ -437,7 +620,11 @@ class CacheAffinityRouter:
             self.stats.restore_time_s += request.restore_cost_s
         # Warm this replica for the next queued work while it computes: the
         # transfer overlaps the batch it was just assigned (prefetch plane).
-        if self.prefetcher is not None and self.dispatcher.queue_length() > 0:
+        # In the batched drain (miss_sink set) the warm is deferred to after
+        # the batch replay so speculative admissions cannot interleave ahead
+        # of the batch's own deferred store mutations.
+        if self.prefetcher is not None and miss_sink is None \
+                and self.dispatcher.queue_length() > 0:
             for item in self.dispatcher.peek(self.prefetch_depth):
                 self.prefetcher.warm(replica, self.dispatcher.objects_of(item), now)
         return Assignment(replica, requests)
@@ -485,9 +672,8 @@ class CacheAffinityRouter:
         return self.stats.bytes_from_persistent
 
     # ------------------------------------------------------------- complete
-    def complete(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
-        """Replica finished a request: free it and run the pickup path."""
-        now = time.monotonic() if now is None else now
+    def _finish(self, request: RoutedRequest, now: float) -> Optional[str]:
+        """Completion bookkeeping; returns the freed replica (if still ours)."""
         request.finish_time_s = now
         self._requests.pop(request.request_id, None)
         self.stats.completed += 1
@@ -497,14 +683,53 @@ class CacheAffinityRouter:
         if replica in self.stores:
             self.dispatcher.set_state(replica, ExecutorState.FREE)
             self._idle_since[replica] = now
-        assignments = self.tick(now)
+            return replica
+        return None
+
+    def _pickup(self, replica: str, now: float) -> Optional[Assignment]:
+        """Falkon pickup: a freed replica asks for window-scored work."""
         if replica in self.stores and self.dispatcher.queue_length() > 0 \
                 and self.dispatcher.executor_state(replica) == ExecutorState.FREE:
-            # Falkon pickup: the freed replica asks for window-scored work.
             self.dispatcher.set_state(replica, ExecutorState.PENDING)
             picked = self.dispatcher.pick_items(replica, m=self.pickup_batch)
             if picked:
-                assignments.append(self._start(replica, picked, now))
+                return self._start(replica, picked, now)
+        return None
+
+    def complete(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
+        """Replica finished a request: free it and run the pickup path."""
+        now = time.monotonic() if now is None else now
+        replica = self._finish(request, now)
+        assignments = self.tick(now)
+        if replica is not None:
+            picked = self._pickup(replica, now)
+            if picked is not None:
+                assignments.append(picked)
+        return assignments
+
+    def complete_batch(self, requests: Sequence[RoutedRequest],
+                       now: Optional[float] = None) -> List[Assignment]:
+        """Batched completion: free a whole wave of finished replicas, then
+        run *one* drain and one pickup pass.
+
+        The per-request ``complete`` runs a full phase-1 drain per
+        completion — at serving rates that is the dominant scheduling cost
+        (N completions = N window scans).  Completing the wave together
+        amortizes it to a single drain (single-scan with ``batch_drain``),
+        then offers phase-2 pickups to the replicas phase 1 left free, in
+        completion order.  Decisions match per-request completion whenever
+        the drain's decisions are insensitive to the completion
+        interleaving (the batch-plane contract; bench_serve_batch asserts
+        it on its seeded streams).
+        """
+        now = time.monotonic() if now is None else now
+        freed = [r for r in (self._finish(req, now) for req in requests)
+                 if r is not None]
+        assignments = self.tick(now)
+        for replica in freed:
+            picked = self._pickup(replica, now)
+            if picked is not None:
+                assignments.append(picked)
         return assignments
 
     # ----------------------------------------------------------- elasticity

@@ -106,6 +106,12 @@ class DiffusionServer:
         host_cache_sessions: int = 0,
         eviction: str = "lru",
         dispatcher_impl: str = "reference",
+        # batch_drain=True runs the serving batch plane: submit() only
+        # enqueues, and step() decides the whole accumulated burst in one
+        # notify_batch() window scan with tier promotions applied as a
+        # per-batch delta and misses admitted through one batched transfer
+        # resolution.  Best paired with dispatcher_impl="vectorized".
+        batch_drain: bool = False,
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
@@ -144,7 +150,9 @@ class DiffusionServer:
             stop_replica=self._drop_replica,
             on_object_evicted=self._on_session_evicted,
             dispatcher_impl=dispatcher_impl,
+            batch_drain=batch_drain,
         )
+        self.batch_drain = batch_drain
         self.replicas: Dict[str, Replica] = {}
         for _ in range(min_replicas):
             self._build_replica(self.router.add_replica())
@@ -184,10 +192,16 @@ class DiffusionServer:
         self._req_id += 1
         routed = RoutedRequest(req.request_id, (session_object(session_id),),
                                payload=req, submit_time_s=now)
-        # The router runs phase 1 (and DRP scaling) immediately; execution
-        # happens in step().  Requests whose policy delays dispatch stay in
-        # the wait queue until a replica frees and picks them (phase 2).
-        self._ready.extend(self.router.submit(routed, now=now))
+        if self.batch_drain:
+            # Batch plane: only enqueue — step() drains the accumulated
+            # burst through one single-scan notify_batch per tick.
+            self.router.enqueue(routed, now=now)
+        else:
+            # The router runs phase 1 (and DRP scaling) immediately;
+            # execution happens in step().  Requests whose policy delays
+            # dispatch stay in the wait queue until a replica frees and
+            # picks them (phase 2).
+            self._ready.extend(self.router.submit(routed, now=now))
         return req
 
     # ------------------------------------------------------------- serve
@@ -258,6 +272,21 @@ class DiffusionServer:
                     break  # policy refuses the remainder (all holders lost)
                 continue
             idle_rounds = 0
+            if self.batch_drain:
+                # Batch plane: run the whole ready wave, then hand the
+                # finished requests back as one batched completion — a
+                # single drain (and pickup pass) instead of one per request.
+                wave, self._ready = self._ready, []
+                finished: List[RoutedRequest] = []
+                for assignment in wave:
+                    replica = self.replicas[assignment.replica]
+                    for routed in assignment.requests:
+                        self._run_request(replica, routed)
+                        served += 1
+                        finished.append(routed)
+                self._ready.extend(
+                    self.router.complete_batch(finished, now=time.time()))
+                continue
             assignment = self._ready.pop(0)
             replica = self.replicas[assignment.replica]
             for routed in assignment.requests:

@@ -165,6 +165,28 @@ def test_server_prefix_affinity_beats_first_available():
     assert aff.hit_rate > 0.5
 
 
+def test_server_batch_drain_serves_bursts_with_affinity():
+    """Serving batch plane end-to-end: with ``batch_drain=True`` submits only
+    enqueue, step() decides the burst in one single-scan drain and completes
+    it as one batched wave — same affinity outcome as the per-request loop."""
+    cfg = get_arch("internlm2-1.8b").reduced()
+    rng = np.random.default_rng(0)
+    prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(12,))
+               for i in range(6)}
+    srv = DiffusionServer(cfg, policy="good-cache-compute", max_replicas=3,
+                          cache_cap=48, seed=1, batch_drain=True,
+                          dispatcher_impl="vectorized")
+    srv.scale_to(3)
+    for _ in range(4):
+        for sid, p in prompts.items():      # whole burst enqueued...
+            srv.submit(sid, p, max_new_tokens=2)
+        assert srv.router.queue_length() > 0     # ...nothing dispatched yet
+        srv.step()                               # one batched drain serves it
+    assert srv.stats.served == 24
+    assert srv.stats.hit_rate > 0.5
+    assert srv.router.dispatcher.stats.batch_drains > 0
+
+
 def test_server_host_dram_tier_swaps_in_without_prefill():
     """Tiered serving: an HBM-evicted session demotes to the host-DRAM tier
     and a later request swaps it back in instead of replaying the prefill."""

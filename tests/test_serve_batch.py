@@ -1,0 +1,518 @@
+"""Serving batch plane: batched-drain parity, deferred promotions, batched
+admission, parallel index fan-out, and coherence auto-tuning.
+
+The headline contract (the decision-parity escape hatch): on seeded Zipf
+streams, ``CacheAffinityRouter(batch_drain=True)`` must produce the
+bit-identical assignment log AND final per-replica tier contents as the
+per-request ``notify()`` loop — phase-1 decisions are made against a frozen
+presence snapshot, tier promotions ride a per-batch delta log, and misses
+are admitted through one batched transfer resolution, yet nothing
+observable may change.  The property test drives random promotion/eviction
+interleavings through deferred epochs at the ``TieredStore`` level.
+"""
+
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.index import CentralizedIndex, ShardedIndex
+from repro.core.store import BandwidthResource
+from repro.diffusion.tiers import TieredStore, TierSpec
+from repro.diffusion.transfer import TransferEngine
+from repro.index.coherence import CoherenceBus
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+BLOCK = 2.0 * 1024**2
+
+
+# ------------------------------------------------------------ router parity
+def zipf_sessions(n, sessions, alpha, seed):
+    rng = random.Random(seed)
+    weights = [1.0 / (s + 1) ** alpha for s in range(sessions)]
+    return [rng.choices(range(sessions), weights=weights, k=1)[0]
+            for _ in range(n)]
+
+
+def build_router(policy, batch_drain, impl, replicas=8, hbm=2, dram=16,
+                 blocks=1):
+    router = CacheAffinityRouter(
+        policy=policy, window=128, max_object_replicas=2 * replicas,
+        object_size_fn=lambda obj: BLOCK,
+        tier_specs=[TierSpec("hbm", hbm * BLOCK),
+                    TierSpec("dram", dram * BLOCK, 64e9)],
+        persistent_bw_bytes_per_s=4e9, nic_bw_bytes_per_s=16e9,
+        batch_drain=batch_drain, dispatcher_impl=impl, log_assignments=True)
+    for _ in range(replicas):
+        router.add_replica()
+    return router
+
+
+def drive(router, sids, batch, blocks=1, decode_s=0.004):
+    """Round-based pump: complete the previous wave, enqueue, drain once."""
+    t = 1000.0
+    served, rid, i = 0, 0, 0
+    wave, stall = [], 0
+    while i < len(sids) or router.queue_length() > 0 or wave:
+        before = served
+        finished = [rr for a in wave for rr in a.requests]
+        served += len(finished)
+        nxt = list(router.complete_batch(finished, now=t)) if finished else []
+        for sid in sids[i:i + batch]:
+            objs = tuple(f"kv:s{sid}:b{b}" for b in range(blocks))
+            router.enqueue(RoutedRequest(rid, objs, submit_time_s=t), now=t)
+            rid += 1
+        i = min(i + batch, len(sids))
+        nxt.extend(router.tick(t))
+        wave = nxt
+        t += decode_s
+        stall = stall + 1 if served == before and not wave else 0
+        if stall > 3:
+            break
+    return served
+
+
+def contents(router):
+    return {name: store.tiers.contents()
+            for name, store in router.stores.items()}
+
+
+@pytest.mark.parametrize("policy", ["max-cache-hit", "good-cache-compute"])
+def test_batched_drain_parity_on_seeded_zipf(policy):
+    """Batched ≡ looped: identical assignment logs, tier contents, stats."""
+    results = {}
+    for batch_drain, impl in ((False, "reference"), (False, "vectorized"),
+                              (True, "vectorized")):
+        r = build_router(policy, batch_drain, impl)
+        drive(r, list(range(24)), 1)                    # warm every session
+        served = drive(r, zipf_sessions(400, 24, 1.0, 3), 16)
+        results[(batch_drain, impl)] = (r, served)
+    ref, _ = results[(False, "reference")]
+    for key, (r, served) in results.items():
+        assert r.assignment_log == ref.assignment_log, key
+        assert contents(r) == contents(ref), key
+        assert served == results[(False, "reference")][1]
+        assert r.stats.object_hits == ref.stats.object_hits
+        assert r.stats.object_misses == ref.stats.object_misses
+    batched, _ = results[(True, "vectorized")]
+    assert batched.dispatcher.stats.batch_drains > 0
+    # promotions actually exercised the deferred path (tight HBM tier)
+    assert sum(s.tiers.promotions for s in batched.stores.values()) > 0
+
+
+def test_batched_drain_flat_store_parity():
+    """Flat (single-tier) mode: batch drain admits inline, still parity."""
+    logs = []
+    for batch_drain in (False, True):
+        r = CacheAffinityRouter(
+            policy="max-compute-util", window=64,
+            object_size_fn=lambda obj: 1.0,
+            batch_drain=batch_drain, log_assignments=True)
+        for _ in range(4):
+            r.add_replica()
+        drive(r, zipf_sessions(120, 12, 1.0, 5), 8)
+        logs.append((r.assignment_log, contents(r)))
+    assert logs[0] == logs[1]
+
+
+def test_batched_drain_first_available_no_location_info():
+    """first-available ships no location info: the batched replay must be a
+    structural no-op (regression: it used to KeyError on the empty
+    transfers map)."""
+    stats = []
+    for batch_drain in (False, True):
+        r = CacheAffinityRouter(
+            policy="first-available", batch_drain=batch_drain,
+            object_size_fn=lambda obj: 1.0,
+            tier_specs=[TierSpec("hbm", 8.0)], log_assignments=True)
+        r.add_replica()
+        r.add_replica()
+        for i in range(4):
+            r.enqueue(RoutedRequest(i, ("obj-a", "obj-b")), now=float(i))
+            r.tick(float(i))
+        stats.append((r.assignment_log, r.stats.object_misses,
+                      r.stats.bytes_from_persistent))
+    assert stats[0] == stats[1]
+
+
+def test_batched_drain_duplicate_object_matches_looped():
+    """A request naming the same object twice: the looped path hits the copy
+    its first miss admitted; the batched replay must account identically."""
+    results = []
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        r = build_router("max-compute-util", batch_drain, impl, replicas=1)
+        r.enqueue(RoutedRequest(0, ("a", "a")), now=0.0)
+        out = r.tick(0.0)
+        req = out[0].requests[0]
+        results.append((req.hits, req.misses, dict(req.sources),
+                        round(req.restore_cost_s, 9), r.stats.object_hits,
+                        r.stats.object_misses, dict(r.stats.hits_by_tier),
+                        round(r.stats.restore_time_s, 9)))
+    assert results[0] == results[1]
+    assert results[0][0] == 1 and results[0][1] == 1   # one hit, one miss
+
+
+def test_batched_drain_prefetch_warm_ordering():
+    """Prefetch warms must not interleave ahead of the batch's deferred
+    admissions (regression: speculative warm admissions used to run inside
+    _start, before the replay, inverting per-store mutation order)."""
+    results = []
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        r = CacheAffinityRouter(
+            policy="good-cache-compute", window=64, max_object_replicas=8,
+            object_size_fn=lambda obj: BLOCK,
+            tier_specs=[TierSpec("hbm", 2 * BLOCK)],
+            persistent_bw_bytes_per_s=4e9, nic_bw_bytes_per_s=16e9,
+            prefetch_depth=2, batch_drain=batch_drain,
+            dispatcher_impl=impl, log_assignments=True)
+        r.add_replica()
+        req = r.submit(RoutedRequest(0, ("V", "W")), now=0.0)[0].requests[0]
+        r.complete(req, now=0.01)            # replica0 warm with (V, W)
+        r.enqueue(RoutedRequest(1, ("W", "X")), now=1.0)
+        r.enqueue(RoutedRequest(2, ("Y", "Z")), now=1.0)
+        r.tick(1.0)
+        results.append((r.assignment_log, contents(r)))
+    assert results[0] == results[1]
+
+
+def test_batch_resolver_sees_mid_batch_evictions():
+    """Source resolution happens at the replay position: a peer whose only
+    copy an earlier admission in the same batch evicted must not be chosen
+    (regression: the pre-pass resolved every source up front)."""
+    from repro.core.provisioner import DynamicResourceProvisioner  # noqa: F401
+    results = []
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        r = CacheAffinityRouter(
+            policy="max-compute-util", window=64,
+            object_size_fn=lambda obj: BLOCK,
+            tier_specs=[TierSpec("hbm", 2 * BLOCK)],
+            persistent_bw_bytes_per_s=4e9, nic_bw_bytes_per_s=16e9,
+            batch_drain=batch_drain, dispatcher_impl=impl,
+            log_assignments=True)
+        r.add_replica()     # replica0: will hold (V, W)
+        r.add_replica()     # replica1: will miss V
+        req = r.submit(RoutedRequest(0, ("V", "W")), now=0.0)[0].requests[0]
+        r.complete(req, now=0.01)
+        # one burst: (W, X) -> replica0 (X's admission evicts V there),
+        # (V,) -> replica1 (V's only peer copy is gone by its position)
+        r.enqueue(RoutedRequest(1, ("W", "X")), now=1.0)
+        r.enqueue(RoutedRequest(2, ("V",)), now=1.0)
+        out = r.tick(1.0)
+        srcs = {rr.request_id: dict(rr.sources)
+                for a in out for rr in a.requests}
+        results.append((r.assignment_log, srcs,
+                        r.engine.stats.peer_fetches,
+                        round(r.engine.stats.bytes_from_peers, 3),
+                        contents(r)))
+    assert results[0] == results[1]
+
+
+def _account_snapshot(r, rr):
+    return (rr.hits, rr.misses, dict(rr.sources), round(rr.restore_cost_s, 9),
+            r.stats.object_hits, r.stats.object_misses,
+            dict(r.stats.hits_by_tier), round(r.stats.restore_time_s, 9),
+            contents(r))
+
+
+def test_batched_drain_cascade_dropped_hit_converts_to_miss():
+    """A frozen-layout hit whose object an earlier admission's eviction
+    cascade drops before its replay position must be converted back to the
+    miss the looped path would have taken (regression)."""
+    results = []
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        r = CacheAffinityRouter(
+            policy="max-compute-util", window=64,
+            object_size_fn=lambda obj: BLOCK,
+            tier_specs=[TierSpec("hbm", 1 * BLOCK)],
+            persistent_bw_bytes_per_s=4e9, nic_bw_bytes_per_s=16e9,
+            batch_drain=batch_drain, dispatcher_impl=impl,
+            log_assignments=True)
+        r.add_replica()
+        req = r.submit(RoutedRequest(0, ("Y",)), now=0.0)[0].requests[0]
+        r.complete(req, now=0.01)            # store = {Y}, capacity 1
+        r.enqueue(RoutedRequest(1, ("X", "Y")), now=1.0)
+        rr = r.tick(1.0)[0].requests[0]      # X's admission drops Y first
+        results.append(_account_snapshot(r, rr))
+    assert results[0] == results[1]
+    assert results[0][0] == 0 and results[0][1] == 2   # both ended as misses
+
+
+def test_batched_drain_duplicate_lower_tier_hit_promoted_once():
+    """Same object twice, resident in a lower tier: the looped path promotes
+    after the first hit, so the second is a free top-tier hit — the batched
+    accounting must not charge the swap twice (regression)."""
+    results = []
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        r = build_router("max-compute-util", batch_drain, impl, replicas=1,
+                         hbm=2, dram=8)
+        req = r.submit(RoutedRequest(0, ("X",)), now=0.0)[0].requests[0]
+        r.complete(req, now=0.01)
+        req = r.submit(RoutedRequest(1, ("A", "B")), now=0.1)[0].requests[0]
+        r.complete(req, now=0.11)            # X demoted to dram
+        r.enqueue(RoutedRequest(2, ("X", "X")), now=1.0)
+        rr = r.tick(1.0)[0].requests[0]
+        results.append(_account_snapshot(r, rr))
+    assert results[0] == results[1]
+    assert results[0][0] == 2 and results[0][1] == 0   # both hits
+
+
+def test_enqueue_then_tick_equals_submit():
+    a = build_router("max-cache-hit", False, "reference", replicas=2)
+    b = build_router("max-cache-hit", False, "reference", replicas=2)
+    out_a = a.submit(RoutedRequest(0, ("kv:x",)), now=1.0)
+    b.enqueue(RoutedRequest(0, ("kv:x",)), now=1.0)
+    out_b = b.tick(1.0)
+    assert [x.replica for x in out_a] == [x.replica for x in out_b]
+    assert a.queue_length() == b.queue_length() == 0
+
+
+def test_complete_batch_single_matches_complete():
+    a = build_router("max-cache-hit", False, "reference", replicas=2)
+    b = build_router("max-cache-hit", False, "reference", replicas=2)
+    ra = a.submit(RoutedRequest(0, ("kv:x",)), now=1.0)[0].requests[0]
+    rb = b.submit(RoutedRequest(0, ("kv:x",)), now=1.0)[0].requests[0]
+    a.submit(RoutedRequest(1, ("kv:x",)), now=1.1)   # delayed behind holder
+    b.submit(RoutedRequest(1, ("kv:x",)), now=1.1)
+    out_a = a.complete(ra, now=2.0)
+    out_b = b.complete_batch([rb], now=2.0)
+    assert [x.replica for x in out_a] == [x.replica for x in out_b]
+    assert a.stats.completed == b.stats.completed == 1
+
+
+# ------------------------------------------------- deferred promotion epochs
+def make_store(index=None, caps=(2.0, 4.0)):
+    return TieredStore(
+        "n0", [TierSpec(n, c) for n, c in zip(("hbm", "dram"), caps)],
+        index=index)
+
+
+def test_deferred_promotion_coalesces_and_applies_once():
+    idx = CentralizedIndex()
+    ts = make_store(idx)
+    for o in ("a", "b", "c"):
+        ts.admit(o, 1.0)                 # a,b fill hbm; c evicts a -> dram
+    assert ts.tier_of("a") == "dram"
+    ts.defer_promotions()
+    assert ts.deferring
+    for _ in range(3):
+        assert ts.access("a") == "dram"  # layout frozen inside the epoch
+    assert idx.tier_of("a", "n0") == "dram"
+    assert ts.pending_promotions() == 1 and ts.deferred_coalesced == 2
+    assert ts.apply_promotions() == 1
+    assert not ts.deferring
+    assert ts.tier_of("a") == "hbm" and idx.tier_of("a", "n0") == "hbm"
+    assert ts.promotions == 1 and ts.deferred_applied == 1
+
+
+def test_deferred_intent_dropped_object_is_skipped():
+    ts = make_store()
+    ts.admit("a", 1.0)
+    ts.admit("b", 1.0)
+    ts.admit("c", 1.0)
+    ts.defer_promotions()
+    assert ts.access("a") == "dram"
+    ts.drop("a")
+    assert ts.apply_promotions() == 0    # intent invalidated, no relocation
+    assert "a" not in ts
+
+
+def test_apply_promotion_single_object_in_replay_order():
+    ts = make_store()
+    ts.admit("a", 1.0)
+    ts.admit("b", 1.0)
+    ts.admit("c", 1.0)                   # a -> dram
+    ts.defer_promotions()
+    ts.access("a")
+    assert ts.apply_promotion("a") is True
+    assert ts.tier_of("a") == "hbm"
+    assert ts.apply_promotion("a") is False      # intent consumed
+    assert ts.apply_promotions() == 0            # log empty, epoch closed
+
+
+def test_deferred_demote_intent():
+    ts = make_store()
+    ts.admit("a", 1.0)
+    assert ts.tier_of("a") == "hbm"
+    ts.defer_promotions()
+    assert ts.demote("a", 1)
+    assert ts.tier_of("a") == "hbm"      # frozen until apply
+    assert ts.apply_promotions() == 1
+    assert ts.tier_of("a") == "dram"
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              st.integers(min_value=0, max_value=9)),
+                    min_size=1, max_size=60),
+       epoch_len=st.integers(min_value=1, max_value=5))
+def test_deferred_epoch_random_interleavings(ops, epoch_len):
+    """Random promotion/eviction interleavings through deferred epochs keep
+    the tier invariants, mirror the index, and apply the delta log in
+    intent order — the epoch's final promote intent (if its object
+    survived) always ends at the top tier, since nothing applies after it."""
+    idx = CentralizedIndex()
+    ts = make_store(idx, caps=(2.0, 3.0))
+    in_epoch = 0
+    intents: dict = {}           # mirrors the delta log's insertion order
+    for op, k in ops:
+        if in_epoch == 0:
+            ts.defer_promotions()
+            intents.clear()
+            in_epoch = epoch_len
+        obj = f"o{k}"
+        if op == 0:
+            ts.admit(obj, 1.0)
+        elif op == 1:
+            if ts.access(obj) not in (None, "hbm") and obj not in intents:
+                intents[obj] = True
+        else:
+            ts.drop(obj)
+            intents.pop(obj, None)
+        in_epoch -= 1
+        if in_epoch == 0:
+            applied = ts.apply_promotions()
+            assert ts.pending_promotions() == 0 and not ts.deferring
+            if intents:
+                last = next(reversed(intents))
+                if last in ts:
+                    assert ts.tier_of(last) == "hbm", (last, applied)
+        # invariants hold mid-epoch and after apply
+        resident = set()
+        for tier in ts.tiers:
+            held = set(tier.cache.contents())
+            assert not (held & resident)
+            resident |= held
+            assert tier.cache.used_bytes <= tier.spec.capacity_bytes + 1e-9
+        assert resident == set(ts.contents())
+        assert idx.cached_at("n0") == resident
+    ts.apply_promotions()
+    for tier in ts.tiers:
+        assert tier.cache.used_bytes <= tier.spec.capacity_bytes + 1e-9
+
+
+# --------------------------------------------------------- batched admission
+def make_engine(n_stores=3):
+    idx = CentralizedIndex()
+    link = BandwidthResource("persistent", 2e9)
+    eng = TransferEngine(idx, link, max_inflight=8)
+    stores = {}
+    for i in range(n_stores):
+        st_ = TieredStore(f"r{i}", [TierSpec("hbm", 64 * BLOCK)], index=idx)
+        eng.register(f"r{i}", st_)
+        stores[f"r{i}"] = st_
+    return idx, eng, stores
+
+
+def test_fetch_batch_matches_sequential_fetch():
+    _, eng_a, _ = make_engine()
+    _, eng_b, stores_b = make_engine()
+    wants = [("x", BLOCK, "r0"), ("y", BLOCK, "r1"), ("x", BLOCK, "r2")]
+    seq = {}
+    for obj, size, dest in wants:
+        seq[(dest, obj)] = eng_a.fetch(obj, size, dest, now=0.0)
+    batch = eng_b.fetch_batch(wants, now=0.0)
+    assert set(batch) == set(seq)
+    for key in seq:
+        assert batch[key].source == seq[key].source
+        assert batch[key].ready_s == seq[key].ready_s
+    assert eng_b.stats.started == eng_a.stats.started
+    # admitted into the destination stores exactly like sequential fetch
+    assert "x" in stores_b["r0"] and "y" in stores_b["r1"]
+
+
+def test_fetch_batch_dedups_same_dest_object():
+    _, eng, stores = make_engine()
+    wants = [("x", BLOCK, "r0"), ("x", BLOCK, "r0")]
+    out = eng.fetch_batch(wants, now=0.0)
+    assert len(out) == 1 and eng.stats.started == 1
+    assert eng.stats.shared == 1          # second want joined the flight
+
+
+def test_fetch_batch_admit_false_defers_store_placement():
+    _, eng, stores = make_engine()
+    out = eng.fetch_batch([("x", BLOCK, "r0")], now=0.0, admit=False)
+    assert "x" not in stores["r0"]        # caller replays the admission
+    stores["r0"].admit("x", out[("r0", "x")].size_bytes)
+    assert "x" in stores["r0"]
+
+
+# ------------------------------------------------------ coherence auto-tune
+def test_coherence_adapt_shrinks_widens_within_bounds():
+    bus = CoherenceBus(2, batch_window_s=1.0)
+    assert bus.adapt(0.5) == 0.5 and bus.stats.shrunk == 1
+    assert bus.adapt(0.5, min_window_s=0.4) == 0.4
+    assert bus.adapt(0.0) == 0.8 and bus.stats.widened == 1
+    # dead band between target/2 and target: no change
+    assert bus.adapt(0.015) == 0.8
+    # widen from zero seeds at seed_window_s; cap at max_window_s
+    cold = CoherenceBus(1, batch_window_s=0.0)
+    assert cold.adapt(0.0) == pytest.approx(0.1)
+    for _ in range(12):
+        cold.adapt(0.0)
+    assert cold.batch_window_s == 10.0
+
+
+def test_simulator_autotune_closes_the_loop():
+    from repro.core.simulator import SimConfig, Simulator, teragrid_profile
+    from repro.core.workload import locality_workload
+    mb = 1024 ** 2
+    cfg = SimConfig(
+        policy="good-cache-compute", static_nodes=4, max_nodes=4,
+        coherence_delay_s=1.0, coherence_batch_window_s=10.0,
+        coherence_autotune=True, index_shards=2,
+        tiers=(TierSpec("hbm", 4 * mb, 400e9),
+               TierSpec("dram", 8 * mb, 50e9)))
+    sim = Simulator(locality_workload(30.0, 400), cfg, teragrid_profile())
+    sim.run()
+    assert 0.0 <= sim.index.bus.batch_window_s <= 10.0
+
+
+# ----------------------------------------------------- parallel index shards
+def _drive_index(index, seed=0):
+    events = []
+    index.subscribe(lambda *ev: events.append(ev))
+    rng = random.Random(seed)
+    for i in range(400):
+        f, e = f"o{rng.randrange(80)}", f"e{rng.randrange(6)}"
+        p = rng.random()
+        if p < 0.5:
+            index.add(f, e, tier=("hbm", "dram")[i % 2])
+        elif p < 0.7:
+            index.remove(f, e)
+        else:
+            index.enqueue_update(i * 0.01, "add" if p < 0.85 else "remove",
+                                 f, e)
+        if i % 23 == 0:
+            index.apply_updates(i * 0.01)
+    index.publish("e0", {f"o{k}": "hbm" for k in range(30)})
+    index.apply_updates(1e9)
+    return events
+
+
+def test_sharded_parallel_equals_serial():
+    serial = ShardedIndex(shards=8)
+    pooled = ShardedIndex(shards=8, scan_workers=4)
+    ev_s = _drive_index(serial, seed=1)
+    ev_p = _drive_index(pooled, seed=1)
+    assert ev_s == ev_p                   # listener events replay in order
+    probe = [f"o{k}" for k in range(80)]
+    assert ({f: sorted(s) for f, s in serial.bulk_locations(probe).items()}
+            == {f: sorted(s) for f, s in pooled.bulk_locations(probe).items()})
+    assert (dict(serial.candidate_executors(probe))
+            == dict(pooled.candidate_executors(probe)))
+    assert serial.entry_count() == pooled.entry_count()
+    assert sorted(serial.entries()) == sorted(pooled.entries())
+    pooled.close()
+
+
+def test_sharded_rpc_latency_only_slows_not_changes():
+    fast = ShardedIndex(shards=4)
+    slow = ShardedIndex(shards=4, scan_workers=4, shard_rpc_latency_s=1e-4)
+    for index in (fast, slow):
+        rng = random.Random(2)
+        for _ in range(100):
+            index.add(f"o{rng.randrange(40)}", f"e{rng.randrange(4)}")
+    probe = [f"o{k}" for k in range(40)]
+    assert ({f: sorted(s) for f, s in fast.bulk_locations(probe).items()}
+            == {f: sorted(s) for f, s in slow.bulk_locations(probe).items()})
+    slow.close()
