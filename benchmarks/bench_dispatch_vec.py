@@ -19,6 +19,11 @@ phase-2 pickup path.  Three sections:
   * ``dispatch_vec/bulk_rescore``— one-shot demand @ presence.T rebuild
     (numpy backend) vs the cost of maintaining scores incrementally,
     sanity-checking that steady state never wants the bulk path.
+  * ``dispatch_vec/device_mirror``— the accelerator-resident Sw shadow
+    under presence churn: coalesced delta epochs applied as rank-K
+    updates, *asserting* exact agreement with the authoritative host
+    matrix after every flush (divergence raises -> ERROR row), reporting
+    us/flush and the coalesce rate next to the bulk-rebuild cost.
 
 Writes ``BENCH_dispatch.json`` (decisions/sec for both engines at the
 paper-default config); every run appends a timestamped entry to the file's
@@ -227,10 +232,52 @@ def bulk_rescore_rows(n: int) -> List[Tuple[str, float, str]]:
     )]
 
 
+def device_mirror_rows(n: int) -> List[Tuple[str, float, str]]:
+    """Rank-K epoch flushes on the device-resident Sw shadow (numpy
+    backend: the kernel-identical float32 product, no jax import on the
+    smoke path) under steady index churn, verified exact per flush."""
+    n_items = max(400, n // 2)
+    universe = max(64, n_items // 4)
+    rng = random.Random(9)
+    vec = build(VectorizedDispatcher, "good-cache-compute", 3200, 64,
+                universe, 0)
+    mirror = vec.attach_device_mirror(backend="numpy")
+    for item in make_stream(n_items, 4, universe, 3):
+        vec.submit(item)
+    flush_s = 0.0
+    epochs = max(20, n // 200)
+    churn_per_epoch = 32
+    for _ in range(epochs):
+        for _ in range(churn_per_epoch):
+            o, e = rng.randrange(universe), rng.randrange(64)
+            if rng.random() < 0.7:
+                vec.index.add(f"o{o:06d}", f"e{e:03d}",
+                              tier=TIERS[o % 3])
+            else:
+                vec.index.remove(f"o{o:06d}", f"e{e:03d}")
+        t0 = time.perf_counter()
+        mirror.flush()
+        flush_s += time.perf_counter() - t0
+        err = mirror.verify()
+        if err != 0.0:
+            raise RuntimeError(
+                f"device mirror diverged from host Sw after flush "
+                f"(max_abs_err={err}) — rank-K epoch apply is broken")
+    st = mirror.stats
+    return [(
+        "dispatch_vec/device_mirror",
+        1e6 * flush_s / max(st.flushes, 1),
+        f"flushes={st.flushes};rank_k={st.rank_k_applied};"
+        f"coalesce_rate={st.coalesce_rate:.2f};"
+        f"rows={vec._Sw.shape[0]};execs={vec._Sw.shape[1]};equal=True",
+    )]
+
+
 def main(n: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]]:
     rows, default_metrics = sweep_rows(n)
     rows.extend(policy_rows(n))
     rows.extend(bulk_rescore_rows(n))
+    rows.extend(device_mirror_rows(n))
     if default_metrics:
         append_history("BENCH_dispatch.json", {
             "config": {"window": 3200, "executors": 64,

@@ -58,6 +58,12 @@ def main() -> None:
         ("model_error", "bench_model_error", n_model),
         ("scale", "bench_scale", n_scale),
         ("roofline", "bench_roofline", None),
+        # Real KV bytes through every physical home: raises (-> ERROR row)
+        # on byte mismatch after the HBM->DRAM->disk->HBM tour or on a
+        # measured bandwidth >10x the machine-model roofline (an unblocked
+        # async copy).  Writes the measured-bandwidth history
+        # (BENCH_payload.json, uploaded with the other BENCH_* artifacts).
+        ("payload_roundtrip", "bench_payload", None),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

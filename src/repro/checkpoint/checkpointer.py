@@ -40,6 +40,14 @@ def _from_raw(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
     return raw.view(np.dtype(dtype)).reshape(shape)
 
 
+# Public names for the raw byte-view pair: the KV spill tier
+# (``diffusion.payload.RealPayload``) writes its chunked page files through
+# the same dtype-safe serialization the checkpoint format uses, so bfloat16
+# and friends round-trip identically in both planes.
+to_raw_bytes = _to_raw
+from_raw_bytes = _from_raw
+
+
 def _tree_flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)

@@ -72,6 +72,18 @@ class SchedulerStats:
     tier_floor_bypasses: int = 0    # GCC skipped a delay: holders too slow
     batch_drains: int = 0           # notify_batch calls (amortization factor:
     #                                 decisions / batch_drains per single scan)
+    # Stale-snapshot accounting for the batched drain: a notify_batch scan
+    # decides against a frozen presence/replication snapshot, while the
+    # looped serving path admits each assignment's objects *before* the next
+    # decision.  Both engines track that admission evolution as an overlay
+    # during every batch scan; a decision whose branch differs between the
+    # frozen view and the overlay-evolved view is counted exactly once per
+    # scan — as `batch_stale_decisions` when the frozen view was used
+    # (divergence from looped semantics: counted, never silent) or as
+    # `batch_emulated_decisions` when `emulate_batch_admissions` made the
+    # evolved view authoritative (parity with the loop restored).
+    batch_stale_decisions: int = 0
+    batch_emulated_decisions: int = 0
 
 
 class DataAwareDispatcher:
@@ -94,6 +106,7 @@ class DataAwareDispatcher:
         objects_fn: Optional[Callable[[Any], Sequence[str]]] = None,
         tier_weights: Optional[Dict[str, float]] = None,
         gcc_delay_tier_floor: float = 0.0,
+        emulate_batch_admissions: bool = False,
     ):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of {POLICIES}")
@@ -117,6 +130,25 @@ class DataAwareDispatcher:
         # it — the swap-in costs about as much as a peer fetch a free
         # executor could start right now.  0.0 disables (paper behavior).
         self.gcc_delay_tier_floor = gcc_delay_tier_floor
+        # Batched-drain admission emulation: when True, notify_batch decides
+        # each item against the frozen snapshot *plus* the admissions its own
+        # earlier assignments would have performed (the looped serving
+        # router's synchronous-admission evolution), so a binding replication
+        # cap delays duplicates exactly as the loop would instead of
+        # silently degrading to bulk-scheduling semantics.  When False the
+        # frozen view stays authoritative and any would-be divergence is
+        # counted in ``stats.batch_stale_decisions``.
+        self.emulate_batch_admissions = emulate_batch_admissions
+        # Live only inside notify_batch: object -> executors assigned work
+        # naming it this batch that did not already hold it, plus the item
+        # keys whose frozen/evolved divergence was already counted.
+        self._batch_overlay: Optional[Dict[str, Set[str]]] = None
+        self._batch_counted: Set[Hashable] = set()
+        # Emulated mid-drain BUSY transitions: the looped serving path marks
+        # each assignment BUSY before its next decision, so GCC's
+        # utilization input rises by 1/n per assignment — notify_batch
+        # replays that evolution here while emulating.
+        self._batch_virtual_busy = 0
 
         # Wait queue Q: FIFO by arrival sequence. OrderedDict gives O(1)
         # head access and O(1) removal from the middle on dispatch.
@@ -211,12 +243,16 @@ class DataAwareDispatcher:
         return len(self._free)
 
     def utilization(self) -> float:
-        """Busy / registered — the paper's CPU-utilization input to GCC."""
+        """Busy / registered — the paper's CPU-utilization input to GCC.
+
+        ``_batch_virtual_busy`` (nonzero only inside an emulating
+        ``notify_batch``) adds the batch's own assignments, which the looped
+        serving path would have marked BUSY before the next decision."""
         n = len(self._executors)
         if n == 0:
             return 1.0
         busy = sum(1 for s in self._executors.values() if s == ExecutorState.BUSY)
-        return busy / n
+        return (busy + self._batch_virtual_busy) / n
 
     def _weight(self, f: str, e: str) -> float:
         """Tier weight of cached object f at executor e (tier-aware scoring)."""
@@ -225,12 +261,16 @@ class DataAwareDispatcher:
             return 1.0
         return self.tier_weights.get(t, 1.0)
 
-    def _delay_worthwhile(self, objects: Sequence[str]) -> bool:
+    def _delay_worthwhile(self, objects: Sequence[str],
+                          ov: Optional[Dict[str, Set[str]]] = None) -> bool:
         """GCC + tiers: does any live copy sit in a tier fast enough that
         waiting for its busy holder beats dispatching elsewhere now?
 
         Flat stores weigh 1.0, so with the floor enabled they always justify
         the delay — only genuinely slow-tier-resident copies bypass it.
+        ``ov`` (batch-scan admission overlay) adds the copies this batch's
+        earlier assignments would have admitted — at the destination's top
+        tier, hence at the maximal tier weight.
         """
         if self.tier_weights is None or self.gcc_delay_tier_floor <= 0.0:
             return True
@@ -239,7 +279,33 @@ class DataAwareDispatcher:
                 if e in self._executors and \
                         self._weight(f, e) >= self.gcc_delay_tier_floor:
                     return True
+        if ov and max(self.tier_weights.values()) >= self.gcc_delay_tier_floor:
+            return any(f in ov for f in objects)
         return False
+
+    def _tail_decision(self, objects: Sequence[str], any_live: bool,
+                       cache_mode: bool,
+                       ov: Optional[Dict[str, Set[str]]]) -> str:
+        """Decide an item none of whose live holders is free: "assign" (next
+        free executor), "bypass" (assign, with tier-floor-bypass accounting),
+        or "delay" — against the index alone (``ov=None``, the frozen
+        snapshot) or the index plus a batch scan's emulated-admission
+        overlay (the looped path's synchronous-admission evolution)."""
+        if ov:
+            any_live = any_live or any(f in ov for f in objects)
+        if not any_live or not cache_mode:
+            # cold object, or max-compute-util / first-cache-available:
+            # "send notification to the next free executor".
+            return "assign"
+        if self.policy == "good-cache-compute":
+            rep = max(self.index.replication_factor(f)
+                      + (len(ov[f]) if ov and f in ov else 0)
+                      for f in objects)
+            if rep < self.max_replicas:
+                return "assign"
+            if not self._delay_worthwhile(objects, ov):
+                return "bypass"
+        return "delay"
 
     # -------------------------------------------------------------- phase 1
     def _cache_mode(self) -> bool:
@@ -315,21 +381,30 @@ class DataAwareDispatcher:
                             best_free, best_cnt = e, c
             if best_free is not None:
                 return self._assign(best_free, item)
-            if not any_live:
-                # cold object: "send notification to the next free executor"
-                return self._assign(next(iter(self._free)), item)
-            # preferred executor(s) busy:
-            if cache_mode:
-                if self.policy == "good-cache-compute":
-                    rep = max(self.index.replication_factor(f) for f in objects)
-                    if rep < self.max_replicas:
-                        return self._assign(next(iter(self._free)), item)
-                    if not self._delay_worthwhile(objects):
-                        self.stats.tier_floor_bypasses += 1
-                        return self._assign(next(iter(self._free)), item)
+            # No live holder is free: the tail decision, evaluated on the
+            # frozen index and — inside a batch scan — on the index plus
+            # the admission overlay.  A differing branch is counted once per
+            # batch; the overlay becomes authoritative only when admission
+            # emulation is on (the serving router's batched drain).
+            dec = self._tail_decision(objects, any_live, cache_mode, None)
+            ov = self._batch_overlay
+            if ov:
+                eff = self._tail_decision(objects, any_live, cache_mode, ov)
+                if eff != dec:
+                    key = self._key(item)
+                    if key not in self._batch_counted:
+                        self._batch_counted.add(key)
+                        if self.emulate_batch_admissions:
+                            self.stats.batch_emulated_decisions += 1
+                        else:
+                            self.stats.batch_stale_decisions += 1
+                    if self.emulate_batch_admissions:
+                        dec = eff
+            if dec == "delay":
                 self.stats.delayed += 1
                 continue  # delay THIS item; keep scanning the window
-            # max-compute-util / first-cache-available: any free executor.
+            if dec == "bypass":
+                self.stats.tier_floor_bypasses += 1
             return self._assign(next(iter(self._free)), item)
         self._scan_dirty = False
         self._idx_version_seen = self.index.version
@@ -356,12 +431,46 @@ class DataAwareDispatcher:
         """
         self.stats.batch_drains += 1
         out: List[Tuple[str, Any]] = []
-        while limit is None or len(out) < limit:
-            pair = self.notify()
-            if pair is None:
-                break
-            out.append(pair)
+        self._batch_overlay = {}
+        self._batch_counted = set()
+        # GCC mid-drain utilization flip: the looped path marks each
+        # assignment BUSY before the next decision; emulating replays that
+        # via _batch_virtual_busy, otherwise every decision taken past the
+        # would-be threshold crossing is counted stale — never silent.
+        gcc = self.policy == "good-cache-compute"
+        n_exec = len(self._executors)
+        busy0 = sum(1 for s in self._executors.values()
+                    if s == ExecutorState.BUSY)
+        try:
+            while limit is None or len(out) < limit:
+                pair = self.notify()
+                if pair is None:
+                    break
+                if (gcc and not self.emulate_batch_admissions and n_exec
+                        and not self._cache_mode()
+                        and (busy0 + len(out)) / n_exec
+                        >= self.cpu_util_threshold):
+                    self.stats.batch_stale_decisions += 1
+                out.append(pair)
+                if self.emulate_batch_admissions:
+                    self._batch_virtual_busy += 1
+                self._overlay_record(pair[0], self._objects(pair[1]))
+        finally:
+            self._batch_overlay = None
+            self._batch_counted = set()
+            self._batch_virtual_busy = 0
         return out
+
+    def _overlay_record(self, executor: str, objects: Sequence[str]) -> None:
+        """Log a batch assignment's would-be admissions: every named object
+        the executor does not already hold would land in its store before
+        the looped path's next decision."""
+        ov = self._batch_overlay
+        if ov is None:
+            return
+        for f in objects:
+            if executor not in self.index.locations(f):
+                ov.setdefault(f, set()).add(executor)
 
     # -------------------------------------------------------------- phase 2
     def pick_items(self, executor: str, m: int = 1) -> List[Any]:

@@ -174,6 +174,11 @@ class SimResult:
     scheduler_decisions: int
     stale_claims: int = 0                   # index overstated locality
     misdirected: int = 0                    # locality promised, none found
+    # Batch-drain decisions whose branch would differ had each dispatch's
+    # admissions landed synchronously (the serving router's looped
+    # semantics): quantifies how far the DES's frozen-snapshot bulk drains
+    # sit from per-decision scheduling.  Counted, never silent.
+    batch_stale_decisions: int = 0
 
     # -- derived metrics (paper Section 5.2.x definitions) -------------------
     @property
@@ -663,6 +668,7 @@ class Simulator:
             scheduler_decisions=self.sched.stats.decisions,
             stale_claims=self.stale_claims,
             misdirected=self.misdirected,
+            batch_stale_decisions=self.sched.stats.batch_stale_decisions,
         )
 
 

@@ -1,0 +1,431 @@
+"""Payload plane: the actual KV bytes behind the tier-stack bookkeeping.
+
+``TieredStore`` / ``TransferEngine`` account object *names and sizes* — the
+modeled plane the DES and the router's decision path run on.  This module
+adds the physical plane underneath: a ``PayloadBackend`` attached to a store
+receives a callback for every placement change (admit / promote / demote /
+drop) and moves the real tensors between physical homes:
+
+  * ``hbm``  — accelerator device arrays (``jax.device_put``; every timed
+    edge is closed with ``jax.block_until_ready`` so async dispatch cannot
+    fake bandwidth);
+  * ``dram`` — host numpy (``jax.device_get`` on the way down);
+  * ``disk`` — chunked spill files written through the checkpoint plane's
+    dtype-safe byte view (``checkpoint.checkpointer.to_raw_bytes``), with a
+    per-chunk sha256 verified on every read back.
+
+Three backends share the interface:
+
+  * ``NullPayload`` — the modeled default: every notification is a tolerated
+    placeholder (counted, never an error).  Attaching no backend at all is
+    equivalent; decisions are identical by construction.
+  * ``FakePayload`` — deterministic in-memory tiers for tier-1 tests: moves
+    copy host bytes and record *modeled* seconds (size / roofline), so
+    measured rows are reproducible without an accelerator.
+  * ``RealPayload`` — the physical homes above, timed with
+    ``time.perf_counter``.
+
+The decision plane never reads the payload plane: a backend with no bytes
+registered for an object (a placeholder — e.g. the DES, or a peer fetch of
+an object whose payload was never put) degrades to bookkeeping-only, so the
+``payload="modeled"`` and ``payload="real"`` engine modes make bit-identical
+promote/demote/fetch decisions (asserted in ``tests/test_payload.py``).
+
+``MeasuredBandwidth`` accumulates bytes/seconds per (src tier, dst tier)
+edge; ``check_roofline`` flags any edge whose *aggregate* measured bandwidth
+exceeds ``factor``x the roofline of its slower endpoint — measured transfers
+can be slower than roofline (overheads), but 10x faster is always a timing
+bug (an unblocked async copy), which is exactly what the
+``payload_roundtrip`` smoke row turns into an ERROR.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "MeasuredBandwidth",
+    "PayloadBackend",
+    "NullPayload",
+    "FakePayload",
+    "RealPayload",
+]
+
+# Tier names with a physical roofline; edges touching anything else (engine
+# source labels like "persistent"/"peer" ride modeled links, and in-process
+# memcpy legitimately beats a modeled GPFS wire) are exempt from the
+# impossibly-fast check.
+_ROOFLINE_TIERS = ("hbm", "dram", "disk")
+
+
+class MeasuredBandwidth:
+    """Per-(src, dst) accumulator of measured byte movement."""
+
+    def __init__(self) -> None:
+        # (src, dst) -> [bytes, seconds, moves]
+        self._acc: Dict[Tuple[str, str], List[float]] = {}
+
+    def record(self, src: str, dst: str, nbytes: float, seconds: float) -> None:
+        ent = self._acc.setdefault((src, dst), [0.0, 0.0, 0.0])
+        ent[0] += float(nbytes)
+        ent[1] += max(0.0, float(seconds))
+        ent[2] += 1.0
+
+    def bandwidth(self, src: str, dst: str) -> float:
+        """Aggregate bytes/s over every recorded move on the edge (0 if none)."""
+        ent = self._acc.get((src, dst))
+        if ent is None or ent[1] <= 0.0:
+            return 0.0
+        return ent[0] / ent[1]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(ent[0] for ent in self._acc.values())
+
+    def rows(self) -> List[Dict[str, float]]:
+        """Stable-sorted export rows for BENCH_* history entries."""
+        out = []
+        for (src, dst) in sorted(self._acc):
+            b, s, n = self._acc[(src, dst)]
+            out.append({
+                "src": src, "dst": dst, "bytes": b, "seconds": s,
+                "moves": int(n), "bytes_per_s": b / s if s > 0 else 0.0,
+            })
+        return out
+
+    def merge(self, other: "MeasuredBandwidth") -> None:
+        for (src, dst), (b, s, n) in other._acc.items():
+            ent = self._acc.setdefault((src, dst), [0.0, 0.0, 0.0])
+            ent[0] += b
+            ent[1] += s
+            ent[2] += n
+
+    def check_roofline(self, factor: float = 10.0) -> List[str]:
+        """Edges measured impossibly fast: aggregate bandwidth more than
+        ``factor``x the roofline of the edge's slower physical endpoint.
+        Returns violation strings (empty = sane); slower-than-roofline is
+        normal and never flagged."""
+        from .tiers import roofline_tier_bw  # deferred: avoids import cycle
+        bad = []
+        for (src, dst) in sorted(self._acc):
+            if src not in _ROOFLINE_TIERS or dst not in _ROOFLINE_TIERS:
+                continue
+            roof = min(roofline_tier_bw(src), roofline_tier_bw(dst))
+            bw = self.bandwidth(src, dst)
+            if bw > factor * roof:
+                bad.append(
+                    f"{src}->{dst}: measured {bw / 1e9:.1f} GB/s exceeds "
+                    f"{factor:g}x roofline {roof / 1e9:.1f} GB/s "
+                    f"(unblocked async copy?)")
+        return bad
+
+
+# -- structure helpers (dict/list/tuple trees of arrays, no jax needed) -------
+
+def _tree_leaves(value: Any, out: List[Any]) -> Any:
+    """Flatten into ``out`` and return a template with leaf indices in place
+    of arrays.  Dict keys are visited sorted so the order is deterministic."""
+    if isinstance(value, dict):
+        return {k: _tree_leaves(value[k], out) for k in sorted(value)}
+    if isinstance(value, (list, tuple)):
+        seq = [_tree_leaves(v, out) for v in value]
+        return tuple(seq) if isinstance(value, tuple) else seq
+    out.append(value)
+    return len(out) - 1
+
+
+def _tree_rebuild(template: Any, leaves: List[Any]) -> Any:
+    if isinstance(template, dict):
+        return {k: _tree_rebuild(v, leaves) for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        seq = [_tree_rebuild(v, leaves) for v in template]
+        return tuple(seq) if isinstance(template, tuple) else seq
+    return leaves[template]
+
+
+def _leaf_nbytes(leaves: List[Any]) -> float:
+    return float(sum(int(np.asarray(l).nbytes) for l in leaves))
+
+
+class PayloadBackend:
+    """Interface + placeholder-tolerant base.
+
+    The store calls ``moved(obj, tier)`` after every placement change and
+    ``dropped(obj)`` when an object leaves the node.  An object with no
+    registered bytes is a *placeholder*: the notification is counted and
+    ignored — the modeled plane keeps full fidelity without payloads.
+    """
+
+    def __init__(self, measured: Optional[MeasuredBandwidth] = None):
+        self.measured = measured if measured is not None else MeasuredBandwidth()
+        self.placeholder_moves = 0
+
+    # -- registration ---------------------------------------------------------
+    def put(self, obj: str, value: Any, tier: str) -> None:
+        """Register ``obj``'s bytes, homed at ``tier`` (not a timed move)."""
+        raise NotImplementedError
+
+    def get(self, obj: str) -> Optional[Any]:
+        """Host-materialized copy of the payload (None for placeholders)."""
+        return None
+
+    def has(self, obj: str) -> bool:
+        return False
+
+    def tier_of(self, obj: str) -> Optional[str]:
+        return None
+
+    def nbytes(self, obj: str) -> float:
+        return 0.0
+
+    # -- store notifications --------------------------------------------------
+    def moved(self, obj: str, tier: str) -> None:
+        self.placeholder_moves += 1
+
+    def dropped(self, obj: str) -> None:
+        pass
+
+
+class NullPayload(PayloadBackend):
+    """Modeled mode: every object is a placeholder; nothing is stored."""
+
+    def put(self, obj: str, value: Any, tier: str) -> None:
+        pass
+
+
+class FakePayload(PayloadBackend):
+    """Deterministic in-memory payload plane for tier-1 tests.
+
+    Bytes live in host numpy regardless of tier; a move copies the leaves
+    (so an aliasing bug would corrupt detectably) and records *modeled*
+    seconds — size over the slower endpoint's roofline — so measured rows
+    are bit-reproducible with no accelerator in the loop.
+    """
+
+    def __init__(self, measured: Optional[MeasuredBandwidth] = None):
+        super().__init__(measured)
+        self._tiers: Dict[str, str] = {}
+        self._templates: Dict[str, Any] = {}
+        self._leaves: Dict[str, List[np.ndarray]] = {}
+
+    def put(self, obj: str, value: Any, tier: str) -> None:
+        leaves: List[Any] = []
+        template = _tree_leaves(value, leaves)
+        self._templates[obj] = template
+        self._leaves[obj] = [np.ascontiguousarray(l) for l in leaves]
+        self._tiers[obj] = tier
+
+    def get(self, obj: str) -> Optional[Any]:
+        if obj not in self._leaves:
+            return None
+        return _tree_rebuild(self._templates[obj], self._leaves[obj])
+
+    def has(self, obj: str) -> bool:
+        return obj in self._leaves
+
+    def tier_of(self, obj: str) -> Optional[str]:
+        return self._tiers.get(obj)
+
+    def nbytes(self, obj: str) -> float:
+        return _leaf_nbytes(self._leaves.get(obj, []))
+
+    def moved(self, obj: str, tier: str) -> None:
+        src = self._tiers.get(obj)
+        if src is None:
+            self.placeholder_moves += 1
+            return
+        if src == tier:
+            return
+        from .tiers import roofline_tier_bw  # deferred: avoids import cycle
+        self._leaves[obj] = [l.copy() for l in self._leaves[obj]]
+        self._tiers[obj] = tier
+        nbytes = self.nbytes(obj)
+        bw = min(roofline_tier_bw(src), roofline_tier_bw(tier))
+        self.measured.record(src, tier, nbytes, nbytes / bw)
+
+    def dropped(self, obj: str) -> None:
+        self._tiers.pop(obj, None)
+        self._templates.pop(obj, None)
+        self._leaves.pop(obj, None)
+
+
+class _SpilledLeaf:
+    """One leaf's on-disk home: chunked raw files + per-chunk sha256."""
+
+    __slots__ = ("dtype", "shape", "nbytes", "chunks")
+
+    def __init__(self, dtype: str, shape: Tuple[int, ...], nbytes: int,
+                 chunks: List[Tuple[str, str]]):
+        self.dtype = dtype
+        self.shape = shape
+        self.nbytes = nbytes
+        self.chunks = chunks            # [(path, sha256 hexdigest), ...]
+
+
+class RealPayload(PayloadBackend):
+    """Physical KV homes: device arrays (hbm), host numpy (everything else),
+    chunked spill files with verified digests (disk).
+
+    Every timed edge that touches the device is closed with
+    ``jax.block_until_ready`` before the clock stops — the measured
+    bandwidth is the bytes actually landed, not the async dispatch.  jax is
+    imported lazily so modeled-only runs never pay for it.
+    """
+
+    def __init__(
+        self,
+        name: str = "payload",
+        measured: Optional[MeasuredBandwidth] = None,
+        spill_dir: Optional[str] = None,
+        chunk_bytes: int = 64 * 1024 * 1024,
+        device: Any = None,
+    ):
+        super().__init__(measured)
+        self.name = name
+        self.spill_dir = spill_dir
+        self.chunk_bytes = max(1, int(chunk_bytes))
+        self.device = device
+        self._tiers: Dict[str, str] = {}
+        self._templates: Dict[str, Any] = {}
+        # leaves: in-memory ndarray/device-array, or _SpilledLeaf on disk
+        self._leaves: Dict[str, List[Any]] = {}
+        self._nbytes: Dict[str, float] = {}
+        self._spill_seq = 0
+
+    # -- physical homes -------------------------------------------------------
+    def _to_device(self, leaves: List[Any]) -> List[Any]:
+        import jax
+        out = [jax.device_put(l, self.device) for l in leaves]
+        return [jax.block_until_ready(l) for l in out]
+
+    def _to_host(self, obj: str) -> List[np.ndarray]:
+        """Materialize the current home into contiguous host arrays.
+
+        Always a real copy: on the CPU backend ``np.asarray`` of a device
+        array *aliases* the device buffer, which would make a "demotion" a
+        free pointer cast (and its measured bandwidth a lie) — the DRAM
+        home must be a distinct host buffer that survives the device copy
+        being dropped."""
+        leaves = self._leaves[obj]
+        if leaves and isinstance(leaves[0], _SpilledLeaf):
+            return [self._read_spilled(s) for s in leaves]
+        import jax
+        jax.block_until_ready(leaves)
+        return [np.array(np.asarray(l), copy=True) for l in leaves]
+
+    def _spill(self, obj: str, host: List[np.ndarray]) -> List[_SpilledLeaf]:
+        if self.spill_dir is None:
+            raise ValueError(
+                f"RealPayload {self.name!r}: disk tier used without spill_dir")
+        from ..checkpoint.checkpointer import to_raw_bytes
+        os.makedirs(self.spill_dir, exist_ok=True)
+        out = []
+        for arr in host:
+            raw = to_raw_bytes(arr)
+            chunks: List[Tuple[str, str]] = []
+            for lo in range(0, max(1, raw.nbytes), self.chunk_bytes):
+                piece = raw[lo:lo + self.chunk_bytes]
+                self._spill_seq += 1
+                path = os.path.join(
+                    self.spill_dir, f"{self.name}.{self._spill_seq:08d}.kv")
+                with open(path, "wb") as f:
+                    f.write(piece.tobytes())
+                chunks.append((path, hashlib.sha256(piece).hexdigest()))
+            out.append(_SpilledLeaf(str(arr.dtype), arr.shape,
+                                    int(raw.nbytes), chunks))
+        return out
+
+    def _read_spilled(self, leaf: _SpilledLeaf) -> np.ndarray:
+        from ..checkpoint.checkpointer import from_raw_bytes
+        parts = []
+        for path, digest in leaf.chunks:
+            with open(path, "rb") as f:
+                data = f.read()
+            if hashlib.sha256(data).hexdigest() != digest:
+                raise IOError(f"KV spill chunk corrupt: {path}")
+            parts.append(np.frombuffer(data, dtype=np.uint8))
+        raw = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        return from_raw_bytes(raw, leaf.dtype, leaf.shape)
+
+    def _free_spill(self, leaves: List[Any]) -> None:
+        for leaf in leaves:
+            if isinstance(leaf, _SpilledLeaf):
+                for path, _ in leaf.chunks:
+                    try:
+                        os.unlink(path)
+                    except OSError:
+                        pass
+
+    def _home(self, obj: str, host: List[np.ndarray], tier: str) -> List[Any]:
+        if tier == "hbm":
+            return self._to_device(host)
+        if tier == "disk":
+            return self._spill(obj, host)
+        return host
+
+    # -- interface ------------------------------------------------------------
+    def put(self, obj: str, value: Any, tier: str) -> None:
+        self.dropped(obj)               # re-put replaces (frees old spill)
+        leaves: List[Any] = []
+        template = _tree_leaves(value, leaves)
+        self._nbytes[obj] = _leaf_nbytes(leaves)
+        self._templates[obj] = template
+        if tier == "hbm":
+            self._leaves[obj] = self._to_device(leaves)
+        else:
+            host = [np.ascontiguousarray(np.asarray(l)) for l in leaves]
+            self._leaves[obj] = self._home(obj, host, tier)
+        self._tiers[obj] = tier
+
+    def get(self, obj: str) -> Optional[Any]:
+        if obj not in self._leaves:
+            return None
+        return _tree_rebuild(self._templates[obj], self._to_host(obj))
+
+    def value(self, obj: str) -> Optional[Any]:
+        """The payload in its *current* home (device arrays when resident in
+        hbm) — what a decode step wants after a swap-in."""
+        if obj not in self._leaves:
+            return None
+        leaves = self._leaves[obj]
+        if leaves and isinstance(leaves[0], _SpilledLeaf):
+            leaves = [self._read_spilled(s) for s in leaves]
+        return _tree_rebuild(self._templates[obj], leaves)
+
+    def has(self, obj: str) -> bool:
+        return obj in self._leaves
+
+    def tier_of(self, obj: str) -> Optional[str]:
+        return self._tiers.get(obj)
+
+    def nbytes(self, obj: str) -> float:
+        return self._nbytes.get(obj, 0.0)
+
+    def moved(self, obj: str, tier: str) -> None:
+        src = self._tiers.get(obj)
+        if src is None:
+            self.placeholder_moves += 1
+            return
+        if src == tier:
+            return
+        old = self._leaves[obj]
+        t0 = time.perf_counter()
+        host = self._to_host(obj)       # verified read out of the old home
+        self._leaves[obj] = self._home(obj, host, tier)
+        dt = time.perf_counter() - t0
+        self._free_spill(old)
+        self._tiers[obj] = tier
+        self.measured.record(src, tier, self._nbytes[obj], dt)
+
+    def dropped(self, obj: str) -> None:
+        leaves = self._leaves.pop(obj, None)
+        if leaves:
+            self._free_spill(leaves)
+        self._tiers.pop(obj, None)
+        self._templates.pop(obj, None)
+        self._nbytes.pop(obj, None)

@@ -19,6 +19,13 @@ Presence *per tier* is published to the index (``CentralizedIndex.add``'s
 ``tier`` argument) so the dispatcher's tier-aware scoring can rank an HBM
 hit above a disk hit above a peer fetch (``core.dispatch.tier_weights``).
 
+The store itself tracks names and sizes only (the modeled plane).  An
+attached ``diffusion.payload.PayloadBackend`` is notified after every
+placement change (one hook in ``_place`` covers admit / promote / demote /
+victim demotion, plus the two drop paths) and moves the *actual* tensors
+between physical homes — objects the backend holds no bytes for degrade to
+tolerated placeholder notifications, so decisions never depend on payloads.
+
 Invariants (property-tested in ``tests/test_diffusion_properties.py``):
   * an object resides in at most one tier per node;
   * each tier's used bytes never exceed its capacity;
@@ -88,12 +95,12 @@ class TierSpec:
 def roofline_tier_bw(name: str) -> float:
     """Tier read bandwidth derived from the ``launch.rooflines`` constants
     (the side-effect-free home of the dryrun/perf machine model)."""
-    from ..launch.rooflines import HBM_BW, ICI_BW
+    from ..launch.rooflines import DISK_BW, HBM_BW, ICI_BW
     if name == "hbm":
         return HBM_BW
     if name == "dram":
         return ICI_BW
-    return ICI_BW / 25.0
+    return DISK_BW
 
 
 def serving_tier_specs(
@@ -148,6 +155,7 @@ class TieredStore:
         nic_bw_bytes_per_s: float = float("inf"),
         on_drop: Optional[Callable[[str, float], None]] = None,
         rng: Optional[_random.Random] = None,
+        payload=None,
     ):
         if not specs:
             raise ValueError("TieredStore needs at least one tier")
@@ -156,6 +164,10 @@ class TieredStore:
         self.tiers = [StoreTier(s, name, rng) for s in specs]
         self.nic = BandwidthResource(f"{name}.nic", nic_bw_bytes_per_s)
         self._on_drop = on_drop
+        # Physical plane (diffusion.payload.PayloadBackend): notified after
+        # every placement change so the real KV bytes follow the bookkeeping.
+        # None = modeled-only (identical decisions either way).
+        self.payload = payload
         self._sizes: Dict[str, float] = {}
         self._tier_idx: Dict[str, int] = {}     # object -> resident tier index
         self.misses = 0
@@ -169,6 +181,11 @@ class TieredStore:
         self._promo_log: Optional[Dict[str, Tuple[str, int]]] = None
         self.deferred_applied = 0       # intents that became relocations
         self.deferred_coalesced = 0     # intents absorbed by a later intent
+
+    def attach_payload(self, backend) -> None:
+        """Wire a payload backend after construction (the router builds its
+        stores internally); already-resident objects stay placeholders."""
+        self.payload = backend
 
     # -- queries --------------------------------------------------------------
     def __contains__(self, obj: str) -> bool:
@@ -346,6 +363,8 @@ class TieredStore:
             self.index.remove(obj, self.name)
         if self._on_drop is not None:
             self._on_drop(obj, size)
+        if self.payload is not None:
+            self.payload.dropped(obj)
 
     def clear(self) -> None:
         for obj in list(self._tier_idx):
@@ -367,6 +386,11 @@ class TieredStore:
             self._tier_idx[obj] = i
             if self.index is not None:
                 self.index.add(obj, self.name, tier=tier.name)
+            if self.payload is not None:
+                # one hook covers admit, promote, demote, victim demotion;
+                # the backend moves real bytes iff it holds them (else this
+                # is a tolerated placeholder notification).
+                self.payload.moved(obj, tier.name)
             for victim in victims:
                 vsize = self._sizes[victim]
                 del self._tier_idx[victim]     # off this tier; re-place below
@@ -381,6 +405,8 @@ class TieredStore:
             self.index.remove(obj, self.name)
         if self._on_drop is not None:
             self._on_drop(obj, size_dropped)
+        if self.payload is not None:
+            self.payload.dropped(obj)
 
     def _relocate(self, obj: str, target: int) -> None:
         """Move a resident object to ``target`` tier (promotion path)."""

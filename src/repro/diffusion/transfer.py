@@ -30,15 +30,27 @@ Time is virtual and caller-supplied (``now``), like the router: the engine
 never sleeps.  Bandwidth load (``omega``) is engaged at fetch and released
 lazily by ``drain(now)`` once a transfer's ready time passes — every public
 entry point drains first, so load reflects only genuinely in-flight copies.
+
+``payload="real"`` adds the physical plane on top of the model: each
+resolved fetch also copies the object's actual bytes out of the chosen
+source (the peer store's ``diffusion.payload`` backend, or the engine's
+persistent payload map seeded via ``put_persistent``) into the destination
+backend at the admitted tier, wall-clock timed into ``self.measured``.  The
+modeled ``copy_time`` stays decision-authoritative in both modes — sources,
+admissions, and costs are bit-identical, and objects with no registered
+bytes degrade to counted placeholder fetches — so ``"modeled"`` remains the
+exact DES/dry-run backend and ``"real"`` only adds measurement.
 """
 
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core.index import CentralizedIndex
 from ..core.store import BandwidthResource, copy_time
+from .payload import MeasuredBandwidth
 from .tiers import TieredStore
 
 __all__ = ["DEMAND", "Transfer", "TransferEngine", "TransferStats"]
@@ -78,6 +90,9 @@ class TransferStats:
     preempted: int = 0              # speculative flights killed by demand
     preempted_bytes: float = 0.0
     refused_speculative: int = 0    # speculative fetches denied admission
+    payload_moves: int = 0          # real-mode fetches that moved actual bytes
+    payload_bytes_moved: float = 0.0
+    placeholder_fetches: int = 0    # real-mode fetches with no bytes to move
 
 
 class TransferEngine:
@@ -92,13 +107,22 @@ class TransferEngine:
         latency_s: float = 0.0,
         use_peers: bool = True,
         speculative_slot_frac: float = 0.5,
+        payload: str = "modeled",
     ):
+        if payload not in ("modeled", "real"):
+            raise ValueError(f"payload must be 'modeled' or 'real': {payload!r}")
         self.index = index
         self.persistent_link = persistent_link
         self.stores: Dict[str, TieredStore] = stores if stores is not None else {}
         self.max_inflight = max(1, int(max_inflight))
         self.latency_s = latency_s
         self.use_peers = use_peers
+        # "real": move actual bytes through the stores' payload backends on
+        # every resolved fetch (measured below); "modeled" (DES/dry-run):
+        # bookkeeping only.  Decisions are identical in both modes.
+        self.payload = payload
+        self.measured = MeasuredBandwidth()
+        self._persistent_payloads: Dict[str, Any] = {}
         # Admission cap for the speculative class (prefetch / warm-start):
         # at most this fraction of the slot pool may carry speculation.
         self.speculative_slot_frac = speculative_slot_frac
@@ -110,6 +134,14 @@ class TransferEngine:
     # -- lifecycle ------------------------------------------------------------
     def register(self, name: str, store: TieredStore) -> None:
         self.stores[name] = store
+
+    def put_persistent(self, obj: str, value: Any) -> None:
+        """Seed the persistent store's payload for ``obj`` (real mode): the
+        bytes a persistent-source fetch copies into the destination backend."""
+        self._persistent_payloads[obj] = value
+
+    def persistent_payload(self, obj: str) -> Optional[Any]:
+        return self._persistent_payloads.get(obj)
 
     def deregister(self, name: str) -> None:
         self.stores.pop(name, None)
@@ -148,8 +180,12 @@ class TransferEngine:
         """Abort an in-flight copy: free its bandwidth and withdraw the
         early-admitted placeholder from the destination's tier stack.
 
-        Bytes already counted against the source at start stay counted (the
-        partial read happened); ``preempted_bytes`` tracks the waste."""
+        The source and destination-NIC load (omega) engaged at start is
+        released here, but no bytes are credited to the resources'
+        ``bytes_served`` (that happens only when ``drain`` completes a
+        flight).  The engine's ``stats.bytes_from_*`` counted at start stay
+        counted — the partial read happened — and ``preempted_bytes``
+        tracks the waste."""
         key = (dest, obj)
         tr = self._inflight.pop(key, None)
         if tr is None:
@@ -333,7 +369,44 @@ class TransferEngine:
             self.stats.bytes_from_peers += size_bytes
         if admit:
             dst_store.admit(obj, size_bytes, start_tier=admit_tier)
+        if self.payload == "real":
+            self._move_payload(tr, dst_store)
         return tr
+
+    def _move_payload(self, tr: Transfer, dst_store: TieredStore) -> None:
+        """Real mode: copy the object's actual bytes from the chosen source
+        into the destination's payload backend, wall-clock timed.
+
+        Placeholder-tolerant at every hole — no destination backend, no
+        bytes at the source, object not (yet) resident at the destination
+        (pass-through, or a batched drain that replays admissions itself) —
+        so mixed modeled/real fleets stay legal; the holes are counted
+        (``stats.placeholder_fetches``), never silent.  The modeled
+        ``copy_time`` already charged on ``tr`` is untouched: measurement
+        must not perturb decisions.
+        """
+        backend = dst_store.payload
+        dst_tier = dst_store.tier_of(tr.obj)
+        if backend is None or dst_tier is None:
+            self.stats.placeholder_fetches += 1
+            return
+        t0 = _time.perf_counter()
+        if tr.source == PERSISTENT:
+            src_label, value = PERSISTENT, self._persistent_payloads.get(tr.obj)
+        else:
+            peer = self.stores.get(tr.source[len("peer:"):])
+            pb = peer.payload if peer is not None else None
+            src_label = "peer"
+            value = pb.get(tr.obj) if pb is not None else None
+        if value is None:
+            self.stats.placeholder_fetches += 1
+            return
+        backend.put(tr.obj, value, dst_tier)
+        dt = _time.perf_counter() - t0
+        nbytes = backend.nbytes(tr.obj)
+        self.measured.record(src_label, dst_tier, nbytes, dt)
+        self.stats.payload_moves += 1
+        self.stats.payload_bytes_moved += nbytes
 
     def _pick_source(
         self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore,

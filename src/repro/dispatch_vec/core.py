@@ -37,6 +37,16 @@ The incremental plane never needs it in steady state — it exists for
 bootstrap-from-snapshot, consistency verification, and the benchmark's
 kernel-vs-numpy comparison.
 
+``attach_device_mirror()`` adds the accelerator-resident shadow of ``Sw``
+(``device_mirror.DeviceScoreMirror``): presence deltas flowing through
+``_bump`` are enqueued as CoherenceBus-shaped batches and applied per flush
+epoch as one rank-K ``Sw += mult @ delta`` through the incremental Pallas
+kernel (``kernels.dispatch_score.dispatch_score_update``), with row/executor
+lifecycle events repaired from the host copy.  The numpy ``_Sw`` stays
+decision-authoritative; the mirror exists so device-side consumers (the
+real payload plane's placement pricing) read scores without a host
+round-trip, and its ``verify()`` is exact in the dyadic tier-weight regime.
+
 Decision equivalence (the ``bench_dispatch_vec`` gate and the property tests
 in ``tests/test_dispatch_vec.py`` assert bit-identical assignment sequences
 against the reference on seeded streams, all five policies x tier weights x
@@ -82,6 +92,7 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 f"(got {type(self.index).__name__}); use CentralizedIndex or "
                 "ShardedIndex")
         self.score_backend = score_backend
+        self._mirror = None             # attach_device_mirror() installs
         # -- object columns --------------------------------------------------
         o_cap = 256
         self._obj_col: Dict[str, int] = {}
@@ -206,6 +217,8 @@ class VectorizedDispatcher(DataAwareDispatcher):
             self._Sb[rows, erow] += db * mult
         if dw:
             self._Sw[rows, erow] += dw * mult
+            if self._mirror is not None:
+                self._mirror.record_delta(col, erow, dw)
 
     def _on_index_event(self, op: str, file: str, executor: str,
                         tier: Optional[str]) -> None:
@@ -279,6 +292,8 @@ class VectorizedDispatcher(DataAwareDispatcher):
         self._Sb[:, erow] = 0
         self._Sw[:, erow] = 0.0
         self._erow_free.append(erow)
+        if self._mirror is not None:
+            self._mirror.record_col_dirty(erow)
 
     # ---------------------------------------------------------------- queue
     def submit(self, item: Any) -> None:
@@ -298,6 +313,8 @@ class VectorizedDispatcher(DataAwareDispatcher):
             self._Sb[old_row, :] = 0
             self._Sw[old_row, :] = 0.0
             self._irow_free.append(old_row)
+            if self._mirror is not None:
+                self._mirror.record_row_dirty(old_row)
         super().submit(item)
         objs = self._objects(item)
         n = len(objs)
@@ -316,6 +333,8 @@ class VectorizedDispatcher(DataAwareDispatcher):
             self._row_cols[row, :n] = cols
             self._Sb[row, :] = self._presence[:, cols].sum(axis=1, dtype=np.int32)
             self._Sw[row, :] = self._presence_w[:, cols].sum(axis=1)
+        if self._mirror is not None:
+            self._mirror.record_row_dirty(row)
 
     def _remove_from_queue(self, item: Any) -> None:
         key = self._key(item)
@@ -331,6 +350,8 @@ class VectorizedDispatcher(DataAwareDispatcher):
         self._Sb[row, :] = 0
         self._Sw[row, :] = 0.0
         self._irow_free.append(row)
+        if self._mirror is not None:
+            self._mirror.record_row_dirty(row)
         for c in set(cols):
             obj = self._col_obj[c]
             if obj is not None:
@@ -416,20 +437,46 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 out.append(self._assign(next(iter(self._free)), self._head()))
             return out
         cache_mode = self._cache_mode()   # constant while states stay PENDING
+        ov_seed: Optional[Dict[int, set]] = None
         if not cache_mode:
+            # GCC mid-drain utilization flip: the looped serving path marks
+            # each assignment BUSY before its next decision, so utilization
+            # rises by 1/n per assignment and can cross the GCC threshold
+            # inside the drain.  Busy only grows, so the flip point is
+            # deterministic: with admission emulation the compute-mode loop
+            # stops there and the remainder drains through the cache scan
+            # (seeded with this loop's would-be admissions); without it
+            # every decision past the flip is counted stale — never silent.
+            gcc = self.policy == "good-cache-compute"
+            n_exec = len(self._executors)
+            busy = sum(1 for s in self._executors.values()
+                       if s == ExecutorState.BUSY)
+            if gcc and self.emulate_batch_admissions:
+                ov_seed = {}
             while self._queue and self._free and (limit is None or len(out) < limit):
+                if gcc and n_exec and \
+                        (busy + len(out)) / n_exec >= self.cpu_util_threshold:
+                    if ov_seed is not None:
+                        cache_mode = True       # emulated mid-drain flip
+                        break
+                    self.stats.batch_stale_decisions += 1
                 self.stats.decisions += 1
                 head = self._head()
                 row = self._item_row[self._key(head)]
-                out.append(self._assign(self._choose_executor(row), head))
-            return out
+                name = self._choose_executor(row)
+                if ov_seed is not None:
+                    self._ov_record(ov_seed, name, row)
+                out.append(self._assign(name, head))
+            if not cache_mode:
+                return out
         if not self._queue or not self._free:
             return out
         if not self._scan_dirty and self._idx_version_seen == self.index.version:
             self.stats.decisions += 1     # the memoized failing call
             self.stats.delayed += 1
             return out
-        out.extend(self._cache_scan(limit=limit, batch=True))
+        rest = None if limit is None else limit - len(out)
+        out.extend(self._cache_scan(limit=rest, batch=True, ov_init=ov_seed))
         if self._queue and self._free and (limit is None or len(out) < limit):
             # The terminal emulated call completed a full failed scan.
             self.stats.decisions += 1
@@ -437,7 +484,21 @@ class VectorizedDispatcher(DataAwareDispatcher):
             self._idx_version_seen = self.index.version
         return out
 
-    def _cache_scan(self, limit: Optional[int], batch: bool) -> List[Tuple[str, Any]]:
+    def _ov_record(self, ov: Dict[int, set], name: str, r: int) -> None:
+        """Record an assignment's would-be admissions into the batch-scan
+        overlay: every demanded column the executor does not already hold
+        would land in its store before the looped path's next decision."""
+        erow = self._exec_row[name]
+        for c in self._row_cols[r, :int(self._row_nobj[r])].tolist():
+            if not self._presence[erow, c]:
+                s = ov.get(c)
+                if s is None:
+                    s = ov[c] = set()
+                s.add(name)
+
+    def _cache_scan(self, limit: Optional[int], batch: bool,
+                    ov_init: Optional[Dict[int, set]] = None,
+                    ) -> List[Tuple[str, Any]]:
         """Window scan for the delaying policies (MCH / GCC-above-threshold).
 
         Emulates the reference per-call scan; in batch mode the scan
@@ -452,7 +513,10 @@ class VectorizedDispatcher(DataAwareDispatcher):
         the tier floor satisfied) and never enter the python loop — under a
         deep backlog of affinity-delayed requests (the serving saturation
         regime) the loop body runs only for the <= F items that actually
-        produce assignments, plus the occasional lazy argmax repair.
+        produce assignments.  Row-max staleness after an assignment consumes
+        a free column is fixed by a vectorized *group* repair at the
+        assignment (all remaining rows pointing at the consumed column in
+        one pass), never per visited item.
         """
         free_names, free_rows = self._free_arrays()
         F = len(free_names)
@@ -498,27 +562,53 @@ class VectorizedDispatcher(DataAwareDispatcher):
         extra_delayed = 0           # argmax-repaired items that became delayed
         scan_end = n                # first position the emulated scan never saw
         name_to_fcol = {nm: i for i, nm in enumerate(free_names)}
+        nv = int(visit.size)
+        vpos = 0
+        # Batch-scan admission overlay (column id -> executors assigned work
+        # naming it this scan that do not already hold it): the looped
+        # serving path admits each assignment's objects before the next
+        # decision; the overlay tracks that evolution so a diverging branch
+        # is counted (stats.batch_stale_decisions) or — with admission
+        # emulation on — replayed bit-exactly (stats.batch_emulated_decisions).
+        ov: Optional[Dict[int, set]] = (
+            ov_init if ov_init is not None else {}) if batch else None
+        ov_top_ok = floor_on and self.tier_weights is not None and \
+            max(self.tier_weights.values()) >= self.gcc_delay_tier_floor
 
         def assign(i: int, name: str) -> None:
             nonlocal n_active
             if batch:
                 self.stats.decisions += 1  # one emulated call per assignment
+            if ov is not None:
+                # Record before _assign releases the item's row (and with it
+                # the _row_cols slice the overlay needs).
+                self._ov_record(ov, name, int(rows[i]))
             out.append(self._assign(name, self._queue[keys[i]]))
-            active[name_to_fcol[name]] = False
+            fcol = name_to_fcol[name]
+            active[fcol] = False
             n_active -= 1
+            # Group-repair the row max of every not-yet-visited item whose
+            # cached argmax column was just consumed: one vectorized pass
+            # per assignment instead of a lazy nonzero+argmax pair at each
+            # subsequent visit (under saturation most of the window points
+            # at the same hot executor, so the lazy repair fired on nearly
+            # every visited item — the cost that made the batched drain
+            # lose to the looped path at large streams).
+            if n_active > 0 and vpos + 1 < nv:
+                rem = visit[vpos + 1:]
+                need = rem[argw[rem] == fcol]
+                if need.size:
+                    live = np.nonzero(active)[0]
+                    sub = SwF[np.ix_(need, live)]
+                    am = sub.argmax(axis=1)
+                    maxw[need] = sub[np.arange(need.size), am]
+                    argw[need] = live[am]
 
-        for i in visit:
-            i = int(i)
+        while vpos < nv:
+            i = int(visit[vpos])
             if delayed_ahead[i] + extra_delayed >= self.window or n_active == 0:
                 scan_end = i
                 break
-            # Lazily repair the row max if its argmax column was consumed.
-            if not active[argw[i]]:
-                live = np.nonzero(active)[0]
-                vals = SwF[i, live]
-                j = int(vals.argmax())
-                maxw[i] = vals[j]
-                argw[i] = live[j]
             if maxw[i] > 0.0:
                 ties_mask = active & (SwF[i] == maxw[i])
                 ties = np.nonzero(ties_mask)[0]
@@ -529,17 +619,51 @@ class VectorizedDispatcher(DataAwareDispatcher):
                         int(rows[i]), [free_names[t] for t in ties],
                         [int(free_rows[t]) for t in ties])
                 assign(i, name)
-            elif not anylive[i]:
-                assign(i, next(iter(self._free)))
-            elif gcc and rep[i] < self.max_replicas:
-                # Preferred holder(s) busy (score consumed by the repair).
-                assign(i, next(iter(self._free)))
-            elif gcc and floor_on and not worthwhile[i]:
-                self.stats.tier_floor_bypasses += 1
-                assign(i, next(iter(self._free)))
             else:
-                extra_delayed += 1
-                continue
+                # No free holder scores the item: the tail decision, frozen
+                # first, then re-evaluated under the admission overlay
+                # (which can only convert an assign into a delay).
+                if not anylive[i]:
+                    dec = "assign"
+                elif not gcc:
+                    dec = "delay"
+                elif rep[i] < self.max_replicas:
+                    # Preferred holder(s) busy (score consumed by a repair).
+                    dec = "assign"
+                elif floor_on and not worthwhile[i]:
+                    dec = "bypass"
+                else:
+                    dec = "delay"
+                if ov and dec != "delay":
+                    r = int(rows[i])
+                    ocols = self._row_cols[r, :int(self._row_nobj[r])].tolist()
+                    if any(c in ov for c in ocols):
+                        if not gcc:
+                            eff = "delay"
+                        else:
+                            rep_eff = max(int(self._col_holders[c])
+                                          + len(ov.get(c, ())) for c in ocols)
+                            if rep_eff < self.max_replicas:
+                                eff = "assign"
+                            elif floor_on and not (worthwhile[i] or ov_top_ok):
+                                eff = "bypass"
+                            else:
+                                eff = "delay"
+                        if eff != dec:
+                            if self.emulate_batch_admissions:
+                                self.stats.batch_emulated_decisions += 1
+                                dec = eff
+                            else:
+                                self.stats.batch_stale_decisions += 1
+                if dec == "assign":
+                    assign(i, next(iter(self._free)))
+                elif dec == "bypass":
+                    self.stats.tier_floor_bypasses += 1
+                    assign(i, next(iter(self._free)))
+                else:
+                    extra_delayed += 1
+                    vpos += 1
+                    continue
             if n_active == 0 or (limit is not None and len(out) >= limit):
                 # The emulated call returned at this assignment (limit), or
                 # the next emulated call returns at the no-free check before
@@ -547,6 +671,7 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 # (delayed stats stay reference-exact on both ends).
                 scan_end = i + 1
                 break
+            vpos += 1
         self.stats.delayed += min(
             self.window, int(delayed_ahead[min(scan_end, n)]) + extra_delayed)
         return out
@@ -647,7 +772,25 @@ class VectorizedDispatcher(DataAwareDispatcher):
         if apply:
             self._Sb[rows] = np.rint(sb).astype(np.int32)
             self._Sw[rows] = sw.astype(np.float64)
+            if self._mirror is not None:
+                self._mirror.reseed()
         return sb, sw
+
+    # -------------------------------------------------------- device mirror
+    def attach_device_mirror(self, backend: str = "numpy",
+                             interpret: bool = True):
+        """Install (or replace) the device-resident Sw shadow.
+
+        ``backend="pallas"`` holds a jax device array updated per flush
+        epoch by the rank-K Pallas kernel (``interpret=True`` = CPU
+        correctness path); ``backend="numpy"`` is the jax-free float32
+        shadow tier-1 tests drive.  Returns the mirror; the caller owns the
+        flush cadence (one flush per drain epoch is the intended shape).
+        """
+        from .device_mirror import DeviceScoreMirror
+        self._mirror = DeviceScoreMirror(self, backend=backend,
+                                         interpret=interpret)
+        return self._mirror
 
     def check_consistency(self) -> bool:
         """Exact invariant check: the incremental Sb/Sw equal the one-shot

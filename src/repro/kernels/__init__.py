@@ -5,7 +5,12 @@ ops.py (jit'd public wrapper), and ref.py (pure-jnp oracle).  Kernels target
 TPU; tests run them with interpret=True on CPU against the oracle.
 """
 
-from .dispatch_score.ops import dispatch_scores, dispatch_scores_ref
+from .dispatch_score.ops import (
+    dispatch_score_update,
+    dispatch_score_update_ref,
+    dispatch_scores,
+    dispatch_scores_ref,
+)
 from .flash_attention.ops import attention_ref, flash_attention
 from .moe_gmm.ops import gmm_ref, moe_gmm
 from .rglru_scan.ops import rglru_ref, rglru_scan
@@ -13,6 +18,7 @@ from .rwkv6_scan.ops import wkv6, wkv6_ref
 
 __all__ = [
     "dispatch_scores", "dispatch_scores_ref",
+    "dispatch_score_update", "dispatch_score_update_ref",
     "flash_attention", "attention_ref",
     "moe_gmm", "gmm_ref",
     "rglru_scan", "rglru_ref",

@@ -12,6 +12,15 @@ accumulator never leaves VMEM until the last O-step writes it out.
 Grid (W/BW, E/BE, O/BO), contraction sequential (minor); both operands are
 zero-padded to tile multiples by the wrapper (zeros contribute nothing to
 the overlap scores, so padding is semantically free).
+
+The *update* kernel is the incremental companion: instead of rebuilding
+S = demand @ presence.T from scratch, it applies a coalesced epoch of K
+presence deltas as one rank-K accumulate S' = S + mult @ delta — the same
+tiled contraction, but the accumulator initializes from the resident score
+tile rather than zero, so the score matrix never leaves the device between
+epochs.  K is tiny next to O (an epoch's churn vs every cached object
+anywhere), which is the whole point: the device mirror pays O(W*K*E) per
+epoch instead of O(W*O*E) per rebuild.
 """
 
 from __future__ import annotations
@@ -40,6 +49,63 @@ def _score_kernel(d_ref, p_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(ik == n_k - 1)
     def _flush():
         o_ref[...] = acc_ref[...]
+
+
+def _update_kernel(s_ref, m_ref, d_ref, o_ref, acc_ref, *, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        # Rank-K accumulate: seed the VMEM accumulator from the resident
+        # scores instead of zeros — the only difference from _score_kernel.
+        acc_ref[...] = s_ref[...]
+
+    acc_ref[...] += jax.lax.dot_general(
+        m_ref[...], d_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),   # contract delta axis
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def dispatch_score_update_pallas(scores, mult, delta, *, block_w: int = 256,
+                                 block_e: int = 128, block_k: int = 128,
+                                 interpret: bool = False):
+    """scores: [W, E]; mult: [W, K]; delta: [K, E] -> scores + mult @ delta.
+
+    Shapes must already be padded to the block sizes (see ops.py).  The
+    scores tile streams in once per (i, j) output tile (read only at the
+    first K-step); mult/delta tiles stream per K-step.
+    """
+    W, E = scores.shape
+    W2, K = mult.shape
+    K2, E2 = delta.shape
+    assert W == W2 and E == E2 and K == K2
+    assert W % block_w == 0 and E % block_e == 0 and K % block_k == 0
+    grid = (W // block_w, E // block_e, K // block_k)
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except (AttributeError, TypeError):
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_update_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, block_e), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_w, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_e), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_w, block_e), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((W, E), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_w, block_e), jnp.float32)],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(scores, mult, delta)
 
 
 def dispatch_score_pallas(demand, presence, *, block_w: int = 256,

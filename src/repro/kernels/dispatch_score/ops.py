@@ -7,8 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .dispatch_score import dispatch_score_pallas
-from .ref import dispatch_scores_ref
+from .dispatch_score import dispatch_score_pallas, dispatch_score_update_pallas
+from .ref import dispatch_score_update_ref, dispatch_scores_ref
 
 
 def _pad_to(x, m0, m1):
@@ -42,4 +42,36 @@ def dispatch_scores(demand, presence, *, block_w=256, block_e=128,
     return out[:W, :E]
 
 
-__all__ = ["dispatch_scores", "dispatch_scores_ref"]
+@functools.partial(jax.jit, static_argnames=("block_w", "block_e", "block_k",
+                                             "interpret"))
+def dispatch_score_update(scores, mult, delta, *, block_w=256, block_e=128,
+                          block_k=128, interpret=False):
+    """Rank-K score update scores + mult @ delta on the resident matrix.
+
+    scores: [W, E]; mult: [W, K]; delta: [K, E].  Pads every operand to tile
+    multiples (zero delta rows / mult columns contribute nothing) and slices
+    the [W, E] result back.  K == 0 is a no-op (the epoch had no presence
+    churn).  ``interpret=True`` runs the Pallas kernel in interpreter mode
+    (CPU correctness path).
+    """
+    assert scores.ndim == mult.ndim == delta.ndim == 2
+    assert scores.shape == (mult.shape[0], delta.shape[1])
+    assert mult.shape[1] == delta.shape[0]
+    W, E = scores.shape
+    K = mult.shape[1]
+    if K == 0:
+        return scores.astype(jnp.float32)
+    block_w = min(block_w, max(8, W))
+    block_e = min(block_e, max(8, E))
+    block_k = min(block_k, max(128, K))
+    s = _pad_to(scores.astype(jnp.float32), block_w, block_e)
+    m = _pad_to(mult.astype(jnp.float32), block_w, block_k)
+    d = _pad_to(delta.astype(jnp.float32), block_k, block_e)
+    out = dispatch_score_update_pallas(s, m, d, block_w=block_w,
+                                       block_e=block_e, block_k=block_k,
+                                       interpret=interpret)
+    return out[:W, :E]
+
+
+__all__ = ["dispatch_scores", "dispatch_scores_ref",
+           "dispatch_score_update", "dispatch_score_update_ref"]

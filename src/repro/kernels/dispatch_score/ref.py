@@ -14,3 +14,19 @@ def dispatch_scores_ref(demand, presence):
     """
     return jnp.dot(demand.astype(jnp.float32), presence.astype(jnp.float32).T,
                    preferred_element_type=jnp.float32)
+
+
+def dispatch_score_update_ref(scores, mult, delta):
+    """Incremental rank-K score update S' = S + mult @ delta in float32.
+
+    scores: [W, E]  resident score matrix (device copy of Sw)
+    mult:   [W, K]  per-item multiplicity of each delta's object column
+    delta:  [K, E]  per-delta executor weight change (one-hot rows x dw)
+    returns [W, E]  updated scores
+
+    One presence event (object, executor, dw) is a rank-1 term; a coalesced
+    epoch of K events is the rank-K product.
+    """
+    return scores.astype(jnp.float32) + jnp.dot(
+        mult.astype(jnp.float32), delta.astype(jnp.float32),
+        preferred_element_type=jnp.float32)

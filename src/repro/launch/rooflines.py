@@ -11,5 +11,11 @@ rooflines describe one machine.
 PEAK_FLOPS = 197e12         # bf16
 HBM_BW = 819e9              # bytes/s
 ICI_BW = 50e9               # bytes/s per link
+# Local-disk class for the KV spill tier: pinned at 1/25 of the interconnect
+# (the nominal 2 GB/s NVMe read at the reference 50 GB/s link), the same
+# ratio ``diffusion.tiers.roofline_tier_bw`` has always used.  Named here so
+# the measured-payload sanity check (``diffusion.payload``) and the tier
+# calibration read one constant.
+DISK_BW = ICI_BW / 25.0     # bytes/s
 
-__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "DISK_BW"]

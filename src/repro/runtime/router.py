@@ -191,6 +191,15 @@ class RouterStats:
     hits_by_tier: Dict[str, int] = field(default_factory=dict)
     restore_time_s: float = 0.0          # total swap-in + transfer time charged
     bytes_from_persistent: float = 0.0   # flat mode only; engine tracks tiered
+    # Batched-drain staleness the dispatcher's admission overlay cannot see:
+    # replay-time events where the store's actual evolution diverged from
+    # the frozen snapshot the batch was decided on — a hit whose object an
+    # earlier admission's eviction cascade dropped, a dup-miss re-dropped
+    # before its replay position, or an assumed admission that failed to
+    # stick (pass-through object).  Counted, never silent; the dispatcher's
+    # own counters live in ``dispatcher.stats.batch_stale_decisions`` /
+    # ``batch_emulated_decisions``.
+    stale_snapshot_drops: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -249,6 +258,12 @@ class CacheAffinityRouter:
         transfer_max_inflight: int = 8,
         use_peer_transfer: bool = True,
         prefetch_depth: int = 0,
+        # ---- payload plane: "real" makes the transfer engine copy actual
+        # bytes through the stores' payload backends (built per replica by
+        # payload_factory(name)); "modeled" keeps bookkeeping-only transfers.
+        # Decisions are bit-identical in both modes.  ----
+        transfer_payload: str = "modeled",
+        payload_factory: Optional[Callable[[str], Any]] = None,
         # ---- replica warm-start (index plane): clone this many of the
         # hottest index objects into each DRP-provisioned replica ----
         warmstart_objects: int = 0,
@@ -286,11 +301,19 @@ class CacheAffinityRouter:
             index=self.index,
             tier_weights=tier_weights,
             gcc_delay_tier_floor=gcc_delay_tier_floor,
+            # Batched drains decide against a frozen snapshot; the looped
+            # path admits each assignment's objects before the next
+            # decision.  Emulating that admission evolution inside the scan
+            # keeps batched ≡ looped bit-exact even when the replication
+            # cap binds mid-burst (stats.batch_emulated_decisions counts
+            # every decision the overlay corrected).
+            emulate_batch_admissions=batch_drain,
         )
         self.replica_capacity_bytes = replica_capacity_bytes
         self.eviction = eviction
         self.object_size_fn = object_size_fn
         self.drp = provisioner
+        self._payload_factory = payload_factory
         self._spawn = spawn_replica
         self._stop = stop_replica
         self._on_object_evicted = on_object_evicted
@@ -306,7 +329,8 @@ class CacheAffinityRouter:
                 "persistent.link", persistent_bw_bytes_per_s)
             self.engine = TransferEngine(
                 self.index, self.persistent_link,
-                max_inflight=transfer_max_inflight, use_peers=use_peer_transfer)
+                max_inflight=transfer_max_inflight, use_peers=use_peer_transfer,
+                payload=transfer_payload)
             if prefetch_depth > 0:
                 self.prefetcher = Prefetcher(self.engine, object_size_fn)
         self.prefetch_depth = prefetch_depth
@@ -345,6 +369,8 @@ class CacheAffinityRouter:
             tier_specs=self.tier_specs,
             nic_bw_bytes_per_s=self.nic_bw_bytes_per_s,
         )
+        if self._payload_factory is not None:
+            self.stores[name].tiers.attach_payload(self._payload_factory(name))
         if self.engine is not None:
             self.engine.register(name, self.stores[name].tiers)
         self.dispatcher.register_executor(name)
@@ -474,6 +500,10 @@ class CacheAffinityRouter:
             request.restore_cost_s += cost
             self.stats.restore_time_s += cost
             store.admit(obj, tr.size_bytes)
+            if obj not in store.tiers:
+                # Pass-through (fits no tier): the scan's admission overlay
+                # assumed this copy would exist — count the staleness.
+                self.stats.stale_snapshot_drops += 1
 
         for replica, request in pairs:
             store = self.stores[replica]
@@ -484,6 +514,7 @@ class CacheAffinityRouter:
                         continue
                     # Cascade-dropped before its replay position: reverse
                     # the hit accounting and take the looped path's miss.
+                    self.stats.stale_snapshot_drops += 1
                     request.hits -= 1
                     self.stats.object_hits -= 1
                     self.stats.hits_by_tier[tier] -= 1
@@ -504,6 +535,7 @@ class CacheAffinityRouter:
                     # it again in between, then it is a fresh miss).
                     found = store.access(obj)
                     if found is None:
+                        self.stats.stale_snapshot_drops += 1
                         request.hits -= 1
                         self.stats.object_hits -= 1
                         request.misses += 1

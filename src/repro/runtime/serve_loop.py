@@ -25,6 +25,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.provisioner import DynamicResourceProvisioner
+from ..diffusion.payload import MeasuredBandwidth, RealPayload
 from ..diffusion.tiers import TierSpec
 from ..models import cache_init, init_params, make_decode_step, make_prefill_step
 from ..models.sharding import ShardCtx
@@ -112,12 +113,26 @@ class DiffusionServer:
         # per-batch delta and misses admitted through one batched transfer
         # resolution.  Best paired with dispatcher_impl="vectorized".
         batch_drain: bool = False,
+        # payload="real" runs the physical plane under the tier bookkeeping:
+        # each session's KV pytree is registered with its replica store's
+        # RealPayload backend, HBM evictions demote the actual tensors to
+        # host numpy (and to verified spill files when spill_dir names a
+        # disk tier home), and a lower-tier prefix hit swaps the real bytes
+        # back onto the device — wall-clock timed into ``self.measured``
+        # (the dram->hbm edge is the measured swap-in bandwidth).  Routing
+        # decisions are identical to payload="modeled" by construction.
+        payload: str = "modeled",
+        spill_dir: Optional[str] = None,
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
+        if payload not in ("modeled", "real"):
+            raise ValueError(f"payload must be 'modeled' or 'real': {payload!r}")
         self.cfg = cfg
         self.ctx = ctx
         self.cap = cache_cap
+        self.payload_mode = payload
+        self.measured = MeasuredBandwidth()
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         shape = ShapeConfig("serve", "prefill", cache_cap, 1)
         self.prefill_fn = jax.jit(make_prefill_step(cfg, shape, ctx))
@@ -151,6 +166,11 @@ class DiffusionServer:
             on_object_evicted=self._on_session_evicted,
             dispatcher_impl=dispatcher_impl,
             batch_drain=batch_drain,
+            transfer_payload=payload if tier_specs is not None else "modeled",
+            payload_factory=(
+                (lambda name: RealPayload(name=name, measured=self.measured,
+                                          spill_dir=spill_dir))
+                if payload == "real" and tier_specs is not None else None),
         )
         self.batch_drain = batch_drain
         self.replicas: Dict[str, Replica] = {}
@@ -182,6 +202,10 @@ class DiffusionServer:
             self.router.remove_replica(name)
             del self.replicas[name]
         self.router.drp.registered = n
+
+    def swap_in_bandwidth(self) -> float:
+        """Measured dram->hbm swap-in bytes/s (0.0 until one happened)."""
+        return self.measured.bandwidth("dram", "hbm")
 
     # ------------------------------------------------------------ submit
     def submit(self, session_id: str, prompt: np.ndarray,
@@ -219,10 +243,21 @@ class DiffusionServer:
             # swap-in — far cheaper than a prefill replay, but not free.
             found = routed.sources.get(session_object(sid))
             store = self.router.stores.get(replica.name)
+            caches, pos = state["caches"], state["pos"]
             if store is not None and found is not None and found != store.top_tier:
                 self.stats.swap_ins += 1
+                if self.payload_mode == "real":
+                    # The routing access already promoted the object, which
+                    # made the backend device_put the demoted host copy back
+                    # into HBM (timed into self.measured).  Decode must
+                    # continue on those swapped-in tensors, not on stale
+                    # device refs the eviction left behind.
+                    backend = store.tiers.payload
+                    restored = (backend.value(session_object(sid))
+                                if backend is not None else None)
+                    if restored is not None:
+                        caches = restored
             self.stats.restore_time_s += routed.restore_cost_s
-            caches, pos = state["caches"], state["pos"]
         else:
             # "copy from persistent storage": replay the prompt (prefill).
             self.stats.prefills += 1
@@ -253,6 +288,16 @@ class DiffusionServer:
             store = self.router.stores.get(replica.name)
             if store is not None and store.contains(session_object(sid)):
                 replica.sessions[sid] = {"caches": caches, "pos": pos}
+                if self.payload_mode == "real":
+                    backend = store.tiers.payload
+                    if backend is not None:
+                        # Register/refresh the session's actual KV bytes in
+                        # the physical plane so later demotions/swap-ins
+                        # move real tensors (an untimed working-copy update,
+                        # not a tier move).
+                        obj = session_object(sid)
+                        backend.put(obj, caches,
+                                    store.tier_of(obj) or store.top_tier)
             else:
                 replica.sessions.pop(sid, None)
         req.finish_time_s = time.time()

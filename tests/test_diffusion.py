@@ -1,6 +1,7 @@
 """Tiered data-diffusion plane tests: tiers, transfers, prefetch, routing."""
 
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dispatch import DataAwareDispatcher
 from repro.core.index import CentralizedIndex
@@ -326,6 +327,66 @@ class TestTransferPriority:
         assert pf.stats.preempted == 1
         pf.on_access("r0", "spec", now=5.0)   # stale entry already cleaned
         assert pf.stats.useful == 0 and pf.stats.late == 0
+
+
+# --------------------------------------------- bandwidth-engagement leak audit
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=99),   # op selector
+              st.integers(min_value=0, max_value=7),    # object id
+              st.integers(min_value=0, max_value=2),    # destination store
+              st.floats(min_value=0.0, max_value=5.0)), # time advance
+    min_size=1, max_size=80),
+    max_inflight=st.integers(min_value=1, max_value=4))
+def test_transfer_engine_no_omega_leak(ops, max_inflight):
+    """Random fetch / cancel / drain / batch interleavings — through slot
+    queueing, speculative refusal, and demand preemption — must return
+    every engaged bandwidth unit: after the final drain ``slots_in_use``
+    and every resource's omega are zero and no engagement entry survives.
+
+    This is the lazy-release audit: ``fetch`` engages (source, dest-NIC)
+    pairs that only ``drain``/``cancel`` give back, so any path that drops
+    a flight without ending its engagement shows up as residual omega."""
+    idx = CentralizedIndex()
+    link = BandwidthResource("gpfs", 10.0)
+    eng = TransferEngine(idx, link, max_inflight=max_inflight,
+                         speculative_slot_frac=0.5)
+    stores = {}
+    for i in range(3):
+        st_ = TieredStore(f"r{i}", [TierSpec("hbm", 40.0),
+                                    TierSpec("dram", 80.0, 50.0)],
+                          index=idx, nic_bw_bytes_per_s=100.0)
+        stores[f"r{i}"] = st_
+        eng.register(f"r{i}", st_)
+    now = 0.0
+    for op, o, d, dt in ops:
+        now += dt
+        obj, dest = f"o{o}", f"r{d}"
+        if op < 40:
+            eng.fetch(obj, 10.0, dest, now)
+        elif op < 55:
+            eng.fetch(obj, 10.0, dest, now, kind="prefetch")
+        elif op < 65:
+            eng.fetch(obj, 10.0, dest, now, kind="warmstart",
+                      allow_queue=True)
+        elif op < 80:
+            eng.cancel(dest, obj)
+        elif op < 90:
+            eng.drain(now)
+        else:
+            eng.fetch_batch([(obj, 10.0, dest),
+                             (f"o{(o + 1) % 8}", 10.0, f"r{(d + 1) % 3}")],
+                            now)
+        # the engagement map mirrors the inflight map exactly, always
+        assert set(eng._engaged) == set(eng._inflight)
+        assert link.omega >= 0
+    eng.drain(now=1e12)              # every flight's ready time has passed
+    assert eng.slots_in_use() == 0
+    assert not eng._engaged
+    assert link.omega == 0
+    for st_ in stores.values():
+        assert st_.nic.omega == 0
+    assert eng.stats.started == eng.stats.completed + eng.stats.preempted
 
 
 # ------------------------------------------------- tier-aware dispatch scoring

@@ -1,0 +1,179 @@
+"""Device-resident Sw mirror: coalesced delta epochs vs the host matrix.
+
+The numpy-backend tests are tier-1 (jax-free float32 shadow); the pallas
+backend (rank-K ``dispatch_score_update`` kernel, interpret mode) rides the
+``slow`` marker with the other kernel suites.  Everything asserts the
+parity contract: after any flush, the mirror equals the authoritative host
+``_Sw`` exactly — tier weights here are dyadic, so float32 is exact.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.index import CentralizedIndex
+from repro.core.task import ExecutorState
+from repro.dispatch_vec import VectorizedDispatcher
+
+TIER_WEIGHTS = {"hbm": 1.0, "dram": 0.5, "disk": 0.25}
+TIERS = ("hbm", "dram", "disk")
+
+
+class Item:
+    def __init__(self, key, objects):
+        self.key = key
+        self.objects = tuple(objects)
+
+
+def build(n_exec=4, window=16, policy="max-cache-hit"):
+    idx = CentralizedIndex()
+    d = VectorizedDispatcher(policy=policy, window=window,
+                             cpu_util_threshold=0.8, max_replicas=4,
+                             index=idx, tier_weights=TIER_WEIGHTS)
+    for e in range(n_exec):
+        d.register_executor(f"e{e}")
+    return d, idx
+
+
+def soup(d, idx, seed, steps, mirror, flush_every=7):
+    """Seeded op soup (submits, drains, pickups, index churn, deregisters)
+    with periodic mirror flushes; verifies exactness at every flush."""
+    rng = random.Random(seed)
+    objs = [f"o{i}" for i in range(24)]
+    execs = [e for e in d._exec_row]
+    busy, nextkey = [], 0
+    for step in range(steps):
+        op = rng.random()
+        if op < 0.40:
+            d.submit(Item(nextkey, [rng.choice(objs)
+                                    for _ in range(rng.randint(1, 4))]))
+            nextkey += 1
+            for name, _item in d.notify_batch():
+                d.set_state(name, ExecutorState.BUSY)
+                busy.append(name)
+        elif op < 0.55 and busy:
+            e = busy.pop(rng.randrange(len(busy)))
+            if e not in d._executors:
+                continue
+            d.set_state(e, ExecutorState.PENDING)
+            if d.pick_items(e, m=rng.choice([1, 2])):
+                busy.append(e)
+        elif op < 0.80:
+            idx.add(rng.choice(objs), rng.choice(execs),
+                    tier=rng.choice(TIERS))
+        else:
+            idx.remove(rng.choice(objs), rng.choice(execs))
+        if step % flush_every == flush_every - 1:
+            mirror.flush()
+            assert mirror.verify() == 0.0, f"step {step}"
+    mirror.flush()
+    assert mirror.verify() == 0.0
+
+
+class TestNumpyMirror:
+    def test_delta_coalescing_is_additive(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        d.submit(Item(0, ["oA", "oA", "oB"]))
+        idx.add("oA", "e0", tier="dram")      # +0.5 at (oA, e0)
+        idx.add("oA", "e0", tier="hbm")       # tier event: +0.5 more
+        assert m.pending() == 1               # one (col, erow) key
+        assert m.stats.deltas_enqueued == 2
+        assert m.stats.deltas_coalesced == 1
+        m.flush()
+        assert m.verify() == 0.0
+        # oA has multiplicity 2 in the item: score reflects 2 * 1.0 + 0
+        erow = d._exec_row["e0"]
+        row = next(iter(d._item_row.values()))
+        assert m.scores()[row, erow] == 2.0
+
+    def test_presence_churn_epochs(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        soup(d, idx, seed=11, steps=120, mirror=m)
+        assert m.stats.rank_k_applied > 0
+        assert m.stats.flushes > 0
+
+    def test_row_lifecycle_repaired_from_host(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        idx.add("oA", "e1", tier="hbm")
+        d.submit(Item(0, ["oA"]))
+        d.submit(Item(1, ["oA", "oB"]))
+        m.flush()
+        assert m.verify() == 0.0
+        # delta lands, then the demanding row is recycled before the flush:
+        idx.add("oB", "e2", tier="disk")
+        for name, _item in d.notify_batch():    # dequeues rows
+            d.set_state(name, ExecutorState.BUSY)
+        m.flush()
+        assert m.verify() == 0.0
+        assert m.stats.rows_overwritten > 0
+
+    def test_deregister_column_repaired(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        idx.add("oA", "e1", tier="hbm")
+        d.submit(Item(0, ["oA"]))
+        m.flush()
+        d.deregister_executor("e1")
+        m.flush()
+        assert m.verify() == 0.0
+        assert m.stats.cols_overwritten > 0
+
+    def test_capacity_growth_reseeds(self):
+        d, idx = build(n_exec=2)
+        m = d.attach_device_mirror(backend="numpy")
+        seeds_before = m.stats.reseeds
+        # Blow past the executor-row capacity (16) to force _grow_execs.
+        for e in range(2, 40):
+            d.register_executor(f"e{e}")
+        idx.add("oA", "e30", tier="hbm")
+        d.submit(Item(0, ["oA"]))
+        m.flush()
+        assert m.stats.reseeds > seeds_before
+        assert m.verify() == 0.0
+        # And the epoch after the reseed applies incrementally again.
+        idx.add("oA", "e31", tier="dram")
+        m.flush()
+        assert m.verify() == 0.0
+
+    def test_bulk_rebuild_reseeds(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        idx.add("oA", "e0", tier="hbm")
+        d.submit(Item(0, ["oA"]))
+        before = m.stats.reseeds
+        d.rebuild_scores(apply=True)
+        assert m.stats.reseeds == before + 1
+        assert m.verify() == 0.0
+
+    def test_flush_returns_epoch_size_and_drains(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="numpy")
+        d.submit(Item(0, ["oA", "oB"]))
+        idx.add("oA", "e0", tier="hbm")
+        idx.add("oB", "e1", tier="dram")
+        assert m.pending() == 2
+        assert m.flush() == 2
+        assert m.pending() == 0
+        assert m.flush() == 0                 # empty epoch is a cheap no-op
+
+
+@pytest.mark.slow
+class TestPallasMirror:
+    def test_pallas_backend_matches_host(self):
+        d, idx = build()
+        m = d.attach_device_mirror(backend="pallas", interpret=True)
+        soup(d, idx, seed=23, steps=60, mirror=m, flush_every=9)
+        assert m.stats.rank_k_applied > 0
+
+    def test_pallas_and_numpy_mirrors_agree(self):
+        logs = []
+        for backend in ("numpy", "pallas"):
+            d, idx = build()
+            m = d.attach_device_mirror(backend=backend, interpret=True)
+            soup(d, idx, seed=5, steps=40, mirror=m, flush_every=5)
+            logs.append(m.scores().copy())
+        np.testing.assert_array_equal(logs[0], logs[1])

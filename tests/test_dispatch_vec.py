@@ -134,6 +134,84 @@ def test_notify_batch_equals_notify_loop(seed, policy):
     assert logs[0] == logs[1]
 
 
+# --------------------------------------- batched-drain admission emulation
+@pytest.mark.parametrize("cls", [DataAwareDispatcher, VectorizedDispatcher])
+@pytest.mark.parametrize("emulate", [False, True])
+def test_batch_admission_emulation_mch_cold_duplicates(cls, emulate):
+    """Two queued items for the same cold object under max-cache-hit: the
+    per-decision loop (with synchronous admission, as the serving router
+    runs it) assigns the first and delays the second behind the now-live
+    copy.  The frozen batch snapshot assigns both; with emulation the
+    second is replayed as a delay and counted in
+    ``batch_emulated_decisions``, without it the stale branch is still
+    counted (``batch_stale_decisions``) — divergence is never silent."""
+    d = cls(policy="max-cache-hit", window=8, index=CentralizedIndex(),
+            emulate_batch_admissions=emulate)
+    for i in range(2):
+        d.register_executor(f"e{i}")
+    d.submit(Item(0, ("x",)))
+    d.submit(Item(1, ("x",)))
+    pairs = d.notify_batch()
+    if emulate:
+        assert [(i.key, e) for e, i in pairs] == [(0, "e0")]
+        assert d.stats.batch_emulated_decisions == 1
+        assert d.stats.batch_stale_decisions == 0
+    else:
+        assert [(i.key, e) for e, i in pairs] == [(0, "e0"), (1, "e1")]
+        assert d.stats.batch_stale_decisions == 1
+        assert d.stats.batch_emulated_decisions == 0
+
+
+@pytest.mark.parametrize("cls", [DataAwareDispatcher, VectorizedDispatcher])
+def test_batch_admission_emulation_gcc_replication_cap(cls):
+    """GCC with max_replicas=2 and three items for one cold object: the
+    emulated drain assigns two (in-batch copies count toward the cap) and
+    delays the third, exactly as the looped-with-admissions path would."""
+    d = cls(policy="good-cache-compute", window=8, max_replicas=2,
+            cpu_util_threshold=0.0,      # always above: stay in cache mode
+            index=CentralizedIndex(), emulate_batch_admissions=True)
+    for i in range(3):
+        d.register_executor(f"e{i}")
+    for k in range(3):
+        d.submit(Item(k, ("x",)))
+    pairs = d.notify_batch()
+    assert [(i.key, e) for e, i in pairs] == [(0, "e0"), (1, "e1")]
+    assert d.stats.batch_emulated_decisions == 1
+    assert d.stats.delayed >= 1
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       policy=st.sampled_from(POLICIES),
+       emulate=st.sampled_from([False, True]))
+def test_batch_emulation_reference_equals_vectorized(seed, policy, emulate):
+    """Both engines agree on emulated/stale branches: identical pair logs
+    and identical divergence counters on random cold-heavy bursts."""
+    logs, counters = [], []
+    for cls in (DataAwareDispatcher, VectorizedDispatcher):
+        rng = random.Random(seed)
+        idx = CentralizedIndex()
+        d = cls(policy=policy, window=16, max_replicas=rng.choice([1, 2]),
+                cpu_util_threshold=0.0,  # GCC stays in cache mode
+                index=idx, tier_weights=TIER_WEIGHTS,
+                gcc_delay_tier_floor=rng.choice([0.0, 0.5]),
+                emulate_batch_admissions=emulate)
+        for i in range(4):
+            d.register_executor(f"e{i}")
+        objs = [f"o{i}" for i in range(6)]
+        for _ in range(4):
+            idx.add(rng.choice(objs), f"e{rng.randrange(4)}", tier="dram")
+        for k in range(12):
+            d.submit(Item(k, [rng.choice(objs)]))
+        pairs = d.notify_batch()
+        logs.append([(i.key, e) for e, i in pairs])
+        counters.append((d.stats.batch_emulated_decisions,
+                         d.stats.batch_stale_decisions,
+                         d.stats.decisions, d.stats.tier_floor_bypasses))
+    assert logs[0] == logs[1]
+    assert counters[0] == counters[1]
+
+
 # --------------------------------------------------- unit: incremental state
 def make_vec(policy="good-cache-compute", tiered=False, **kw):
     d = VectorizedDispatcher(policy=policy,

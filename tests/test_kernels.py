@@ -10,6 +10,8 @@ pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps: ~1 min on CPU
 
 from repro.kernels import (
     attention_ref,
+    dispatch_score_update,
+    dispatch_score_update_ref,
     dispatch_scores,
     dispatch_scores_ref,
     flash_attention,
@@ -45,6 +47,41 @@ def test_dispatch_scores_matches_ref(W, O, E, density):
     # exactness against float64 numpy for the dyadic-weight regime
     exact = demand.astype(np.float64) @ presence.astype(np.float64).T
     assert np.abs(np.asarray(out, np.float64) - exact).max() == 0.0
+
+
+@pytest.mark.parametrize(
+    "W,K,E",
+    [
+        (16, 3, 4),              # tiny epoch: padding on every axis
+        (256, 128, 64),          # one full contraction tile
+        (300, 200, 96),          # ragged: multi-tile K + padding
+    ],
+)
+def test_dispatch_score_update_matches_ref(W, K, E):
+    rng = np.random.default_rng(7)
+    scores = (rng.integers(0, 8, (W, E))
+              * rng.choice([1.0, 0.5, 0.25], size=(W, E))).astype(np.float32)
+    mult = rng.integers(0, 3, (W, K)).astype(np.float32)
+    # one-hot executor rows scaled by dyadic dw (incl. negatives: removals)
+    delta = np.zeros((K, E), dtype=np.float32)
+    delta[np.arange(K), rng.integers(0, E, K)] = rng.choice(
+        [1.0, 0.5, 0.25, -0.5, -1.0], size=K)
+    out = dispatch_score_update(jnp.asarray(scores), jnp.asarray(mult),
+                                jnp.asarray(delta), interpret=True)
+    ref = dispatch_score_update_ref(jnp.asarray(scores), jnp.asarray(mult),
+                                    jnp.asarray(delta))
+    assert out.shape == (W, E)
+    assert rel_err(out, ref) < 1e-6
+    # exactness against float64 numpy for the dyadic-weight regime
+    exact = scores.astype(np.float64) + mult.astype(np.float64) @ delta
+    assert np.abs(np.asarray(out, np.float64) - exact).max() == 0.0
+
+
+def test_dispatch_score_update_empty_epoch_is_identity():
+    scores = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    out = dispatch_score_update(scores, jnp.zeros((3, 0)), jnp.zeros((0, 4)),
+                                interpret=True)
+    assert np.array_equal(np.asarray(out), np.asarray(scores))
 
 
 def rel_err(a, b):
