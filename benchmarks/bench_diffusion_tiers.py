@@ -111,22 +111,30 @@ def run_config(
                 heapq.heappush(events, (done_at, eseq, "done", req))
                 eseq += 1
 
-    s = router.stats
-    accesses = max(1, s.object_hits + s.object_misses)
-    eng = router.engine.stats if router.engine is not None else None
+    # Everything below reads the islands' snapshot() protocol — the same
+    # views the metrics registry publishes as ``router.*`` / ``transfer.*``
+    # / ``prefetch.*`` — instead of cherry-picking dataclass fields.
+    rs = router.stats.snapshot()
+    eng = (router.engine.stats.snapshot()
+           if router.engine is not None else {})
+    accesses = max(1.0, rs["object_hits"] + rs["object_misses"])
     out = {
-        "completed": float(s.completed),
-        "hit_rate": s.hit_rate,
+        "completed": rs["completed"],
+        "hit_rate": rs["hit_rate"],
         "persistent_bytes": router.persistent_bytes_read(),
-        "peer_bytes": eng.bytes_from_peers if eng else 0.0,
-        "p50_ms": s.p50_s * 1e3,
-        "p99_ms": s.p99_s * 1e3,
+        "peer_bytes": eng.get("bytes.peer", 0.0),
+        # Window-only percentiles (exact over the reservoir's retained
+        # samples, blind to older ones) — labeled win_* accordingly.
+        "win_p50_ms": rs["latency.win_p50_s"] * 1e3,
+        "win_p99_ms": rs["latency.win_p99_s"] * 1e3,
     }
-    for tier, hits in sorted(s.hits_by_tier.items()):
-        out[f"hit_rate_{tier}"] = hits / accesses
+    for key, hits in sorted(rs.items()):
+        if key.startswith("hits_by_tier."):
+            out[f"hit_rate_{key[len('hits_by_tier.'):]}"] = hits / accesses
     if router.prefetcher is not None:
-        out["prefetch_useful"] = float(router.prefetcher.stats.useful)
-        out["prefetch_late"] = float(router.prefetcher.stats.late)
+        ps = router.prefetcher.stats.snapshot()
+        out["prefetch_useful"] = ps["useful"]
+        out["prefetch_late"] = ps["late"]
     return out
 
 
@@ -294,11 +302,12 @@ def main(num_requests: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]
         )
         rows.append((
             f"diffusion_tiers/{label}",
-            r["p50_ms"] * 1e3,   # us_per_call column = p50 in microseconds
+            r["win_p50_ms"] * 1e3,   # us_per_call column = win-p50 in us
             f"hit_rate={r['hit_rate']:.2f};{tiers};"
             f"persistent_MB={r['persistent_bytes'] / 1e6:.1f};"
             f"peer_MB={r['peer_bytes'] / 1e6:.1f};"
-            f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+            f"win_p50_ms={r['win_p50_ms']:.2f};"
+            f"win_p99_ms={r['win_p99_ms']:.2f};"
             f"completed={int(r['completed'])}",
         ))
     flat, tiered = results["flat"], results["tiered"]
@@ -312,7 +321,8 @@ def main(num_requests: int = 4000, seed: int = 0) -> List[Tuple[str, float, str]
         0.0,
         f"ok={verdict};persistent_MB_saved={saved / 1e6:.1f};"
         f"tiered_hit={tiered['hit_rate']:.2f};flat_hit={flat['hit_rate']:.2f};"
-        f"tiered_p99_ms={tiered['p99_ms']:.2f};flat_p99_ms={flat['p99_ms']:.2f}",
+        f"tiered_win_p99_ms={tiered['win_p99_ms']:.2f};"
+        f"flat_win_p99_ms={flat['win_p99_ms']:.2f}",
     ))
     rows.extend(des_rows(num_requests))
     rows.extend(coherence_sweep_rows(num_requests))

@@ -5,7 +5,10 @@ used to be overwritten per run, losing the across-PR trajectory.
 ``append_history`` keeps the latest run's fields at the top level (so
 existing consumers keep working) and appends every run — timestamped — to a
 ``history`` list.  A pre-history file's snapshot is migrated into the list
-so the first tracked point is not lost.
+so the first tracked point is not lost.  The list is capped (oldest entries
+dropped first) and every document carries a ``schema`` version shared with
+the observability registry, so downstream consumers can detect format
+drift instead of guessing.
 """
 
 from __future__ import annotations
@@ -14,6 +17,15 @@ import json
 import random
 from datetime import datetime, timezone
 from typing import Any, Dict, List
+
+try:
+    from repro.obs.registry import SCHEMA_VERSION
+except ImportError:             # bench run without src on the path yet
+    SCHEMA_VERSION = 1
+
+#: Oldest history entries beyond this are dropped; ~200 runs is years of
+#: per-PR trajectory while keeping BENCH_*.json reviewable in a diff.
+MAX_HISTORY = 200
 
 
 def zipf_sessions(n: int, sessions: int, alpha: float, seed: int) -> List[int]:
@@ -26,8 +38,14 @@ def zipf_sessions(n: int, sessions: int, alpha: float, seed: int) -> List[int]:
     return rng.choices(range(sessions), weights=weights, k=n)
 
 
-def append_history(path: str, entry: Dict[str, Any]) -> Dict[str, Any]:
-    """Write ``entry`` (+ ``ts``) as the latest run, appending to history."""
+def append_history(path: str, entry: Dict[str, Any],
+                   max_history: int = MAX_HISTORY) -> Dict[str, Any]:
+    """Write ``entry`` (+ ``ts``) as the latest run, appending to history.
+
+    The history list keeps at most ``max_history`` entries (oldest dropped
+    first) and the document is stamped with ``schema`` so format changes
+    are detectable downstream.
+    """
     entry = dict(entry)
     entry["ts"] = datetime.now(timezone.utc).isoformat(timespec="seconds")
     try:
@@ -41,7 +59,10 @@ def append_history(path: str, entry: Dict[str, Any]) -> Dict[str, Any]:
         if doc:                     # migrate a pre-history snapshot
             history.append(dict(doc, migrated=True))
     history.append(entry)
+    if max_history > 0:
+        history = history[-max_history:]
     out = dict(entry)
+    out["schema"] = SCHEMA_VERSION
     out["history"] = history
     with open(path, "w") as f:
         json.dump(out, f, indent=1)

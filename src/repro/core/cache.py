@@ -38,6 +38,11 @@ class CacheStats:
     def hit_rate(self) -> float:
         return self.hits / self.accesses if self.accesses else 0.0
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``cache.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self, props=("accesses", "hit_rate"))
+
 
 class Cache:
     """Byte-capacity-bounded object cache with pluggable eviction.

@@ -85,6 +85,11 @@ class SchedulerStats:
     batch_stale_decisions: int = 0
     batch_emulated_decisions: int = 0
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``dispatch.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self)
+
 
 class DataAwareDispatcher:
     """Falkon-style dispatcher over a centralized cache-location index.

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from typing import Union
 
 from ..diffusion.tiers import TieredStore, TierSpec
+from ..obs.registry import nearest_rank_index
 from .index import CentralizedIndex, ShardedIndex
 from .provisioner import DynamicResourceProvisioner, ProvisionRequest
 from .scheduler import make_scheduler
@@ -212,7 +213,11 @@ class SimResult:
         )
         if not rates:
             return 0.0
-        return rates[min(len(rates) - 1, int(pct * len(rates)))]
+        # Nearest-rank percentile: ceil(pct*n)-1, clamped.  The old
+        # int(pct*n) was one rank too high whenever pct*n landed on an
+        # integer (p50 of 2 samples picked the max) — exactly the
+        # small-sample regime short DES runs produce.
+        return rates[nearest_rank_index(pct, len(rates))]
 
     def speedup_vs(self, baseline_wet_s: float) -> float:
         return baseline_wet_s / self.wet_s if self.wet_s > 0 else 0.0
@@ -234,7 +239,8 @@ class Simulator:
     """Event-driven executor of a Workload under a SimConfig + profile."""
 
     # event kinds ordered deterministically via a sequence counter
-    def __init__(self, workload: Workload, config: SimConfig, profile: HardwareProfile):
+    def __init__(self, workload: Workload, config: SimConfig,
+                 profile: HardwareProfile, obs=None):
         self.wl = workload
         self.cfg = config
         self.hw = profile
@@ -307,6 +313,18 @@ class Simulator:
         self._series: List[TimePoint] = []
         self.interval_completion: Dict[int, float] = {}
         self._failures = sorted(config.failures)
+        # Observability plane (repro.obs): when wired, every sample tick
+        # publishes the DES's live state as gauges in the same dotted
+        # namespace the serving path uses (perf.*, coherence.stale_claims)
+        # and records a structural "sample" span — so sim-vs-live curves
+        # overlay without any renaming.  None (default) is a no-op stub.
+        self.obs = obs
+        self._obs_trace = obs.trace if obs is not None else None
+        if obs is not None:
+            obs.registry.register_source("dispatch", self.sched.stats)
+            bus = getattr(self.index, "bus", None)
+            if bus is not None and hasattr(bus, "stats"):
+                obs.registry.register_source("coherence_bus", bus.stats)
 
     # ----------------------------------------------------------- event infra
     def _push(self, t: float, kind: str, payload: object = None) -> None:
@@ -642,6 +660,21 @@ class Simulator:
         for k in self._bucket_bytes:
             self.bytes_by_source[k] += self._bucket_bytes[k]
             self._bucket_bytes[k] = 0.0
+        if self.obs is not None:
+            tp = self._series[-1]
+            reg = self.obs.registry
+            dt = max(1e-9, self.cfg.sample_dt_s)
+            reg.gauge("perf.throughput_gbps").set(
+                sum(tp.throughput_bytes.values()) * 8 / 1e9 / dt)
+            reg.gauge("perf.utilization").set(tp.cpu_util)
+            reg.gauge("perf.queue_len").set(float(tp.queue_len))
+            reg.gauge("perf.nodes").set(float(tp.nodes))
+            reg.gauge("perf.completed").set(float(self.done))
+            reg.gauge("coherence.stale_claims").set(float(self.stale_claims))
+            reg.gauge("coherence.misdirected").set(float(self.misdirected))
+            if self._obs_trace is not None:
+                self._obs_trace.record(-1, "sample", "sample", t, t,
+                                       detail=(tp.queue_len, tp.nodes))
 
     def _result(self) -> SimResult:
         self._account(self.now)
@@ -673,6 +706,7 @@ class Simulator:
 
 
 def run_experiment(
-    workload: Workload, config: SimConfig, profile: Optional[HardwareProfile] = None
+    workload: Workload, config: SimConfig,
+    profile: Optional[HardwareProfile] = None, obs=None,
 ) -> SimResult:
-    return Simulator(workload, config, profile or teragrid_profile()).run()
+    return Simulator(workload, config, profile or teragrid_profile(), obs=obs).run()

@@ -45,6 +45,11 @@ class PrefetchStats:
     throttled: int = 0              # warms withheld/refused under load
     preempted: int = 0              # in-flight warms killed by demand
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``prefetch.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self)
+
 
 class Prefetcher:
     """Warms an executor's tier stack for upcoming work's objects."""

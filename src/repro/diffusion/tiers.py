@@ -182,6 +182,25 @@ class TieredStore:
         self.deferred_applied = 0       # intents that became relocations
         self.deferred_coalesced = 0     # intents absorbed by a later intent
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view of this store's counters.
+
+        The router aggregates these across every replica under the
+        ``tiers.`` prefix (one fleet-wide sum; per-store attribution stays
+        on the store itself)."""
+        out: Dict[str, float] = {
+            "objects": float(len(self._tier_idx)),
+            "misses": float(self.misses),
+            "promotions": float(self.promotions),
+            "demotions": float(self.demotions),
+            "drops": float(self.drops),
+            "deferred_applied": float(self.deferred_applied),
+            "deferred_coalesced": float(self.deferred_coalesced),
+        }
+        for tier, n in self.hits_by_tier.items():
+            out[f"hits_by_tier.{tier}"] = float(n)
+        return out
+
     def attach_payload(self, backend) -> None:
         """Wire a payload backend after construction (the router builds its
         stores internally); already-resident objects stay placeholders."""

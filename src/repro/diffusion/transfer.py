@@ -94,6 +94,16 @@ class TransferStats:
     payload_bytes_moved: float = 0.0
     placeholder_fetches: int = 0    # real-mode fetches with no bytes to move
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``transfer.`` when adopted); the
+        byte counters surface under their stable wire names
+        ``transfer.bytes.peer`` / ``transfer.bytes.persistent``."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self, rename={
+            "bytes_from_peers": "bytes.peer",
+            "bytes_from_persistent": "bytes.persistent",
+        })
+
 
 class TransferEngine:
     """Source selection + transfer accounting over a set of tiered stores."""
@@ -130,6 +140,10 @@ class TransferEngine:
         self._engaged: Dict[Tuple[str, str], List[Tuple[BandwidthResource, float]]] = {}
         self._cancel_listeners: List[Callable[[str, str, str], None]] = []
         self.stats = TransferStats()
+        # Observability hook (repro.obs.TraceBuffer or None): every started
+        # flight and real payload move records a structural span.  The
+        # router wires this when built with obs; None is a no-op stub.
+        self.trace = None
 
     # -- lifecycle ------------------------------------------------------------
     def register(self, name: str, store: TieredStore) -> None:
@@ -361,6 +375,11 @@ class TransferEngine:
         self._engaged[key] = [(src_res, size_bytes), (dst_store.nic, 0.0)]
         self.stats.started += 1
         self.stats.peak_inflight = max(self.stats.peak_inflight, len(self._inflight))
+        if self.trace is not None:
+            # Structural span: the modeled copy's time in the air.  Flights
+            # have no single owning request (dedup/speculation), so rid=-1.
+            self.trace.record(-1, obj, "flight", start, start + cost,
+                              dest, "", (source, kind, size_bytes))
         if source == PERSISTENT:
             self.stats.persistent_fetches += 1
             self.stats.bytes_from_persistent += size_bytes
@@ -407,6 +426,12 @@ class TransferEngine:
         self.measured.record(src_label, dst_tier, nbytes, dt)
         self.stats.payload_moves += 1
         self.stats.payload_bytes_moved += nbytes
+        if self.trace is not None:
+            # Structural span: the *measured* wall time of the real byte
+            # move, anchored at the flight's modeled start.
+            self.trace.record(-1, tr.obj, "payload", tr.start_s,
+                              tr.start_s + dt, tr.dest, "",
+                              (src_label, dst_tier, float(nbytes)))
 
     def _pick_source(
         self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore,

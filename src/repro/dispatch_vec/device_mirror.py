@@ -65,6 +65,11 @@ class MirrorStats:
         return (self.deltas_coalesced / self.deltas_enqueued
                 if self.deltas_enqueued else 0.0)
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``mirror.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self, props=("coalesce_rate",))
+
 
 class DeviceScoreMirror:
     """Accelerator-resident Sw shadow fed by coalesced delta epochs.

@@ -55,6 +55,11 @@ class CoherenceStats:
         """Amortization factor: 1.0 means per-op (flat-index behavior)."""
         return self.applied / self.batches if self.batches else 0.0
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``coherence.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self, props=("ops_per_batch",))
+
 
 class CoherenceBus:
     """Per-shard batched update queues with a shared delay model."""

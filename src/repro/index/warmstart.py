@@ -23,7 +23,7 @@ tier the live batches are using).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 __all__ = ["WarmStartReport", "WarmStartStats", "clone_hottest"]
 
@@ -60,6 +60,11 @@ class WarmStartStats:
         self.bytes_cloned += report.bytes_cloned
         self.skipped_cold += report.skipped_cold
         self.throttled += report.throttled
+
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``warmstart.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self)
 
 
 def clone_hottest(

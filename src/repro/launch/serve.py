@@ -46,34 +46,66 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--cache-cap", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="enable the observability plane and write metrics "
+                         "snapshots (metrics.json: live perf.performance_"
+                         "index / perf.speedup / per-interval utilization "
+                         "rows over every stats island), the span trace "
+                         "(trace.jsonl), and a Chrome-trace/Perfetto "
+                         "document (trace_chrome.json) into this directory")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="with --metrics-dir: also write an interim snapshot "
+                         "every N served requests (0 = final only)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    obs = None
+    if args.metrics_dir is not None:
+        from ..obs import Observability
+        obs = Observability(perf_interval_s=1.0)
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
                           min_replicas=args.min_replicas, cache_cap=args.cache_cap,
                           max_sessions=args.max_sessions,
                           host_cache_sessions=args.host_cache_sessions,
                           eviction=args.eviction,
                           dispatcher_impl=args.dispatcher,
-                          batch_drain=args.batch_drain)
+                          batch_drain=args.batch_drain,
+                          obs=obs)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
     sids = list(prompts)
     burst = max(1, args.batch_size) if args.batch_drain else 1
+    served = 0
     for i in range(args.requests):
         sid = sids[int(rng.integers(0, len(sids)))]
         srv.submit(sid, prompts[sid], max_new_tokens=args.new_tokens)
         if (i + 1) % burst == 0 or i + 1 == args.requests:
-            srv.step()
+            served += srv.step()
+            if (obs is not None and args.metrics_every > 0
+                    and served // args.metrics_every
+                    > (served - burst) // args.metrics_every):
+                obs.write_snapshot(args.metrics_dir,
+                                   tag=f"r{served:06d}")
     s, r = srv.stats, srv.router.stats
     print(f"served={s.served} prefix_hit={s.hit_rate:.0%} prefills={s.prefills} "
           f"swap_ins={s.swap_ins} decode_steps={s.decode_steps} "
           f"replicas={len(srv.replicas)} scale_ups={r.scale_ups} "
           f"avg_response={s.avg_response_s * 1e3:.1f}ms "
-          f"p50={r.p50_s * 1e3:.1f}ms p99={r.p99_s * 1e3:.1f}ms")
+          # window-only percentiles (exact over the latency reservoir's
+          # most recent samples, blind to older ones) — labeled as such.
+          f"win_p50={r.p50_s * 1e3:.1f}ms win_p99={r.p99_s * 1e3:.1f}ms")
+    if obs is not None:
+        paths = obs.write_snapshot(args.metrics_dir)
+        m = obs.collect_all()
+        print(f"perf_index={m.get('perf.performance_index', 0.0):.3g} "
+              f"speedup={m.get('perf.speedup', 0.0):.3f} "
+              f"utilization={m.get('perf.utilization', 0.0):.2f} "
+              f"spans={int(m.get('trace.recorded', 0))}")
+        print(f"metrics -> {paths['metrics']}")
+        print(f"trace   -> {paths['trace_chrome']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""Unified observability plane: metrics registry + trace spans + live perf.
+
+One ``Observability`` object per serving process, threaded through
+``DiffusionServer(obs=...)`` / ``CacheAffinityRouter(obs=...)`` /
+``Simulator(obs=...)``:
+
+  * ``obs.registry`` — the metrics namespace.  Every ``*Stats`` island is
+    adopted as a ``snapshot()`` source under its plane prefix
+    (``router.hit_rate``, ``transfer.bytes.peer``, ``dispatch.decisions``,
+    ``serve.prefix_hits`` …); nothing is copied or double-counted.
+  * ``obs.trace``    — the per-request span ring (``obs.trace``), exportable
+    as JSONL and Chrome-trace/Perfetto JSON.
+  * ``obs.perf``     — the live reducer for the paper's evaluation metrics
+    (``perf.performance_index``, ``perf.speedup``, per-interval throughput
+    and utilization rows), name-shared with the DES projection in
+    ``obs.perf.sim_perf_rows`` so sim-vs-live curves overlay.
+
+**Overhead contract**: obs is opt-in and ``obs=None`` (the default
+everywhere) is a no-op stub path — consumers hold ``trace = obs.trace if
+obs else None`` and guard each hook with one ``is not None`` test, so the
+disabled path allocates no span objects and performs no metric work
+(asserted by ``tests/test_obs.py``); the enabled path must cost <= 5% of
+``bench_serve_batch`` requests/sec (asserted as an ERROR row, measured
+overhead recorded in ``BENCH_serve.json``).
+
+``collect_all()`` is the one entry point that merges every adopted island;
+``write_snapshot(dir)`` dumps ``metrics.json`` (flat metrics + per-interval
+perf rows, schema-versioned) plus ``trace.jsonl`` and
+``trace_chrome.json`` — the artifacts ``repro.launch.serve --metrics-dir``
+emits and CI uploads next to the ``BENCH_*.json`` history.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from datetime import datetime, timezone
+from typing import Any, Dict, Optional
+
+from .perf import PerfMeter, sim_perf_rows, sim_perf_summary
+from .registry import (SCHEMA_VERSION, Counter, Gauge, MetricsRegistry,
+                       WindowedHistogram, nearest_rank_index, stats_snapshot)
+from .trace import PARITY_PHASES, TraceBuffer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "Observability",
+    "PARITY_PHASES",
+    "PerfMeter",
+    "SCHEMA_VERSION",
+    "TraceBuffer",
+    "WindowedHistogram",
+    "nearest_rank_index",
+    "sim_perf_rows",
+    "sim_perf_summary",
+    "stats_snapshot",
+]
+
+
+class Observability:
+    """Registry + tracer + perf reducer, wired together."""
+
+    def __init__(
+        self,
+        trace_maxlen: int = 65536,
+        perf_interval_s: float = 1.0,
+        baseline_service_s: Optional[float] = None,
+    ):
+        self.registry = MetricsRegistry()
+        self.trace = TraceBuffer(maxlen=trace_maxlen)
+        self.perf = PerfMeter(interval_s=perf_interval_s,
+                              baseline_service_s=baseline_service_s)
+        self.registry.register_source("perf", self.perf)
+        self.registry.register_source("trace", self.trace)
+
+    def collect_all(self) -> Dict[str, float]:
+        """Every adopted island + instrument, one flat dotted namespace."""
+        return self.registry.collect()
+
+    def write_snapshot(self, out_dir: str, tag: str = "") -> Dict[str, str]:
+        """Dump metrics + trace artifacts into ``out_dir``; returns paths."""
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        metrics_path = os.path.join(out_dir, f"metrics{suffix}.json")
+        jsonl_path = os.path.join(out_dir, f"trace{suffix}.jsonl")
+        chrome_path = os.path.join(out_dir, f"trace_chrome{suffix}.json")
+        doc = {
+            "schema_version": SCHEMA_VERSION,
+            "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+            "metrics": self.collect_all(),
+            "perf_intervals": self.perf.interval_rows(),
+        }
+        with open(metrics_path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        self.trace.to_jsonl(jsonl_path)
+        self.trace.write_chrome_trace(chrome_path)
+        return {"metrics": metrics_path, "trace_jsonl": jsonl_path,
+                "trace_chrome": chrome_path}

@@ -1,0 +1,181 @@
+"""Per-request trace spans: the causal story of one request, ring-buffered.
+
+A span is one completed phase of a request's life — recorded *once, at its
+end*, as a plain tuple (no open-span mutation on the hot path, no dict
+allocation per request; at ~10k requests/sec the serving path has a
+microsecond-scale budget per request for observability):
+
+    (seq, request_id, name, phase, parent, start_s, end_s, replica, detail)
+
+``request_id`` is the causal key: every span of one request carries it, so
+the propagation chain the batch plane needs — router enqueue → dispatch
+decision → tier-promotion replay → transfer flight → payload move →
+completion — reassembles by id.  ``parent`` is the *phase name* of the span
+this one is causally nested under ("request" ← "dispatch" ← "transfer"),
+which keeps edges stable across drain modes (batched span seq ordering
+differs from looped by design; names do not).  Batch-level spans that have
+no single owning request (the drain scan itself, the coalesced promotion
+replay, speculative flights) carry ``request_id = -1``.
+
+Phases split into two classes:
+
+  * **parity phases** (``PARITY_PHASES``): "request", "dispatch",
+    "transfer" — one span per request event in *both* drain modes, with
+    identical per-request hit/miss attribution.  ``parity_digest()``
+    canonicalizes exactly these, so ``bench_serve_batch`` can assert the
+    batched drain's span DAG ≡ the looped path's the same way it asserts
+    assignment logs.
+  * **structural phases**: "drain", "promote", "flight", "payload",
+    "sample" — artifacts of *how* the work was executed (a batched drain
+    coalesces promotions; speculative flights depend on queue timing).
+    Excluded from the digest, included in every export.
+
+Exports: ``to_jsonl()`` (one span dict per line) and ``to_chrome_trace()``
+(Chrome ``traceEvents`` / Perfetto-loadable JSON: complete "X" events with
+``tid`` = replica lane, so a batched drain renders as one visible wave
+across the replica lanes).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["PARITY_PHASES", "TraceBuffer"]
+
+PARITY_PHASES = ("request", "dispatch", "transfer")
+
+# Record layout indices (kept as a tuple for hot-path cheapness).
+_SEQ, _RID, _NAME, _PHASE, _PARENT, _T0, _T1, _REPLICA, _DETAIL = range(9)
+
+
+class TraceBuffer:
+    """Fixed-capacity ring of span records (oldest overwritten)."""
+
+    __slots__ = ("maxlen", "_buf", "_next", "_seq")
+
+    def __init__(self, maxlen: int = 65536):
+        self.maxlen = int(maxlen)
+        self._buf: List[Tuple] = []
+        self._next = 0
+        self._seq = 0           # lifetime span count (ids are unique)
+
+    def record(
+        self,
+        request_id: int,
+        name: str,
+        phase: str,
+        start_s: float,
+        end_s: float,
+        replica: str = "",
+        parent: str = "",
+        detail: Tuple = (),
+    ) -> int:
+        """Append one completed span; returns its sequence id."""
+        seq = self._seq
+        self._seq = seq + 1
+        rec = (seq, request_id, name, phase, parent, start_s, end_s,
+               replica, detail)
+        buf = self._buf
+        if len(buf) < self.maxlen:
+            buf.append(rec)
+        else:
+            self._next = nxt = self._next % self.maxlen
+            buf[nxt] = rec
+            self._next = nxt + 1
+        return seq
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def total(self) -> int:
+        """Lifetime spans recorded (>= len() once the ring wraps)."""
+        return self._seq
+
+    def spans(self) -> List[Dict[str, Any]]:
+        """Materialize the retained window as dicts, in record order."""
+        out = []
+        for rec in sorted(self._buf):        # seq order == causal record order
+            out.append({
+                "seq": rec[_SEQ],
+                "request_id": rec[_RID],
+                "name": rec[_NAME],
+                "phase": rec[_PHASE],
+                "parent": rec[_PARENT],
+                "start_s": rec[_T0],
+                "end_s": rec[_T1],
+                "replica": rec[_REPLICA],
+                "detail": list(rec[_DETAIL]),
+            })
+        return out
+
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view: volume counters only."""
+        return {"recorded": float(self._seq),
+                "retained": float(len(self._buf))}
+
+    # -- parity --------------------------------------------------------------
+    def parity_digest(self) -> Dict[int, Tuple]:
+        """Canonical per-request span DAG over the parity phases.
+
+        Maps ``request_id`` to a sorted tuple of
+        ``(phase, name, parent, replica, detail)`` — span counts, causal
+        edges (parent links), and the per-request hit/miss attribution each
+        span's detail carries.  Sequence ids and wall offsets are excluded:
+        a batched drain interleaves record order differently by design, but
+        the causal structure must be identical to the looped path's.
+        """
+        out: Dict[int, List[Tuple]] = {}
+        for rec in self._buf:
+            if rec[_RID] < 0 or rec[_PHASE] not in PARITY_PHASES:
+                continue
+            out.setdefault(rec[_RID], []).append(
+                (rec[_PHASE], rec[_NAME], rec[_PARENT], rec[_REPLICA],
+                 rec[_DETAIL]))
+        return {rid: tuple(sorted(entries)) for rid, entries in out.items()}
+
+    # -- exports -------------------------------------------------------------
+    def to_jsonl(self, path: str) -> int:
+        """One span dict per line; returns the number written."""
+        spans = self.spans()
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps(s) + "\n")
+        return len(spans)
+
+    def to_chrome_trace(self, time_origin_s: Optional[float] = None) -> Dict[str, Any]:
+        """Chrome ``chrome://tracing`` / Perfetto document.
+
+        Complete ("X") events on ``pid`` = phase class, ``tid`` = replica
+        lane (unattributed spans ride a lane named after their phase).
+        Timestamps are microseconds relative to the earliest span so
+        virtual-time traces load at t=0.
+        """
+        events = []
+        recs = sorted(self._buf)
+        if recs and time_origin_s is None:
+            time_origin_s = min(r[_T0] for r in recs)
+        for rec in recs:
+            dur_us = max(0.0, (rec[_T1] - rec[_T0]) * 1e6)
+            events.append({
+                "name": rec[_NAME],
+                "cat": rec[_PHASE],
+                "ph": "X",
+                "ts": (rec[_T0] - (time_origin_s or 0.0)) * 1e6,
+                "dur": dur_us,
+                "pid": 1,
+                "tid": rec[_REPLICA] or rec[_PHASE],
+                "args": {
+                    "request_id": rec[_RID],
+                    "parent": rec[_PARENT],
+                    "detail": list(rec[_DETAIL]),
+                },
+            })
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def write_chrome_trace(self, path: str) -> int:
+        doc = self.to_chrome_trace()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return len(doc["traceEvents"])

@@ -144,29 +144,60 @@ class Assignment:
 
 
 class LatencyReservoir:
-    """Fixed-size ring buffer of latency samples.
+    """Fixed-size ring buffer of latency samples + streaming lifetime stats.
 
     ``RouterStats.latencies_s`` grew one float per request forever — a leak
     at millions-of-users scale.  The reservoir keeps the most recent
-    ``maxlen`` samples; percentiles are exact within that window.  It is
-    list-like where the stats code needs it (append / len / iterate).
+    ``maxlen`` samples; **percentiles are exact within that window only**
+    (they forget everything older than ``maxlen`` samples — use
+    ``window_percentile_s`` / the ``win_``-prefixed metric names, which say
+    so).  The streaming aggregates — ``total`` / ``sum`` / ``min`` /
+    ``max`` / ``mean_s`` — are lifetime-true: they survive ring wraps, so
+    the mean latency of a long-running server is not silently truncated to
+    its last 4096 requests.  It is list-like where the stats code needs it
+    (append / len / iterate).
     """
 
-    __slots__ = ("maxlen", "_buf", "_next", "total")
+    __slots__ = ("maxlen", "_buf", "_next", "total", "sum", "min", "max")
 
     def __init__(self, maxlen: int = 4096):
         self.maxlen = int(maxlen)
         self._buf: List[float] = []
         self._next = 0          # ring write cursor once the buffer is full
         self.total = 0          # lifetime sample count (not window-bounded)
+        self.sum = 0.0          # lifetime sum: mean survives ring wraps
+        self.min = math.inf     # lifetime extremes
+        self.max = -math.inf
 
     def append(self, x: float) -> None:
         self.total += 1
+        self.sum += x
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
         if len(self._buf) < self.maxlen:
             self._buf.append(x)
         else:
             self._buf[self._next] = x
             self._next = (self._next + 1) % self.maxlen
+
+    @property
+    def mean_s(self) -> float:
+        """Lifetime mean (every sample ever appended, not just the window)."""
+        return self.sum / self.total if self.total else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        out = {
+            "count": float(self.total),
+            "sum_s": self.sum,
+            "mean_s": self.mean_s,
+            "window": float(len(self._buf)),
+        }
+        if self.total:
+            out["min_s"] = self.min
+            out["max_s"] = self.max
+        return out
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -206,20 +237,44 @@ class RouterStats:
         total = self.object_hits + self.object_misses
         return self.object_hits / total if total else 0.0
 
-    def latency_percentile_s(self, pct: float) -> float:
+    @property
+    def mean_latency_s(self) -> float:
+        """Lifetime mean response time (survives the reservoir's ring wraps)."""
+        return self.latencies_s.mean_s
+
+    def window_percentile_s(self, pct: float) -> float:
+        """Percentile over the reservoir's retained window ONLY.
+
+        Exact for the most recent ``latencies_s.maxlen`` samples and blind
+        to everything older — a *window* p99, not a lifetime p99.  Callers
+        printing it should label it ``win_p99`` (the benches do).
+        """
         if not self.latencies_s:
             return 0.0
         xs = sorted(self.latencies_s)
         i = min(len(xs) - 1, max(0, math.ceil(pct / 100.0 * len(xs)) - 1))
         return xs[i]
 
+    # Back-compat name; same window-only semantics as window_percentile_s.
+    latency_percentile_s = window_percentile_s
+
     @property
     def p50_s(self) -> float:
-        return self.latency_percentile_s(50.0)
+        return self.window_percentile_s(50.0)
 
     @property
     def p99_s(self) -> float:
-        return self.latency_percentile_s(99.0)
+        return self.window_percentile_s(99.0)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``router.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        out = stats_snapshot(self, props=("hit_rate", "mean_latency_s"))
+        for k, v in self.latencies_s.snapshot().items():
+            out[f"latency.{k}"] = v
+        out["latency.win_p50_s"] = self.window_percentile_s(50.0)
+        out["latency.win_p99_s"] = self.window_percentile_s(99.0)
+        return out
 
 
 class CacheAffinityRouter:
@@ -284,6 +339,13 @@ class CacheAffinityRouter:
         # every started request so seeded streams can assert batched ≡
         # looped assignment sequences (bench_serve_batch gates on it).
         log_assignments: bool = False,
+        # ---- observability plane (repro.obs): None (default) is the no-op
+        # stub path — no spans are allocated and no metric work runs.  An
+        # Observability instance adopts every stats island into its
+        # registry and records the per-request span chain (dispatch ->
+        # transfer -> completion, batch drains as structural spans) into
+        # its trace ring.  Decisions are identical either way.  ----
+        obs: Optional[Any] = None,
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
@@ -345,6 +407,43 @@ class CacheAffinityRouter:
         self._pending_provisions: List[ProvisionRequest] = []
         self._next_replica = 0
         self.stats = RouterStats()
+        # Observability stub path: hooks test `self._trace is not None` /
+        # `self._perf is not None` once each — with obs=None nothing is
+        # allocated or computed on the hot path (tests/test_obs.py asserts
+        # the disabled path records zero spans).
+        self.obs = obs
+        self._trace = obs.trace if obs is not None else None
+        self._perf = obs.perf if obs is not None else None
+        if obs is not None:
+            self._register_obs_sources(obs)
+
+    def _register_obs_sources(self, obs: Any) -> None:
+        """Adopt every stats island this router owns into the obs registry.
+
+        Each island stays authoritative (the registry reads ``snapshot()``
+        lazily at collect time); prefixes are the stable plane names
+        ``docs/metrics.md`` catalogues."""
+        reg = obs.registry
+        reg.register_source("router", self.stats)
+        reg.register_source("dispatch", self.dispatcher.stats)
+        reg.register_source("warmstart", self.warmstart)
+        if self.engine is not None:
+            reg.register_source("transfer", self.engine.stats)
+            self.engine.trace = self._trace     # flight/payload spans
+        if self.prefetcher is not None:
+            reg.register_source("prefetch", self.prefetcher.stats)
+        bus = getattr(self.index, "bus", None)
+        if bus is not None and hasattr(bus, "stats"):
+            reg.register_source("coherence", bus.stats)
+        reg.register_callable("tiers", self._tiers_snapshot)
+
+    def _tiers_snapshot(self) -> Dict[str, float]:
+        """Fleet aggregate of every replica store's per-tier counters."""
+        out: Dict[str, float] = {}
+        for store in self.stores.values():
+            for k, v in store.tiers.snapshot().items():
+                out[k] = out.get(k, 0.0) + v
+        return out
 
     @property
     def policy(self) -> str:
@@ -422,7 +521,16 @@ class CacheAffinityRouter:
             self.engine.drain(now)      # release bandwidth of landed copies
         self._complete_provisions(now)
         self._maybe_release(now)
-        return self._drain_notify(now)
+        out = self._drain_notify(now)
+        if self._perf is not None:
+            # Pool-utilization sample for the live resource integral
+            # (perf.resource_hours / perf.utilization), taken *after* the
+            # drain so the burst just assigned counts: non-free replicas
+            # (BUSY or PENDING-notified) are in use.
+            n = self.dispatcher.registered()
+            self._perf.on_sample(now, float(n),
+                                 float(n - self.dispatcher.free_count()))
+        return out
 
     def _drain_notify(self, now: float) -> List[Assignment]:
         if self.batch_drain:
@@ -463,9 +571,30 @@ class CacheAffinityRouter:
                     out.append(self._start(replica, [request], now,
                                            miss_sink=sink))
                 self._replay_batch(pairs, sink, now)
+                trace = self._trace
+                if trace is not None:
+                    # Dispatch spans are finalized *after* the replay so the
+                    # hit/miss attribution reflects stale-snapshot
+                    # conversions — identical to what the looped path
+                    # records at decision time (parity-asserted).
+                    for replica, request in pairs:
+                        srcs = request.sources
+                        trace.record(
+                            request.request_id, "dispatch", "dispatch",
+                            now, now, replica, "request",
+                            (request.hits, request.misses,
+                             tuple(sorted(srcs.items())) if srcs else ()))
+                    # Structural: the whole wave was one window scan.
+                    trace.record(-1, "drain", "drain", now, now,
+                                 detail=(len(pairs),))
             finally:
+                applied = 0
                 for store in self.stores.values():
-                    store.tiers.apply_promotions()
+                    applied += store.tiers.apply_promotions()
+                if self._trace is not None:
+                    # Structural: the coalesced tier-promotion replay.
+                    self._trace.record(-1, "promote_replay", "promote",
+                                       now, now, detail=(applied,))
 
     def _replay_batch(self, pairs: List[Tuple[str, RoutedRequest]],
                       sink: List[Tuple], now: float) -> None:
@@ -499,6 +628,10 @@ class CacheAffinityRouter:
             cost = tr.remaining_s(now)
             request.restore_cost_s += cost
             self.stats.restore_time_s += cost
+            if self._trace is not None:
+                self._trace.record(request.request_id, obj, "transfer",
+                                   now, now + cost, replica, "dispatch",
+                                   (tr.source,))
             store.admit(obj, tr.size_bytes)
             if obj not in store.tiers:
                 # Pass-through (fits no tier): the scan's admission overlay
@@ -575,6 +708,7 @@ class CacheAffinityRouter:
         self.dispatcher.set_state(replica, ExecutorState.BUSY)
         store = self.stores[replica]
         use_cache = self.dispatcher.provides_location_info()
+        trace = self._trace
         for request in requests:
             request.replica = replica
             request.dispatch_time_s = now
@@ -593,6 +727,10 @@ class CacheAffinityRouter:
                     request.misses += 1
                     self.stats.object_misses += 1
                     self.stats.bytes_from_persistent += self.object_size_fn(obj)
+                    if trace is not None:
+                        trace.record(request.request_id, obj, "transfer",
+                                     now, now, replica, "dispatch",
+                                     ("persistent",))
                     continue
                 # Intent logged by a *previous* access of this request (the
                 # epoch holds at most this one request's intents): checked
@@ -644,12 +782,31 @@ class CacheAffinityRouter:
                     elif self.engine is not None:
                         tr = self.engine.fetch(obj, size, replica, now)
                         request.sources[obj] = tr.source
-                        request.restore_cost_s += tr.remaining_s(now)
+                        cost = tr.remaining_s(now)
+                        request.restore_cost_s += cost
+                        if trace is not None:
+                            trace.record(request.request_id, obj, "transfer",
+                                         now, now + cost, replica,
+                                         "dispatch", (tr.source,))
                     else:
                         request.sources[obj] = "persistent"
                         self.stats.bytes_from_persistent += size
                         store.admit(obj, size)
+                        if trace is not None:
+                            trace.record(request.request_id, obj, "transfer",
+                                         now, now, replica, "dispatch",
+                                         ("persistent",))
             self.stats.restore_time_s += request.restore_cost_s
+            if trace is not None and miss_sink is None:
+                # Looped/pickup path: the decision is final here.  The
+                # batched drain records its dispatch spans after the replay
+                # instead, once stale-snapshot conversions are resolved —
+                # both modes carry identical attribution (parity-asserted).
+                srcs = request.sources
+                trace.record(request.request_id, "dispatch", "dispatch",
+                             now, now, replica, "request",
+                             (request.hits, request.misses,
+                              tuple(sorted(srcs.items())) if srcs else ()))
         # Warm this replica for the next queued work while it computes: the
         # transfer overlaps the batch it was just assigned (prefetch plane).
         # In the batched drain (miss_sink set) the warm is deferred to after
@@ -712,6 +869,14 @@ class CacheAffinityRouter:
         if request.response_time_s is not None:
             self.stats.latencies_s.append(request.response_time_s)
         replica = request.replica
+        if self._trace is not None:
+            # Root span: submit -> finish, closing the request's causal chain.
+            self._trace.record(request.request_id, "request", "request",
+                               request.submit_time_s, now, replica or "",
+                               "", (request.hits, request.misses))
+        if self._perf is not None and request.dispatch_time_s is not None:
+            self._perf.on_complete(now, now - request.dispatch_time_s,
+                                   request.hits, request.misses)
         if replica in self.stores:
             self.dispatcher.set_state(replica, ExecutorState.FREE)
             self._idle_since[replica] = now

@@ -86,6 +86,11 @@ class ServeStats:
     def avg_response_s(self) -> float:
         return float(np.mean(self.response_times)) if self.response_times else 0.0
 
+    def snapshot(self) -> Dict[str, float]:
+        """Registry-source view (prefixed ``serve.`` when adopted)."""
+        from ..obs.registry import stats_snapshot
+        return stats_snapshot(self, props=("hit_rate", "avg_response_s"))
+
 
 def session_object(sid: str) -> str:
     """Logical data-object name for a session's KV prefix state."""
@@ -123,6 +128,13 @@ class DiffusionServer:
         # decisions are identical to payload="modeled" by construction.
         payload: str = "modeled",
         spill_dir: Optional[str] = None,
+        # obs: a repro.obs.Observability instance threads the unified
+        # observability plane through the server — every stats island
+        # (serve/router/dispatch/transfer/tiers/...) is adopted into its
+        # registry, the request span chain lands in its trace ring, and the
+        # paper's live performance metrics accumulate in its PerfMeter.
+        # None (default) is the zero-overhead stub path.
+        obs: Optional[Any] = None,
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
@@ -171,6 +183,7 @@ class DiffusionServer:
                 (lambda name: RealPayload(name=name, measured=self.measured,
                                           spill_dir=spill_dir))
                 if payload == "real" and tier_specs is not None else None),
+            obs=obs,
         )
         self.batch_drain = batch_drain
         self.replicas: Dict[str, Replica] = {}
@@ -178,6 +191,10 @@ class DiffusionServer:
             self._build_replica(self.router.add_replica())
         self.router.drp.registered = min_replicas
         self.stats = ServeStats()
+        self.obs = obs
+        self._trace = obs.trace if obs is not None else None
+        if obs is not None:
+            obs.registry.register_source("serve", self.stats)
         self._ready: List[Assignment] = []
         self._req_id = 0
 
@@ -252,11 +269,20 @@ class DiffusionServer:
                     # into HBM (timed into self.measured).  Decode must
                     # continue on those swapped-in tensors, not on stale
                     # device refs the eviction left behind.
+                    t0 = time.time()
                     backend = store.tiers.payload
                     restored = (backend.value(session_object(sid))
                                 if backend is not None else None)
                     if restored is not None:
                         caches = restored
+                        if self._trace is not None:
+                            # Structural span: the real KV bytes returning
+                            # to the device for this request.
+                            self._trace.record(
+                                routed.request_id, session_object(sid),
+                                "payload", t0, time.time(),
+                                replica=replica.name, parent="dispatch",
+                                detail=(found, store.top_tier))
             self.stats.restore_time_s += routed.restore_cost_s
         else:
             # "copy from persistent storage": replay the prompt (prefill).

@@ -1,0 +1,392 @@
+"""Observability plane: metrics registry, trace spans, live perf metrics.
+
+Covers the plane's three contracts:
+
+  * **one namespace, no double counting** — every ``*Stats`` island exposes
+    ``snapshot()`` and the registry prefixes it lazily at collect time;
+  * **span parity** — the batched drain's request/dispatch/transfer spans
+    are causally identical to the looped path's on a seeded Zipf stream
+    (``TraceBuffer.parity_digest``), and the ``obs=None`` stub records
+    nothing at all;
+  * **window-only percentiles** — the latency reservoir's lifetime
+    aggregates survive ring wraps while percentiles are exact over the
+    retained window only; ``nearest_rank_index`` pins the off-by-one the
+    old ``int(pct * n)`` nearest-rank had at integral ranks.
+"""
+
+import json
+import math
+
+import pytest
+
+from repro.obs import Observability
+from repro.obs.perf import PerfMeter, sim_perf_rows, sim_perf_summary
+from repro.obs.registry import (
+    SCHEMA_VERSION,
+    MetricsRegistry,
+    WindowedHistogram,
+    nearest_rank_index,
+    stats_snapshot,
+)
+from repro.obs.trace import PARITY_PHASES, TraceBuffer
+from repro.diffusion.tiers import TierSpec
+from repro.runtime.router import (
+    CacheAffinityRouter,
+    LatencyReservoir,
+    RoutedRequest,
+    RouterStats,
+)
+
+BLOCK = 2.0 * 1024**2
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_instruments_collect():
+    reg = MetricsRegistry()
+    reg.counter("demo.events").inc()
+    reg.counter("demo.events").inc(2.0)      # get-or-create: same instrument
+    reg.gauge("demo.depth").set(7)
+    h = reg.histogram("demo.lat", maxlen=8)
+    for x in (1.0, 2.0, 3.0):
+        h.observe(x)
+    m = reg.collect()
+    assert m["demo.events"] == 3.0
+    assert m["demo.depth"] == 7.0
+    assert m["demo.lat.count"] == 3.0
+    assert m["demo.lat.mean"] == 2.0
+    assert m["demo.lat.win_p50"] == 2.0
+
+
+def test_registry_sources_are_lazy_and_prefixed():
+    class Island:
+        def __init__(self):
+            self.n = 0
+
+        def snapshot(self):
+            return {"n": float(self.n)}
+
+    reg = MetricsRegistry()
+    island = Island()
+    reg.register_source("plane", island)
+    island.n = 5                    # mutate AFTER registration
+    assert reg.collect()["plane.n"] == 5.0
+    island.n = 9
+    assert reg.collect()["plane.n"] == 9.0   # authoritative, never cached
+    with pytest.raises(TypeError):
+        reg.register_source("bad", object())
+    reg.register_callable("agg", lambda: {"total": 3.0})
+    assert reg.collect()["agg.total"] == 3.0
+    assert set(reg.sources()) == {"plane", "agg"}
+
+
+def test_stats_snapshot_fields_props_rename_and_dict_flattening():
+    import dataclasses
+
+    @dataclasses.dataclass
+    class S:
+        hits: int = 4
+        misses: int = 1
+        per_tier: dict = dataclasses.field(
+            default_factory=lambda: {"hbm": 3, "dram": 1})
+        label: str = "skipme"
+        flag: bool = True
+
+        @property
+        def hit_rate(self):
+            return self.hits / (self.hits + self.misses)
+
+    snap = stats_snapshot(S(), props=("hit_rate",), rename={"hits": "hit.count"})
+    assert snap["hit.count"] == 4.0
+    assert snap["per_tier.hbm"] == 3.0
+    assert snap["hit_rate"] == 0.8
+    assert "label" not in snap and "flag" not in snap
+
+
+def test_every_stats_island_speaks_the_snapshot_protocol():
+    from repro.core.cache import CacheStats
+    from repro.core.dispatch import SchedulerStats
+    from repro.diffusion.prefetch import PrefetchStats
+    from repro.diffusion.transfer import TransferStats
+    from repro.dispatch_vec.device_mirror import MirrorStats
+    from repro.index.coherence import CoherenceStats
+    from repro.index.warmstart import WarmStartStats
+    from repro.runtime.serve_loop import ServeStats
+
+    islands = [RouterStats(), ServeStats(), SchedulerStats(), TransferStats(),
+               PrefetchStats(), WarmStartStats(), CoherenceStats(),
+               CacheStats(), MirrorStats()]
+    for island in islands:
+        snap = island.snapshot()
+        assert snap, type(island).__name__
+        assert all(isinstance(v, float) for v in snap.values()), \
+            type(island).__name__
+    # stable wire names survive the rename map
+    assert "bytes.peer" in TransferStats().snapshot()
+    assert "hit_rate" in RouterStats().snapshot()
+    assert "ops_per_batch" in CoherenceStats().snapshot()
+
+
+# -------------------------------------------------- latency reservoir window
+def test_latency_reservoir_lifetime_stats_survive_ring_wrap():
+    res = LatencyReservoir(maxlen=4)
+    xs = [float(i) for i in range(1, 11)]        # 1..10, wraps 4-slot ring
+    for x in xs:
+        res.append(x)
+    assert len(res) == 4                         # window: only the last 4
+    assert sorted(res) == [7.0, 8.0, 9.0, 10.0]
+    snap = res.snapshot()
+    assert snap["count"] == 10.0                 # lifetime-true
+    assert snap["sum_s"] == sum(xs)
+    assert snap["mean_s"] == pytest.approx(5.5)  # NOT mean of the window
+    assert snap["min_s"] == 1.0 and snap["max_s"] == 10.0
+
+
+def test_router_percentiles_are_window_only_and_labeled():
+    stats = RouterStats(latencies_s=LatencyReservoir(maxlen=4))
+    for x in (100.0, 1.0, 2.0, 3.0, 4.0):        # 100.0 falls out of window
+        stats.latencies_s.append(x)
+    assert stats.window_percentile_s(99.0) == 4.0    # blind to the old spike
+    assert stats.window_percentile_s(50.0) == 2.0
+    snap = stats.snapshot()
+    assert snap["latency.win_p99_s"] == 4.0
+    assert snap["latency.win_p50_s"] == 2.0
+    assert snap["latency.max_s"] == 100.0            # lifetime max remembers
+
+
+def test_windowed_histogram_window_vs_lifetime():
+    h = WindowedHistogram("h", maxlen=2)
+    for x in (50.0, 1.0, 2.0):
+        h.observe(x)
+    s = h.snapshot()
+    assert s["count"] == 3.0 and s["max"] == 50.0
+    assert s["win_p99"] == 2.0                   # 50.0 left the window
+
+
+# ----------------------------------------------------- nearest-rank pin test
+def test_nearest_rank_index_integral_rank_off_by_one():
+    # p50 of 2 samples is the FIRST (int(0.5*2)=1 picked the max: the bug)
+    assert nearest_rank_index(0.5, 2) == 0
+    assert nearest_rank_index(0.99, 100) == 98   # not 99
+    assert nearest_rank_index(1.0, 5) == 4
+    assert nearest_rank_index(0.01, 5) == 0
+    assert nearest_rank_index(0.99, 1) == 0
+    with pytest.raises(ValueError):
+        nearest_rank_index(0.5, 0)
+
+
+def test_peak_throughput_gbps_nearest_rank():
+    from repro.core.simulator import (SimConfig, SimResult, TimePoint,
+                                      teragrid_profile)
+
+    dt = 10.0
+    cfg = SimConfig(sample_dt_s=dt)
+
+    def tp(rate_gbps, i):
+        return TimePoint(t=i * dt, queue_len=0, nodes=1, busy=0,
+                         registered_execs=1,
+                         throughput_bytes={"local": rate_gbps * 1e9 / 8 * dt},
+                         ideal_bytes=0.0, cpu_util=0.0)
+
+    def result(rates):
+        return SimResult(
+            config=cfg, profile=teragrid_profile(), workload_name="pin",
+            wet_s=1.0, ideal_wet_s=1.0, tasks_done=1, hits_local=0,
+            hits_remote=0, misses=0, cpu_time_hours=0.0, avg_response_s=0.0,
+            peak_queue=0, series=[tp(r, i) for i, r in enumerate(rates)],
+            bytes_by_source={}, interval_completion={}, avg_cpu_util=0.0,
+            scheduler_decisions=0)
+
+    # Two samples at p50: nearest rank is the LOWER one.  int(0.5*2)=1
+    # returned 9.0 here — the regression this test pins.
+    assert result([9.0, 1.0]).peak_throughput_gbps(0.5) == pytest.approx(1.0)
+    hundred = result([float(i) for i in range(1, 101)])
+    assert hundred.peak_throughput_gbps(0.99) == pytest.approx(99.0)
+    assert result([]).peak_throughput_gbps() == 0.0
+
+
+# ------------------------------------------------------------------ PerfMeter
+def test_perfmeter_baseline_speedup_and_performance_index():
+    pm = PerfMeter(interval_s=1.0)
+    pm.on_sample(0.0, 4.0, 2.0)
+    pm.on_complete(0.5, 2.0, 0, 3)   # all-miss: feeds the measured baseline
+    pm.on_complete(1.5, 1.0, 3, 0)
+    pm.on_complete(2.5, 1.0, 3, 0)
+    pm.on_sample(10.0, 4.0, 2.0)
+    assert pm.baseline_service_s == pytest.approx(2.0)
+    # speedup = baseline * completed / busy = 2.0 * 3 / 4.0
+    assert pm.speedup == pytest.approx(1.5)
+    assert pm.resource_hours == pytest.approx(40.0 / 3600.0)
+    assert pm.performance_index == pytest.approx(1.5 / (40.0 / 3600.0))
+    assert pm.utilization == pytest.approx(0.5)
+    rows = pm.interval_rows()
+    assert rows and rows[0]["perf.throughput_rps"] == pytest.approx(1.0)
+    assert rows[1]["perf.hit_rate"] == pytest.approx(1.0)
+    snap = pm.snapshot()
+    assert snap["completed"] == 3.0 and snap["baseline_samples"] == 1.0
+
+
+def test_perfmeter_fixed_baseline_wins_over_measured():
+    pm = PerfMeter(baseline_service_s=4.0)
+    pm.on_complete(0.1, 2.0, 0, 1)   # all-miss, but the baseline is pinned
+    assert pm.baseline_service_s == 4.0
+    assert pm.speedup == pytest.approx(4.0 * 1 / 2.0)
+
+
+# ------------------------------------------------------------------- tracing
+def test_trace_buffer_ring_exports_and_chrome(tmp_path):
+    tb = TraceBuffer(maxlen=4)
+    for i in range(10):
+        tb.record(i, f"obj{i}", "transfer", float(i), float(i) + 0.5,
+                  "r0", "dispatch", ("peer",))
+    assert tb.total == 10 and len(tb) == 4
+    spans = tb.spans()
+    assert [s["seq"] for s in spans] == [6, 7, 8, 9]   # oldest overwritten
+    assert spans[0]["detail"] == ["peer"]
+    jl = tmp_path / "trace.jsonl"
+    assert tb.to_jsonl(str(jl)) == 4
+    lines = [json.loads(line) for line in jl.read_text().splitlines()]
+    assert lines[0]["phase"] == "transfer"
+    doc = tb.to_chrome_trace()
+    assert len(doc["traceEvents"]) == 4
+    ev = doc["traceEvents"][0]
+    assert ev["ph"] == "X" and ev["tid"] == "r0"
+    assert ev["ts"] == pytest.approx(0.0)              # rebased to earliest
+    assert ev["dur"] == pytest.approx(0.5e6)
+    json.dumps(doc)                                    # loadable document
+
+
+# ------------------------------------------- router wiring: parity and no-op
+def _build_router(policy, batch_drain, impl, obs=None):
+    router = CacheAffinityRouter(
+        policy=policy, window=128, max_object_replicas=16,
+        object_size_fn=lambda obj: BLOCK,
+        tier_specs=[TierSpec("hbm", 2 * BLOCK),
+                    TierSpec("dram", 16 * BLOCK, 64e9)],
+        persistent_bw_bytes_per_s=4e9, nic_bw_bytes_per_s=16e9,
+        batch_drain=batch_drain, dispatcher_impl=impl, log_assignments=True,
+        obs=obs)
+    for _ in range(8):
+        router.add_replica()
+    return router
+
+
+def _drive(router, sids, batch):
+    """The serving pump from test_serve_batch: identical for every mode."""
+    t = 1000.0
+    served, rid, i = 0, 0, 0
+    wave, stall = [], 0
+    while i < len(sids) or router.queue_length() > 0 or wave:
+        before = served
+        finished = [rr for a in wave for rr in a.requests]
+        served += len(finished)
+        nxt = list(router.complete_batch(finished, now=t)) if finished else []
+        for sid in sids[i:i + batch]:
+            router.enqueue(RoutedRequest(rid, (f"kv:s{sid}",),
+                                         submit_time_s=t), now=t)
+            rid += 1
+        i = min(i + batch, len(sids))
+        nxt.extend(router.tick(t))
+        wave = nxt
+        t += 0.004
+        stall = stall + 1 if served == before and not wave else 0
+        if stall > 3:
+            break
+    return served
+
+
+def _zipf(n, sessions, alpha, seed):
+    import random
+    rng = random.Random(seed)
+    weights = [1.0 / (s + 1) ** alpha for s in range(sessions)]
+    return [rng.choices(range(sessions), weights=weights, k=1)[0]
+            for _ in range(n)]
+
+
+def test_trace_span_parity_batched_vs_looped_on_seeded_zipf():
+    digests, hits = {}, {}
+    for batch_drain, impl in ((False, "reference"), (True, "vectorized")):
+        obs = Observability()
+        router = _build_router("max-cache-hit", batch_drain, impl, obs=obs)
+        _drive(router, list(range(24)), 1)           # warm every session
+        _drive(router, _zipf(300, 24, 1.0, 3), 16)
+        digests[batch_drain] = obs.trace.parity_digest()
+        hits[batch_drain] = router.stats.object_hits
+        # both modes emitted real spans across the parity phases
+        phases = {s["phase"] for s in obs.trace.spans()}
+        assert set(PARITY_PHASES) <= phases
+    assert hits[False] == hits[True]
+    assert digests[False] and digests[False] == digests[True]
+
+
+def test_obs_disabled_path_records_no_spans(monkeypatch):
+    """obs=None is a strict no-op: no TraceBuffer method ever runs."""
+    def boom(*a, **k):
+        raise AssertionError("TraceBuffer.record called on the no-op path")
+
+    monkeypatch.setattr(TraceBuffer, "record", boom)
+    monkeypatch.setattr(PerfMeter, "on_complete", boom)
+    monkeypatch.setattr(PerfMeter, "on_sample", boom)
+    router = _build_router("max-cache-hit", True, "vectorized", obs=None)
+    assert router.obs is None and router._trace is None
+    served = _drive(router, _zipf(60, 8, 1.0, 3), 8)
+    assert served > 0                 # the drive actually exercised hooks
+
+
+def test_router_obs_registers_every_island_and_collects():
+    obs = Observability()
+    router = _build_router("max-cache-hit", True, "vectorized", obs=obs)
+    _drive(router, _zipf(120, 12, 1.0, 3), 8)
+    m = obs.collect_all()
+    for prefix in ("router", "dispatch", "transfer", "warmstart", "tiers",
+                   "perf", "trace"):
+        assert any(k.startswith(prefix + ".") for k in m), prefix
+    assert 0.0 < m["router.hit_rate"] <= 1.0
+    assert m["trace.recorded"] > 0
+    assert m["perf.completed"] > 0
+    assert m["perf.performance_index"] > 0
+    # registry view of the tier aggregate == the fleet sum (no drift)
+    assert m["tiers.promotions"] == sum(
+        s.tiers.snapshot()["promotions"] for s in router.stores.values())
+
+
+def test_observability_write_snapshot(tmp_path):
+    obs = Observability()
+    obs.trace.record(0, "kv:a", "transfer", 0.0, 1.0, "r0", "dispatch", ())
+    obs.perf.on_complete(0.5, 1.0, 1, 0)
+    paths = obs.write_snapshot(str(tmp_path))
+    doc = json.loads((tmp_path / "metrics.json").read_text())
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert doc["metrics"]["trace.recorded"] == 1.0
+    assert "perf_intervals" in doc
+    chrome = json.loads((tmp_path / "trace_chrome.json").read_text())
+    assert chrome["traceEvents"][0]["name"] == "kv:a"
+    assert (tmp_path / "trace.jsonl").exists()
+    assert set(paths) == {"metrics", "trace_jsonl", "trace_chrome"}
+
+
+# ------------------------------------------------------- DES shares the names
+def test_simulator_obs_gauges_share_live_namespace():
+    from repro.core.simulator import SimConfig, Simulator, teragrid_profile
+    from repro.core.workload import locality_workload
+
+    obs = Observability()
+    cfg = SimConfig(policy="good-cache-compute", static_nodes=2, max_nodes=2,
+                    coherence_delay_s=0.0, sample_dt_s=5.0, index_shards=2)
+    sim = Simulator(locality_workload(1.38, 60), cfg, teragrid_profile(),
+                    obs=obs)
+    result = sim.run()
+    m = obs.collect_all()
+    # the DES publishes the live names (sim-vs-live curves overlay by key)
+    for name in ("perf.utilization", "perf.throughput_gbps", "perf.nodes",
+                 "coherence.stale_claims", "coherence.misdirected"):
+        assert name in m, name
+    assert any(k.startswith("dispatch.") for k in m)
+    assert any(k.startswith("coherence_bus.") for k in m)
+    # sample spans were recorded as structural phases
+    assert any(s["phase"] == "sample" for s in obs.trace.spans())
+    # projection helpers speak the same dotted names
+    rows = sim_perf_rows(result)
+    assert rows and "perf.throughput_gbps" in rows[0]
+    summary = sim_perf_summary(result, baseline_wet_s=result.wet_s)
+    assert summary["perf.speedup"] == pytest.approx(1.0)
+    assert "perf.performance_index" in summary
