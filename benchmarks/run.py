@@ -28,7 +28,19 @@ def main() -> None:
                     help="tiny iterations: exercises every suite end-to-end "
                          "in ~a minute so benchmark scripts can't silently rot")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="run the bench regression sentinel over the "
+                         "BENCH_*.json histories instead of any suite; "
+                         "exits nonzero when a declared metric regressed "
+                         "beyond its noise-scaled threshold")
+    ap.add_argument("--regress-report", default="",
+                    help="with --check-regressions: also write the markdown "
+                         "report to this path")
     args = ap.parse_args()
+    if args.check_regressions:
+        from repro.obs.regress import main as regress_main
+        argv = ["--report", args.regress_report] if args.regress_report else []
+        sys.exit(regress_main(argv))
     if args.smoke:
         n, n_model, n_sched, n_serve, n_scale = 1_000, 300, 1_000, 300, 1_000
         n_idx = 300

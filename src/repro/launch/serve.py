@@ -56,6 +56,15 @@ def main() -> None:
     ap.add_argument("--metrics-every", type=int, default=0,
                     help="with --metrics-dir: also write an interim snapshot "
                          "every N served requests (0 = final only)")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="with --metrics-dir: record batch-level structural "
+                         "spans 1-in-N (request-attributed spans are always "
+                         "recorded, so attribution is unaffected)")
+    ap.add_argument("--slo", default="",
+                    help="with --metrics-dir: declare SLOs, e.g. "
+                         "'p99_ms=50:hit_rate=0.8:avail=0.999' — tracked "
+                         "live (error budget + multi-window burn alerts) "
+                         "and reported as slo.* metrics")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -63,8 +72,10 @@ def main() -> None:
         cfg = cfg.reduced()
     obs = None
     if args.metrics_dir is not None:
-        from ..obs import Observability
-        obs = Observability(perf_interval_s=1.0)
+        from ..obs import Observability, parse_slo_specs
+        obs = Observability(perf_interval_s=1.0,
+                            trace_sample=args.trace_sample,
+                            slo_specs=parse_slo_specs(args.slo))
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
                           min_replicas=args.min_replicas, cache_cap=args.cache_cap,
                           max_sessions=args.max_sessions,
@@ -104,8 +115,26 @@ def main() -> None:
               f"speedup={m.get('perf.speedup', 0.0):.3f} "
               f"utilization={m.get('perf.utilization', 0.0):.2f} "
               f"spans={int(m.get('trace.recorded', 0))}")
+        # Dominant blame segment from the critical-path decomposition.
+        fracs = {k.split(".")[2]: v for k, v in m.items()
+                 if k.startswith("analyze.crit.") and k.endswith(".frac")}
+        if fracs:
+            top = max(fracs, key=lambda s: fracs[s])
+            print(f"crit_path: top={top} ({fracs[top]:.0%}) "
+                  + " ".join(f"{s}={fracs[s]:.2f}"
+                             for s in sorted(fracs) if fracs[s] > 0))
+        if obs.slo is not None:
+            firing = obs.slo.firing()
+            parts = []
+            for name, tr in sorted(obs.slo.trackers.items()):
+                snap = tr.snapshot()
+                parts.append(f"{name}: budget={snap['budget_remaining']:.0%} "
+                             f"burn={snap['burn_fast']:.2f}/{snap['burn_slow']:.2f}")
+            print(f"slo: {'FIRING ' + ','.join(firing) if firing else 'ok'} "
+                  + "; ".join(parts))
         print(f"metrics -> {paths['metrics']}")
         print(f"trace   -> {paths['trace_chrome']}")
+        print(f"crit    -> {paths['crit_path']}")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,7 @@ class PerfMeter:
         max_intervals: int = 1024,
     ):
         self.interval_s = float(interval_s)
+        self._inv_interval = 1.0 / self.interval_s
         self._fixed_baseline = baseline_service_s
         self.rows: deque = deque(maxlen=max_intervals)   # closed interval rows
         self._interval: Optional[int] = None             # open interval index
@@ -115,7 +116,9 @@ class PerfMeter:
 
     # -- interval bookkeeping ------------------------------------------------
     def _roll(self, now: float) -> None:
-        i = int(now / self.interval_s)
+        i = int(now * self._inv_interval)
+        if i == self._interval:        # hot path: same open interval
+            return
         if self._interval is None:
             self._interval = i
             return

@@ -21,9 +21,10 @@ wire form differs from the attribute (``bytes_from_peers`` ->
 
 On top of adopted sources the registry carries its own instruments —
 ``Counter``, ``Gauge``, and ``WindowedHistogram`` (ring-buffered samples
-with streaming lifetime sum/min/max, so the mean survives window wraps and
-percentiles are explicitly window-only) — for values no island owns, e.g.
-the live DES sample gauges.
+with streaming lifetime sum/min/max plus P² lifetime quantile estimates,
+so the mean and ``est_p50``/``est_p99`` survive window wraps while
+``win_p50``/``win_p99`` stay exact-but-window-only) — for values no island
+owns, e.g. the live DES sample gauges.
 
 Everything here is dependency-free (stdlib only): the runtime, core, and
 diffusion planes import helpers from this module without cycles.
@@ -39,6 +40,7 @@ __all__ = [
     "Counter",
     "Gauge",
     "MetricsRegistry",
+    "P2Quantile",
     "SCHEMA_VERSION",
     "WindowedHistogram",
     "nearest_rank_index",
@@ -99,6 +101,88 @@ def stats_snapshot(
     return out
 
 
+class P2Quantile:
+    """Streaming quantile estimate: the P² piecewise-parabolic algorithm.
+
+    Jain & Chlamtac (1985): five markers track the min, max, target
+    quantile, and its two flanking mid-quantiles; each observation shifts
+    marker *positions* by one and repairs marker *heights* with a
+    piecewise-parabolic (falling back to linear) interpolation.  O(1) time
+    and O(1) memory per observation — the estimate covers the *lifetime*
+    stream, so it survives the ring wraps that make ``win_p50``/``win_p99``
+    window-only.  Exact until five samples have arrived; approximate (and
+    for smooth distributions, tight — pinned by test against exact
+    percentiles on seeded streams) afterwards.
+    """
+
+    __slots__ = ("p", "count", "_q", "_n", "_np")
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile must be in (0, 1): {p}")
+        self.p = float(p)
+        self.count = 0
+        self._q: List[float] = []      # marker heights
+        self._n: List[float] = []      # marker positions (0-based)
+        self._np: List[float] = []     # desired marker positions
+
+    def observe(self, x: float) -> None:
+        self.count += 1
+        q = self._q
+        if self.count <= 5:
+            q.append(x)
+            q.sort()
+            if self.count == 5:
+                p = self.p
+                self._n = [0.0, 1.0, 2.0, 3.0, 4.0]
+                self._np = [0.0, 2.0 * p, 4.0 * p, 2.0 + 2.0 * p, 4.0]
+            return
+        n, np_ = self._n, self._np
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 3
+            for i in range(1, 4):
+                if x < q[i]:
+                    k = i - 1
+                    break
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        p = self.p
+        np_[1] += p / 2.0
+        np_[2] += p
+        np_[3] += (1.0 + p) / 2.0
+        np_[4] += 1.0
+        for i in (1, 2, 3):
+            d = np_[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1.0) or \
+               (d <= -1.0 and n[i - 1] - n[i] < -1.0):
+                d = 1.0 if d > 0 else -1.0
+                # piecewise-parabolic (P²) height update …
+                qp = q[i] + d / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+                if not q[i - 1] < qp < q[i + 1]:
+                    # … unless it would leave the bracket: linear repair
+                    j = i + (1 if d > 0 else -1)
+                    qp = q[i] + d * (q[j] - q[i]) / (n[j] - n[i])
+                q[i] = qp
+                n[i] += d
+
+    @property
+    def value(self) -> float:
+        """Current estimate (exact nearest-rank below five samples)."""
+        if self.count == 0:
+            return 0.0
+        if self.count <= 5:      # still exact: markers not yet adjusted
+            return self._q[nearest_rank_index(self.p, len(self._q))]
+        return self._q[2]
+
+
 class Counter:
     """Monotonic counter."""
 
@@ -135,7 +219,7 @@ class WindowedHistogram:
     """
 
     __slots__ = ("name", "maxlen", "_buf", "_next", "count", "sum",
-                 "lifetime_min", "lifetime_max")
+                 "lifetime_min", "lifetime_max", "_p2_50", "_p2_99")
 
     def __init__(self, name: str, maxlen: int = 4096):
         self.name = name
@@ -146,6 +230,10 @@ class WindowedHistogram:
         self.sum = 0.0
         self.lifetime_min = math.inf
         self.lifetime_max = -math.inf
+        # Lifetime-stream P² estimators complement the exact-but-window-only
+        # sorted percentiles.
+        self._p2_50 = P2Quantile(0.50)
+        self._p2_99 = P2Quantile(0.99)
 
     def observe(self, x: float) -> None:
         self.count += 1
@@ -154,6 +242,8 @@ class WindowedHistogram:
             self.lifetime_min = x
         if x > self.lifetime_max:
             self.lifetime_max = x
+        self._p2_50.observe(x)
+        self._p2_99.observe(x)
         if len(self._buf) < self.maxlen:
             self._buf.append(x)
         else:
@@ -185,6 +275,8 @@ class WindowedHistogram:
             "window": float(len(self._buf)),
             "win_p50": self.window_percentile(50.0),
             "win_p99": self.window_percentile(99.0),
+            "est_p50": self._p2_50.value,
+            "est_p99": self._p2_99.value,
         }
         if self.count:
             out["min"] = self.lifetime_min

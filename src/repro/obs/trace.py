@@ -34,12 +34,22 @@ Exports: ``to_jsonl()`` (one span dict per line) and ``to_chrome_trace()``
 (Chrome ``traceEvents`` / Perfetto-loadable JSON: complete "X" events with
 ``tid`` = replica lane, so a batched drain renders as one visible wave
 across the replica lanes).
+
+**Sampling** (``sample=N``): batch-level structural spans — exactly the
+``request_id = -1`` class: drain scans, coalesced promotion replays,
+engine flights, batch payload moves, DES sample ticks — are recorded
+1-in-N.  Request-attributed spans (any phase with ``request_id >= 0``,
+which includes every parity phase and the per-request promote/payload
+segments the critical-path analyzer consumes) are *always* recorded, so
+``parity_digest()`` and ``obs.analyze`` attribution are byte-identical at
+any sampling rate; only the how-was-it-executed volume thins out.
 """
 
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 __all__ = ["PARITY_PHASES", "TraceBuffer"]
 
@@ -52,13 +62,23 @@ _SEQ, _RID, _NAME, _PHASE, _PARENT, _T0, _T1, _REPLICA, _DETAIL = range(9)
 class TraceBuffer:
     """Fixed-capacity ring of span records (oldest overwritten)."""
 
-    __slots__ = ("maxlen", "_buf", "_next", "_seq")
+    __slots__ = ("maxlen", "sample", "_buf", "_seq", "_struct_seen",
+                 "_sampled_out", "_t0_min")
 
-    def __init__(self, maxlen: int = 65536):
+    def __init__(self, maxlen: int = 65536, sample: int = 1):
         self.maxlen = int(maxlen)
-        self._buf: List[Tuple] = []
-        self._next = 0
+        self.sample = max(1, int(sample))   # 1-in-N for structural rid=-1 spans
+        # Bounded deque: C-level oldest-first eviction keeps record() free
+        # of ring-index branches on the per-span hot path.
+        self._buf: Deque[Tuple] = deque(maxlen=self.maxlen)
         self._seq = 0           # lifetime span count (ids are unique)
+        self._struct_seen = 0   # structural spans offered (sampled or not)
+        self._sampled_out = 0   # structural spans the sampler dropped
+        # Earliest start ever *recorded* — the stable Chrome-trace origin.
+        # The ring overwrites old spans, so deriving the origin from the
+        # surviving minimum shifts every exported timestamp after a wrap;
+        # this anchor never moves once set (tracked at record() time).
+        self._t0_min = float("inf")
 
     def record(
         self,
@@ -71,18 +91,18 @@ class TraceBuffer:
         parent: str = "",
         detail: Tuple = (),
     ) -> int:
-        """Append one completed span; returns its sequence id."""
+        """Append one completed span; returns its sequence id (-1: sampled out)."""
+        if request_id < 0 and self.sample > 1:
+            self._struct_seen += 1
+            if self._struct_seen % self.sample:
+                self._sampled_out += 1
+                return -1
         seq = self._seq
         self._seq = seq + 1
-        rec = (seq, request_id, name, phase, parent, start_s, end_s,
-               replica, detail)
-        buf = self._buf
-        if len(buf) < self.maxlen:
-            buf.append(rec)
-        else:
-            self._next = nxt = self._next % self.maxlen
-            buf[nxt] = rec
-            self._next = nxt + 1
+        if start_s < self._t0_min:
+            self._t0_min = start_s
+        self._buf.append((seq, request_id, name, phase, parent, start_s,
+                          end_s, replica, detail))
         return seq
 
     def __len__(self) -> int:
@@ -113,7 +133,8 @@ class TraceBuffer:
     def snapshot(self) -> Dict[str, float]:
         """Registry-source view: volume counters only."""
         return {"recorded": float(self._seq),
-                "retained": float(len(self._buf))}
+                "retained": float(len(self._buf)),
+                "sampled_out": float(self._sampled_out)}
 
     # -- parity --------------------------------------------------------------
     def parity_digest(self) -> Dict[int, Tuple]:
@@ -125,14 +146,23 @@ class TraceBuffer:
         span's detail carries.  Sequence ids and wall offsets are excluded:
         a batched drain interleaves record order differently by design, but
         the causal structure must be identical to the looped path's.
+
+        Details are canonicalized here, not at record time: a dispatch
+        span's per-object source map arrives in whichever insertion order
+        its drain mode produced, and sorting it on the hot path would tax
+        every request to make this snapshot-time comparison cheaper.
         """
         out: Dict[int, List[Tuple]] = {}
         for rec in self._buf:
             if rec[_RID] < 0 or rec[_PHASE] not in PARITY_PHASES:
                 continue
+            detail = rec[_DETAIL]
+            if rec[_PHASE] == "dispatch" and len(detail) == 3 \
+                    and isinstance(detail[2], tuple):
+                detail = (detail[0], detail[1], tuple(sorted(detail[2])))
             out.setdefault(rec[_RID], []).append(
                 (rec[_PHASE], rec[_NAME], rec[_PARENT], rec[_REPLICA],
-                 rec[_DETAIL]))
+                 detail))
         return {rid: tuple(sorted(entries)) for rid, entries in out.items()}
 
     # -- exports -------------------------------------------------------------
@@ -149,13 +179,16 @@ class TraceBuffer:
 
         Complete ("X") events on ``pid`` = phase class, ``tid`` = replica
         lane (unattributed spans ride a lane named after their phase).
-        Timestamps are microseconds relative to the earliest span so
-        virtual-time traces load at t=0.
+        Timestamps are microseconds relative to the earliest span *ever
+        recorded* (not the earliest surviving one — after a ring wrap those
+        differ, and an origin derived from survivors would shift every
+        timestamp relative to an earlier export of the same run), so
+        virtual-time traces load at t=0 and repeated exports stay aligned.
         """
         events = []
         recs = sorted(self._buf)
         if recs and time_origin_s is None:
-            time_origin_s = min(r[_T0] for r in recs)
+            time_origin_s = self._t0_min
         for rec in recs:
             dur_us = max(0.0, (rec[_T1] - rec[_T0]) * 1e6)
             events.append({

@@ -34,6 +34,7 @@ from ..diffusion.prefetch import Prefetcher
 from ..diffusion.tiers import TieredStore, TierSpec, default_tier_weights
 from ..diffusion.transfer import TransferEngine
 from ..index.warmstart import WarmStartReport, WarmStartStats, clone_hottest
+from ..obs.registry import P2Quantile
 
 __all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "LatencyReservoir",
            "ReplicaStore", "RoutedRequest", "RouterStats"]
@@ -148,17 +149,19 @@ class LatencyReservoir:
 
     ``RouterStats.latencies_s`` grew one float per request forever — a leak
     at millions-of-users scale.  The reservoir keeps the most recent
-    ``maxlen`` samples; **percentiles are exact within that window only**
-    (they forget everything older than ``maxlen`` samples — use
+    ``maxlen`` samples; **sorted percentiles are exact within that window
+    only** (they forget everything older than ``maxlen`` samples — use
     ``window_percentile_s`` / the ``win_``-prefixed metric names, which say
     so).  The streaming aggregates — ``total`` / ``sum`` / ``min`` /
-    ``max`` / ``mean_s`` — are lifetime-true: they survive ring wraps, so
-    the mean latency of a long-running server is not silently truncated to
-    its last 4096 requests.  It is list-like where the stats code needs it
-    (append / len / iterate).
+    ``max`` / ``mean_s`` and the P² quantile estimates surfaced as
+    ``est_p50_s`` / ``est_p99_s`` — are lifetime-true: they survive ring
+    wraps, so the mean and tail latency of a long-running server are not
+    silently truncated to its last 4096 requests.  It is list-like where
+    the stats code needs it (append / len / iterate).
     """
 
-    __slots__ = ("maxlen", "_buf", "_next", "total", "sum", "min", "max")
+    __slots__ = ("maxlen", "_buf", "_next", "total", "sum", "min", "max",
+                 "_p2_50", "_p2_99")
 
     def __init__(self, maxlen: int = 4096):
         self.maxlen = int(maxlen)
@@ -168,6 +171,8 @@ class LatencyReservoir:
         self.sum = 0.0          # lifetime sum: mean survives ring wraps
         self.min = math.inf     # lifetime extremes
         self.max = -math.inf
+        self._p2_50 = P2Quantile(0.50)
+        self._p2_99 = P2Quantile(0.99)
 
     def append(self, x: float) -> None:
         self.total += 1
@@ -176,6 +181,8 @@ class LatencyReservoir:
             self.min = x
         if x > self.max:
             self.max = x
+        self._p2_50.observe(x)
+        self._p2_99.observe(x)
         if len(self._buf) < self.maxlen:
             self._buf.append(x)
         else:
@@ -193,6 +200,8 @@ class LatencyReservoir:
             "sum_s": self.sum,
             "mean_s": self.mean_s,
             "window": float(len(self._buf)),
+            "est_p50_s": self._p2_50.value,
+            "est_p99_s": self._p2_99.value,
         }
         if self.total:
             out["min_s"] = self.min
@@ -247,7 +256,9 @@ class RouterStats:
 
         Exact for the most recent ``latencies_s.maxlen`` samples and blind
         to everything older — a *window* p99, not a lifetime p99.  Callers
-        printing it should label it ``win_p99`` (the benches do).
+        printing it should label it ``win_p99`` (the benches do); for a
+        lifetime tail that survives ring wraps, read the reservoir's P²
+        estimates (``latency.est_p50_s`` / ``latency.est_p99_s``).
         """
         if not self.latencies_s:
             return 0.0
@@ -414,6 +425,7 @@ class CacheAffinityRouter:
         self.obs = obs
         self._trace = obs.trace if obs is not None else None
         self._perf = obs.perf if obs is not None else None
+        self._slo = getattr(obs, "slo", None) if obs is not None else None
         if obs is not None:
             self._register_obs_sources(obs)
 
@@ -579,11 +591,14 @@ class CacheAffinityRouter:
                     # records at decision time (parity-asserted).
                     for replica, request in pairs:
                         srcs = request.sources
+                        # Insertion-ordered; parity_digest canonicalizes
+                        # (sorting here would tax every request to make a
+                        # snapshot-time comparison cheaper).
                         trace.record(
                             request.request_id, "dispatch", "dispatch",
                             now, now, replica, "request",
                             (request.hits, request.misses,
-                             tuple(sorted(srcs.items())) if srcs else ()))
+                             tuple(srcs.items()) if srcs else ()))
                     # Structural: the whole wave was one window scan.
                     trace.record(-1, "drain", "drain", now, now,
                                  detail=(len(pairs),))
@@ -591,8 +606,10 @@ class CacheAffinityRouter:
                 applied = 0
                 for store in self.stores.values():
                     applied += store.tiers.apply_promotions()
-                if self._trace is not None:
+                if applied and self._trace is not None:
                     # Structural: the coalesced tier-promotion replay.
+                    # Drains that promoted nothing record nothing — an
+                    # empty replay is not an event.
                     self._trace.record(-1, "promote_replay", "promote",
                                        now, now, detail=(applied,))
 
@@ -681,6 +698,12 @@ class CacheAffinityRouter:
                     cost = self.engine.remaining_s(replica, obj, now)
                     request.restore_cost_s += cost
                     self.stats.restore_time_s += cost
+                    if self._trace is not None and found != store.top_tier \
+                            and cost > 0.0:
+                        # Mirror of the looped path's lower-tier-hit span.
+                        self._trace.record(request.request_id, obj,
+                                           "promote", now, now + cost,
+                                           replica, "dispatch", (found,))
         # Prefetch warms run after the replay (the looped path warms at the
         # end of each _start, i.e. after that request's own admissions) —
         # per-store mutation order is preserved.  In batch mode the warm
@@ -751,6 +774,14 @@ class CacheAffinityRouter:
                     request.sources[obj] = tier
                     cost = self._hit_cost(store, replica, obj, tier, now)
                     request.restore_cost_s += cost
+                    if trace is not None and tier != store.top_tier and cost > 0.0:
+                        # Lower-tier hit: the swap-in toward HBM is the
+                        # analyzer's "promote" segment (request-attributed,
+                        # never sampled out; identical in both drain modes
+                        # since cost is computed pre-replay).
+                        trace.record(request.request_id, obj, "promote",
+                                     now, now + cost, replica, "dispatch",
+                                     (tier,))
                     if miss_sink is not None and self.engine is not None:
                         # flat mode (no engine) admits inline, so its hits
                         # can never be invalidated by a deferred admission
@@ -806,7 +837,7 @@ class CacheAffinityRouter:
                 trace.record(request.request_id, "dispatch", "dispatch",
                              now, now, replica, "request",
                              (request.hits, request.misses,
-                              tuple(sorted(srcs.items())) if srcs else ()))
+                              tuple(srcs.items()) if srcs else ()))
         # Warm this replica for the next queued work while it computes: the
         # transfer overlaps the batch it was just assigned (prefetch plane).
         # In the batched drain (miss_sink set) the warm is deferred to after
@@ -868,6 +899,9 @@ class CacheAffinityRouter:
         self.stats.completed += 1
         if request.response_time_s is not None:
             self.stats.latencies_s.append(request.response_time_s)
+            if self._slo is not None:
+                self._slo.on_complete(now, request.response_time_s,
+                                      request.hits, request.misses)
         replica = request.replica
         if self._trace is not None:
             # Root span: submit -> finish, closing the request's causal chain.

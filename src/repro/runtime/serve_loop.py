@@ -287,6 +287,7 @@ class DiffusionServer:
         else:
             # "copy from persistent storage": replay the prompt (prefill).
             self.stats.prefills += 1
+            t0 = time.time()
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             batch = {"tokens": prompt}
             _, pre_caches = self.prefill_fn(self.params, batch)
@@ -294,7 +295,17 @@ class DiffusionServer:
             caches = cache_init(self.cfg, 1, self.cap)
             caches = _merge_prefill_caches(caches, pre_caches, self.cfg)
             pos = req.prompt.shape[0]
+            if self._trace is not None:
+                # Segment timestamp for the critical-path analyzer: compute
+                # phases are not attribution segments (they land in
+                # "service" by construction), but the span makes the
+                # prefill-vs-decode split visible in the trace exports.
+                self._trace.record(routed.request_id, "prefill", "compute",
+                                   t0, time.time(), replica=replica.name,
+                                   parent="dispatch",
+                                   detail=(req.prompt.shape[0],))
 
+        t0 = time.time()
         token = jnp.asarray([int(req.prompt[-1]) % self.cfg.vocab_size], jnp.int32)
         for _ in range(req.max_new_tokens):
             if pos >= self.cap - 1:
@@ -306,6 +317,10 @@ class DiffusionServer:
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             pos += 1
             self.stats.decode_steps += 1
+        if self._trace is not None:
+            self._trace.record(routed.request_id, "decode", "compute",
+                               t0, time.time(), replica=replica.name,
+                               parent="dispatch", detail=(pos,))
         if use_cache:
             # keep the KV payload iff the router's store admitted the object
             # (first-available ships no location info and caches nothing;

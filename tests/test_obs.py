@@ -250,9 +250,17 @@ def test_trace_buffer_ring_exports_and_chrome(tmp_path):
     assert len(doc["traceEvents"]) == 4
     ev = doc["traceEvents"][0]
     assert ev["ph"] == "X" and ev["tid"] == "r0"
-    assert ev["ts"] == pytest.approx(0.0)              # rebased to earliest
+    # Origin is the first span EVER recorded (t0=0.0), not the earliest
+    # survivor (t0=6.0): after the ring wraps, timestamps must not shift
+    # relative to an export taken before the wrap.
+    assert ev["ts"] == pytest.approx(6.0e6)
     assert ev["dur"] == pytest.approx(0.5e6)
     json.dumps(doc)                                    # loadable document
+    # Pre-wrap export alignment: a fresh buffer that has not wrapped uses
+    # the same anchor, so the shared spans carry identical timestamps.
+    tb2 = TraceBuffer(maxlen=4)
+    tb2.record(0, "obj0", "transfer", 0.0, 0.5, "r0", "dispatch", ("peer",))
+    assert tb2.to_chrome_trace()["traceEvents"][0]["ts"] == pytest.approx(0.0)
 
 
 # ------------------------------------------- router wiring: parity and no-op
@@ -361,7 +369,9 @@ def test_observability_write_snapshot(tmp_path):
     chrome = json.loads((tmp_path / "trace_chrome.json").read_text())
     assert chrome["traceEvents"][0]["name"] == "kv:a"
     assert (tmp_path / "trace.jsonl").exists()
-    assert set(paths) == {"metrics", "trace_jsonl", "trace_chrome"}
+    assert set(paths) == {"metrics", "trace_jsonl", "trace_chrome",
+                          "crit_path"}
+    assert (tmp_path / "crit_path.md").read_text().startswith("#")
 
 
 # ------------------------------------------------------- DES shares the names

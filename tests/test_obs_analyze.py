@@ -1,0 +1,471 @@
+"""Tests for the analysis layer: critical-path attribution (obs.analyze),
+SLO burn-rate alerts (obs.slo), the bench regression sentinel (obs.regress),
+and the P² streaming quantile estimators backing est_p50/est_p99."""
+
+import json
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.obs.analyze import SEGMENTS, CriticalPathAnalyzer, decompose_request
+from repro.obs.regress import (MetricSpec, check_file, check_paths, main,
+                               render_markdown)
+from repro.obs.registry import P2Quantile, WindowedHistogram, nearest_rank_index
+from repro.obs.slo import SLOBoard, SLOSpec, SLOTracker, parse_slo_specs
+from repro.obs.trace import TraceBuffer
+from repro.runtime.router import LatencyReservoir
+
+
+# =========================================================================
+# Critical-path decomposition
+# =========================================================================
+def _span(phase, t0, t1, detail=()):
+    return {"phase": phase, "start_s": t0, "end_s": t1,
+            "detail": list(detail)}
+
+
+def test_decompose_no_children_is_all_queue():
+    # Without a recorded dispatch decision there is no evidence the request
+    # ever left the queue — the decomposition must say "queue", not the
+    # silently optimistic "service".
+    root = _span("request", 0.0, 10.0)
+    out = decompose_request(root, [])
+    assert out["queue"] == pytest.approx(10.0)
+    assert sum(out.values()) == pytest.approx(10.0)
+    assert all(out[s] == 0.0 for s in SEGMENTS if s != "queue")
+
+
+def test_decompose_zero_wall_is_all_zero():
+    out = decompose_request(_span("request", 5.0, 5.0), [_span("dispatch", 5.0, 5.0)])
+    assert out == {s: 0.0 for s in SEGMENTS}
+
+
+def test_decompose_queue_dispatch_service_split():
+    root = _span("request", 0.0, 10.0)
+    out = decompose_request(root, [_span("dispatch", 2.0, 3.0)])
+    assert out["queue"] == pytest.approx(2.0)
+    assert out["dispatch"] == pytest.approx(1.0)
+    assert out["service"] == pytest.approx(7.0)
+    assert sum(out.values()) == pytest.approx(10.0)
+
+
+def test_decompose_priority_resolves_overlaps():
+    # Overlapping children: dispatch > promote > transfer_peer >
+    # transfer_persistent > payload; uncovered tail is service.
+    root = _span("request", 0.0, 10.0)
+    kids = [
+        _span("dispatch", 2.0, 3.0),
+        _span("promote", 2.5, 5.0),
+        _span("transfer", 4.0, 6.0, detail=("peer:r1", 1024)),
+        _span("transfer", 5.5, 8.0, detail=("persistent", 1024)),
+        _span("payload", 7.0, 9.0),
+    ]
+    out = decompose_request(root, kids)
+    assert out["queue"] == pytest.approx(2.0)
+    assert out["dispatch"] == pytest.approx(1.0)
+    assert out["promote"] == pytest.approx(2.0)        # 3..5 minus nothing higher
+    assert out["transfer_peer"] == pytest.approx(1.0)  # 5..6
+    assert out["transfer_persistent"] == pytest.approx(2.0)  # 6..8
+    assert out["payload"] == pytest.approx(1.0)        # 8..9
+    assert out["service"] == pytest.approx(1.0)        # 9..10
+    assert sum(out.values()) == pytest.approx(10.0)
+
+
+def test_decompose_clips_children_to_root():
+    # A child interval sticking out both sides of the root counts only the
+    # overlap; the partition property survives.
+    root = _span("request", 0.0, 4.0)
+    out = decompose_request(root, [
+        _span("dispatch", -1.0, 1.0),
+        _span("payload", 3.0, 99.0),
+    ])
+    assert out["queue"] == pytest.approx(0.0)
+    assert out["dispatch"] == pytest.approx(1.0)
+    assert out["service"] == pytest.approx(2.0)
+    assert out["payload"] == pytest.approx(1.0)
+    assert sum(out.values()) == pytest.approx(4.0)
+
+
+_KIND_TO_SPAN = {
+    "dispatch": lambda a, b: _span("dispatch", a, b),
+    "promote": lambda a, b: _span("promote", a, b),
+    "payload": lambda a, b: _span("payload", a, b),
+    "peer": lambda a, b: _span("transfer", a, b, detail=("peer:r0", 8)),
+    "persistent": lambda a, b: _span("transfer", a, b, detail=("persistent", 8)),
+    "flight": lambda a, b: _span("flight", a, b),   # structural: -> service
+}
+
+
+@settings(max_examples=60)
+@given(wall=st.floats(min_value=0.1, max_value=12.0),
+       soup=st.lists(
+           st.tuples(st.sampled_from(sorted(_KIND_TO_SPAN)),
+                     st.floats(min_value=-2.0, max_value=14.0),
+                     st.floats(min_value=-2.0, max_value=14.0)),
+           min_size=0, max_size=12))
+def test_decompose_partitions_random_span_soups(wall, soup):
+    # The acceptance property: on ANY child soup — overlapping, inverted,
+    # out-of-bounds, unknown-phase — segments are non-negative and sum to
+    # the root's wall time exactly.
+    root = _span("request", 0.0, wall)
+    kids = [_KIND_TO_SPAN[kind](min(a, b), max(a, b)) for kind, a, b in soup]
+    out = decompose_request(root, kids)
+    assert set(out) == set(SEGMENTS)
+    for seg, v in out.items():
+        assert v >= -1e-12, f"negative {seg}: {v}"
+    assert sum(out.values()) == pytest.approx(wall, abs=1e-9)
+
+
+def _fill_trace(tb, order=None):
+    """Three requests with distinct shapes; order permutes record sequence."""
+    recs = [
+        (0, "req", "request", 0.0, 10.0, "r0", "", ()),
+        (0, "disp", "dispatch", 2.0, 3.0, "r0", "request", ("hit", 1, ())),
+        (0, "xfer", "transfer", 3.0, 7.0, "r0", "dispatch", ("peer:r1", 64)),
+        (1, "req", "request", 1.0, 4.0, "r1", "", ()),
+        (1, "disp", "dispatch", 1.5, 2.0, "r1", "request", ("miss", 0, ())),
+        (2, "req", "request", 2.0, 3.0, "r0", "", ()),
+    ]
+    for i in (order or range(len(recs))):
+        rid, name, phase, t0, t1, rep, parent, detail = recs[i]
+        tb.record(rid, name, phase, t0, t1, replica=rep, parent=parent,
+                  detail=detail)
+    return tb
+
+
+def test_analyzer_breakdowns_and_blame_table():
+    an = CriticalPathAnalyzer(_fill_trace(TraceBuffer()))
+    brs = an.breakdowns()
+    assert set(brs) == {0, 1, 2}
+    for rid, br in brs.items():
+        assert sum(br[s] for s in SEGMENTS) == pytest.approx(br["wall"])
+    assert brs[0]["transfer_peer"] == pytest.approx(4.0)
+    assert brs[2]["queue"] == pytest.approx(1.0)       # no dispatch recorded
+    table = an.blame_table()
+    assert sum(table[s]["frac"] for s in SEGMENTS) == pytest.approx(1.0)
+    snap = an.snapshot()
+    assert snap["requests"] == 3.0
+    assert snap["crit.transfer_peer.mean"] == pytest.approx(4.0 / 3.0)
+    assert {f"crit.{s}.frac" for s in SEGMENTS} <= set(snap)
+
+
+def test_analyzer_digest_is_record_order_invariant():
+    # The batched drain records the same spans in a different sequence;
+    # the attribution digest must not notice.
+    a = CriticalPathAnalyzer(_fill_trace(TraceBuffer()))
+    b = CriticalPathAnalyzer(_fill_trace(TraceBuffer(),
+                                         order=[5, 3, 0, 4, 1, 2]))
+    assert a.attribution_digest() == b.attribution_digest()
+    assert a.attribution_digest()[2] == (("queue", 1.0),)
+
+
+def test_analyzer_top_slowest_and_report():
+    an = CriticalPathAnalyzer(_fill_trace(TraceBuffer()))
+    top = an.top_slowest(2)
+    assert [r["request_id"] for r in top] == [0, 1]
+    assert top[0]["top_segment"] == "transfer_peer"    # 4s beats 3s service
+    md = an.report_markdown(top_k=2)
+    assert md.startswith("# Critical-path attribution")
+    for seg in SEGMENTS:
+        assert f"| {seg} |" in md
+
+
+# =========================================================================
+# SLO burn-rate alerts
+# =========================================================================
+def _latency_spec(**kw):
+    base = dict(name="p90_latency", kind="latency", target=0.9,
+                threshold_s=0.05, fast_window_s=10.0, slow_window_s=40.0,
+                fire_burn=2.0, clear_frac=0.5)
+    base.update(kw)
+    return SLOSpec(**base)
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="latency", target=0.9)          # no threshold
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="weird", target=0.9)
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="hit_rate", target=1.5)
+    with pytest.raises(ValueError):
+        SLOSpec(name="x", kind="hit_rate", target=0.9,
+                fast_window_s=600.0, slow_window_s=60.0)
+
+
+def test_slo_burn_fires_then_clears():
+    tr = SLOTracker(_latency_spec())
+    # 0..8s of pure failures: burn = 1.0/(1-0.9) = 10 on both windows.
+    t = 0.0
+    while t < 8.0:
+        tr.observe(t, 0.0, 1.0)
+        t += 0.05
+    snap = tr.snapshot()
+    assert snap["firing"] == 1.0
+    assert snap["fired_count"] == 1.0
+    assert snap["burn_fast"] == pytest.approx(10.0)
+    # Pure good traffic until the bad epoch ages out of the slow window.
+    while t < 60.0:
+        tr.observe(t, 1.0, 0.0)
+        t += 0.05
+    snap = tr.snapshot()
+    assert snap["firing"] == 0.0
+    assert snap["cleared_count"] == 1.0
+    assert snap["burn_fast"] == pytest.approx(0.0)
+    assert snap["burn_slow"] == pytest.approx(0.0)
+
+
+def test_slo_dead_band_holds_alert():
+    # Between clear (burn 1.0) and fire (burn 2.0) the latch must HOLD:
+    # a burn rate oscillating around the threshold cannot flap the alert.
+    tr = SLOTracker(_latency_spec())
+    t = 0.0
+    while t < 8.0:                       # drive it into firing
+        tr.observe(t, 0.0, 1.0)
+        t += 0.05
+    assert tr.snapshot()["firing"] == 1.0
+    while t < 120.0:                     # 15% bad -> burn 1.5: in the band
+        tr.observe(t, 8.5, 1.5)
+        t += 0.05
+    snap = tr.snapshot()
+    assert 1.0 < snap["burn_fast"] < 2.0
+    assert snap["firing"] == 1.0         # held, not cleared
+    assert snap["cleared_count"] == 0.0
+    # ...and the same band never FIRES a quiet tracker.
+    tr2 = SLOTracker(_latency_spec())
+    t = 0.0
+    while t < 120.0:
+        tr2.observe(t, 8.5, 1.5)
+        t += 0.05
+    assert tr2.snapshot()["firing"] == 0.0
+
+
+def test_slo_budget_remaining():
+    tr = SLOTracker(_latency_spec())
+    for i in range(100):
+        tr.observe(float(i) * 0.01, 1.0, 0.0)
+    assert tr.budget_remaining == pytest.approx(1.0)
+    tr2 = SLOTracker(_latency_spec())
+    for i in range(100):                 # 50% bad vs 10% allowed: exhausted
+        tr2.observe(float(i) * 0.01, 0.0 if i % 2 else 1.0, 1.0 if i % 2 else 0.0)
+    assert tr2.budget_remaining == pytest.approx(0.0)
+
+
+def test_slo_board_routes_kinds_and_signal():
+    board = SLOBoard(parse_slo_specs("p90_ms=50:hit_rate=0.8:avail=0.999"))
+    board.on_complete(0.1, latency_s=0.01, hits=3, misses=1)
+    board.on_complete(0.2, latency_s=0.50, hits=0, misses=2)
+    board.record_failure(0.3)
+    lat = board.signal("p90_latency")
+    assert (lat.good_total, lat.bad_total) == (1.0, 1.0)
+    hr = board.signal("hit_rate")
+    assert (hr.good_total, hr.bad_total) == (3.0, 3.0)
+    av = board.signal("availability")
+    assert (av.good_total, av.bad_total) == (2.0, 1.0)
+    snap = board.snapshot()
+    assert "p90_latency.burn_fast" in snap and "availability.firing" in snap
+    assert bool(board) and not bool(SLOBoard())
+
+
+def test_parse_slo_specs_grammar():
+    specs = parse_slo_specs("p99_ms=50:hit_rate=0.8:avail=0.999")
+    by_name = {s.name: s for s in specs}
+    assert by_name["p99_latency"].target == pytest.approx(0.99)
+    assert by_name["p99_latency"].threshold_s == pytest.approx(0.05)
+    assert by_name["hit_rate"].kind == "hit_rate"
+    assert by_name["availability"].target == pytest.approx(0.999)
+    assert parse_slo_specs("") == []
+    for bad in ("bogus=1", "p200_ms=5", "p99_ms", "hit_rate"):
+        with pytest.raises(ValueError):
+            parse_slo_specs(bad)
+
+
+# =========================================================================
+# Regression sentinel
+# =========================================================================
+def _bench_doc(path, rps_history, latest_extra=None, schema=1, config=None):
+    cfg = {"requests": 300} if config is None else config
+    history = [{"ts": float(i), "config": cfg, "batched_rps": r}
+               for i, r in enumerate(rps_history)]
+    if latest_extra:
+        history[-1].update(latest_extra)
+    path.write_text(json.dumps({"schema": schema, "history": history}))
+    return str(path)
+
+
+def _judge(findings, metric):
+    return next(f for f in findings if f.metric == metric)
+
+
+def test_sentinel_flags_injected_regression(tmp_path):
+    # Acceptance criterion: a 20% batched_rps drop against a tight history
+    # exits nonzero.
+    p = _bench_doc(tmp_path / "BENCH_serve.json",
+                   [1000.0, 1010.0, 995.0, 1005.0, 990.0, 800.0])
+    f = _judge(check_file(p), "batched_rps")
+    assert f.status == "regression"
+    assert f.baseline == pytest.approx(1000.0)
+    assert f.delta_pct == pytest.approx(-20.0)
+    assert main([p]) == 1
+
+
+def test_sentinel_quiet_on_noise_and_improvement(tmp_path):
+    # Within the MAD/rel-floor noise band: quiet.
+    p1 = _bench_doc(tmp_path / "BENCH_serve.json",
+                    [1000.0, 1010.0, 995.0, 1005.0, 990.0, 970.0])
+    assert _judge(check_file(p1), "batched_rps").status == "ok"
+    # Improvements never flag, however large (one-sided test).
+    p2 = _bench_doc(tmp_path / "BENCH_serve.json",
+                    [1000.0, 1010.0, 995.0, 1005.0, 990.0, 5000.0])
+    assert _judge(check_file(p2), "batched_rps").status == "ok"
+    assert main([p2]) == 0
+
+
+def test_sentinel_lower_is_better_direction(tmp_path):
+    spec = MetricSpec("obs_overhead_pct", higher_is_better=False,
+                      rel_floor=0.50)
+    p = tmp_path / "BENCH_serve.json"
+    hist = [{"config": {}, "obs_overhead_pct": v}
+            for v in (2.0, 2.1, 1.9, 2.0, 6.0)]
+    p.write_text(json.dumps({"schema": 1, "history": hist}))
+    f = _judge(check_file(str(p), specs=[spec]), "obs_overhead_pct")
+    assert f.status == "regression"      # 6.0 > 2.0 + max(1.0, noise)
+    hist[-1]["obs_overhead_pct"] = -3.0  # big improvement: never flags
+    p.write_text(json.dumps({"schema": 1, "history": hist}))
+    f = _judge(check_file(str(p), specs=[spec]), "obs_overhead_pct")
+    assert f.status == "ok"
+
+
+def test_sentinel_abs_floor_covers_near_zero_medians(tmp_path):
+    # A metric whose healthy median sits near zero (obs_overhead_pct) gets
+    # no allowance from the relative floor; abs_floor is the backstop.
+    spec = MetricSpec("obs_overhead_pct", higher_is_better=False,
+                      rel_floor=0.50, abs_floor=15.0)
+    p = tmp_path / "BENCH_serve.json"
+    hist = [{"config": {}, "obs_overhead_pct": v}
+            for v in (-0.9, 4.2, -2.8, 8.6)]
+    p.write_text(json.dumps({"schema": 1, "history": hist}))
+    f = _judge(check_file(str(p), specs=[spec]), "obs_overhead_pct")
+    assert f.status == "ok"              # inside the absolute band
+    hist[-1]["obs_overhead_pct"] = 30.0  # genuine drift: beyond the band
+    p.write_text(json.dumps({"schema": 1, "history": hist}))
+    f = _judge(check_file(str(p), specs=[spec]), "obs_overhead_pct")
+    assert f.status == "regression"
+
+
+def test_sentinel_tolerates_pre_schema_entries(tmp_path):
+    # Entries predating the schema/config stamps are plain metric dicts —
+    # they participate in the baseline instead of poisoning it.
+    p = tmp_path / "BENCH_serve.json"
+    hist = [{"batched_rps": v} for v in (1000.0, 1005.0, 995.0, 1002.0)]
+    hist.append({"batched_rps": 700.0})
+    p.write_text(json.dumps({"history": hist}))      # no schema key at all
+    f = _judge(check_file(str(p)), "batched_rps")
+    assert f.status == "regression"
+    assert f.n_baseline == 4
+
+
+def test_sentinel_config_mismatch_falls_back_with_note(tmp_path):
+    p = tmp_path / "BENCH_serve.json"
+    hist = [{"config": {"requests": 3000}, "batched_rps": v}
+            for v in (1000.0, 1005.0, 995.0, 1002.0)]
+    hist.append({"config": {"requests": 300}, "batched_rps": 990.0})
+    p.write_text(json.dumps({"schema": 1, "history": hist}))
+    f = _judge(check_file(str(p)), "batched_rps")
+    assert f.status == "ok"
+    assert "config-mismatched" in f.note
+
+
+def test_sentinel_skips_unjudgeable_inputs(tmp_path):
+    # Newer schema: refuse to judge rather than false-alarm on format drift.
+    p1 = _bench_doc(tmp_path / "BENCH_serve.json",
+                    [1000.0, 1000.0, 1000.0, 500.0], schema=99)
+    (f1,) = check_file(p1)
+    assert f1.status == "skipped" and "newer" in f1.note
+    # Too-short history.
+    p2 = _bench_doc(tmp_path / "BENCH_serve.json", [1000.0, 500.0])
+    f2 = _judge(check_file(p2), "batched_rps")
+    assert f2.status == "skipped" and "history too short" in f2.note
+    # Unreadable file (declared name, nothing on disk).
+    (f3,) = check_file(str(tmp_path / "missing" / "BENCH_serve.json"))
+    assert f3.status == "skipped" and "unreadable" in f3.note
+    # A metric the latest entry does not carry.
+    p4 = _bench_doc(tmp_path / "BENCH_serve.json",
+                    [1000.0, 1000.0, 1000.0, 1000.0])
+    assert _judge(check_file(p4), "looped_rps").status == "skipped"
+    # None of these count as regressions.
+    assert check_paths([p1, p2, p4]).exit_code == 0
+
+
+def test_sentinel_markdown_report(tmp_path, capsys):
+    p = _bench_doc(tmp_path / "BENCH_serve.json",
+                   [1000.0, 1010.0, 995.0, 1005.0, 990.0, 800.0])
+    out = tmp_path / "regressions.md"
+    assert main([p, "--report", str(out)]) == 1
+    md = out.read_text()
+    assert md.startswith("# Bench regression sentinel")
+    assert "regression(s) flagged" in md
+    assert "| batched_rps | regression |" in md.replace("BENCH_serve.json ", "")
+    assert capsys.readouterr().out == md
+    report = check_paths([p])
+    assert render_markdown(report) == md
+
+
+# =========================================================================
+# P² streaming quantiles (est_p50 / est_p99)
+# =========================================================================
+def test_p2_exact_below_five_samples():
+    q = P2Quantile(0.5)
+    assert q.value == 0.0
+    for x in (5.0, 1.0, 3.0):
+        q.observe(x)
+    assert q.value == 3.0                # nearest-rank median of {1,3,5}
+    q99 = P2Quantile(0.99)
+    for x in (1.0, 2.0, 3.0):
+        q99.observe(x)
+    assert q99.value == 3.0
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+
+
+def test_p2_accuracy_pin_on_seeded_streams():
+    # The accuracy contract the docs cite: on smooth seeded streams the P²
+    # estimate lands within a few percent of the exact nearest-rank value.
+    rng = random.Random(7)
+    xs = [rng.expovariate(1.0) for _ in range(20000)]
+    for p in (0.50, 0.99):
+        est = P2Quantile(p)
+        for x in xs:
+            est.observe(x)
+        exact = sorted(xs)[nearest_rank_index(p, len(xs))]
+        assert est.value == pytest.approx(exact, rel=0.05)
+
+
+def test_windowed_histogram_est_vs_win_distinction():
+    # est_* is lifetime-true; win_* forgets everything older than the ring.
+    h = WindowedHistogram("lat", maxlen=128)
+    rng = random.Random(11)
+    for _ in range(4000):
+        h.observe(rng.uniform(0.9, 1.1))     # long epoch around 1.0
+    for _ in range(128):
+        h.observe(rng.uniform(9.9, 10.1))    # recent epoch fills the window
+    snap = h.snapshot()
+    assert snap["win_p50"] == pytest.approx(10.0, abs=0.2)   # window-only
+    assert snap["est_p50"] == pytest.approx(1.0, abs=0.2)    # lifetime
+    assert snap["est_p99"] <= snap["max"] + 1e-9
+    assert snap["count"] == 4128.0 and snap["window"] == 128.0
+
+
+def test_latency_reservoir_est_quantiles_survive_wrap():
+    r = LatencyReservoir(maxlen=64)
+    rng = random.Random(3)
+    for _ in range(2000):
+        r.append(rng.uniform(0.009, 0.011))
+    for _ in range(64):
+        r.append(rng.uniform(0.099, 0.101))
+    snap = r.snapshot()
+    assert snap["est_p50_s"] == pytest.approx(0.010, abs=0.002)
+    win_p50 = sorted(r)[nearest_rank_index(0.50, len(r))]
+    assert win_p50 == pytest.approx(0.100, abs=0.002)
+    assert snap["count"] == 2064.0
