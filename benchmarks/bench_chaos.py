@@ -1,0 +1,329 @@
+"""Failure-domain robustness benchmark: chaos smoke + inertness parity.
+
+Two gating cases drive ``CacheAffinityRouter`` through the same
+round-based virtual-time serving harness as ``bench_serve_batch``:
+
+  * ``chaos_kill25`` — a Zipf prefix-reuse stream over a tiered replica
+    pool with transfer flakes/timeouts injected; once a third of the
+    stream has been served, 25% of the replicas are *crashed* mid-wave
+    (``fail_replica``, not graceful deregister).  The row asserts the
+    full recovery contract:
+      - zero lost requests: every submitted request completes exactly
+        once (orphans re-queued by the crash, stale completions from the
+        dead wave dropped by the ``_finish`` at-most-once guard);
+      - the DRP back-fills each crash 1:1 and the pool returns to its
+        pre-kill width, replacements warm-started from surviving peers;
+      - the transfer retry ladder absorbed the injected flakes
+        (``engine.stats.retries/flakes > 0``) without losing a fetch;
+      - cache hit-rate *recovers*: the trailing-window hit rate regains
+        the pre-kill window rate minus a bounded tolerance before the
+        stream ends;
+      - the availability SLO holds: error budget remaining > 0 after the
+        storm (each orphan burned availability via ``record_failure``).
+  * ``chaos_idle_parity`` — the strict no-op contract: the identical
+    seeded stream through a bare router vs. a router with an *idle*
+    ``ChaosInjector`` attached plus a live heartbeat/straggler monitor
+    fed every round.  Assignment logs and final per-replica tier
+    contents must be bit-identical and every ``faults.*`` counter zero.
+
+Any violated invariant raises -> ERROR row -> the ``run.py --smoke``
+gate and CI fail (the same contract as ``bench_serve_batch``).
+
+Writes ``BENCH_chaos.json`` with an appended ``history`` entry per run.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+if __package__ in (None, ""):
+    sys.path.insert(0, "src")
+    sys.path.insert(0, "benchmarks")
+    from bench_util import append_history, zipf_sessions
+else:
+    from .bench_util import append_history, zipf_sessions
+
+from repro.core.provisioner import DynamicResourceProvisioner
+from repro.diffusion.tiers import TierSpec
+from repro.runtime.chaos import ChaosInjector, FaultSchedule
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+BLOCK = 2.0 * 1024**2
+
+
+def build_router(replicas: int, hbm_blocks: int, dram_blocks: int,
+                 chaos: Optional[ChaosInjector] = None,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 drp: Optional[DynamicResourceProvisioner] = None,
+                 warmstart_objects: int = 0,
+                 obs=None) -> CacheAffinityRouter:
+    router = CacheAffinityRouter(
+        policy="good-cache-compute",
+        window=512,
+        max_object_replicas=2 * replicas,
+        object_size_fn=lambda obj: BLOCK,
+        tier_specs=[TierSpec("hbm", hbm_blocks * BLOCK),
+                    TierSpec("dram", dram_blocks * BLOCK, 64e9)],
+        persistent_bw_bytes_per_s=4e9,
+        nic_bw_bytes_per_s=16e9,
+        provisioner=drp,
+        warmstart_objects=warmstart_objects,
+        log_assignments=True,
+        chaos=chaos,
+        heartbeat_timeout_s=heartbeat_timeout_s,
+        obs=obs,
+    )
+    for _ in range(replicas):
+        router.add_replica()
+    return router
+
+
+def _contents(router: CacheAffinityRouter) -> Dict[str, Dict[str, str]]:
+    return {name: store.tiers.contents()
+            for name, store in router.stores.items()}
+
+
+def _finished_of(wave, router) -> List[RoutedRequest]:
+    """Requests the wave's replicas actually ran: a request crashed from
+    under its assignment (``rr.replica`` reset/re-routed by
+    ``fail_replica``) is the *orphan* path — the dead replica must not
+    report it (the serve loop applies the same filter)."""
+    return [rr for a in wave for rr in a.requests
+            if rr.replica == a.replica and a.replica in router.stores]
+
+
+def drive(router: CacheAffinityRouter, sids: List[int], batch: int,
+          blocks: int, decode_s: float = 0.004,
+          kill_after: Optional[int] = None, kills: int = 0,
+          heartbeat: bool = False) -> Dict[str, object]:
+    """The bench_serve_batch round pump, extended with a mid-stream kill
+    switch and exactly-once completion accounting (virtual time)."""
+    t = 1000.0
+    completions: Dict[int, int] = {}
+    hit_log: List[float] = []       # per-completion hit fraction, in order
+    rid = 0
+    i = 0
+    wave: List = []
+    stall = 0
+    killed: List[str] = []
+    kill_idx: Optional[int] = None  # completion index when the storm hit
+    while i < len(sids) or router.queue_length() > 0 or wave:
+        before = len(hit_log)
+        finished = _finished_of(wave, router)
+        for rr in finished:
+            completions[rr.request_id] = completions.get(rr.request_id, 0) + 1
+            denom = rr.hits + rr.misses
+            hit_log.append(rr.hits / denom if denom else 0.0)
+        nxt = list(router.complete_batch(finished, now=t)) if finished else []
+        burst = sids[i:i + batch]
+        i += len(burst)
+        for sid in burst:
+            objs = tuple(f"kv:s{sid}:b{b}" for b in range(blocks))
+            router.enqueue(RoutedRequest(rid, objs, submit_time_s=t), now=t)
+            rid += 1
+        nxt.extend(router.tick(t))
+        wave = nxt
+        if heartbeat and router.monitor is not None:
+            for name in router.replicas():
+                router.record_heartbeat(name, 1.0, t)
+            router.check_liveness(t)
+        if (kill_after is not None and not killed
+                and len(hit_log) >= kill_after and wave):
+            # Crash replicas that hold live assignments so the storm
+            # orphans in-flight work (the interesting recovery path).
+            busy = []
+            for a in wave:
+                if a.replica not in busy and a.replica in router.stores:
+                    busy.append(a.replica)
+            for name in sorted(router.replicas()):
+                if name not in busy:
+                    busy.append(name)
+            killed = busy[:kills]
+            for name in killed:
+                router.fail_replica(name, now=t)
+            kill_idx = len(hit_log)
+            # The dead wave's survivors keep running; assignments on the
+            # crashed replicas are filtered out next round.
+        t += decode_s
+        stall = stall + 1 if len(hit_log) == before and not wave else 0
+        if stall > 50:
+            raise RuntimeError(
+                f"chaos drive stalled with {len(sids) - len(hit_log)} "
+                f"requests unserved (queue={router.queue_length()})")
+    return {"completions": completions, "hit_log": hit_log,
+            "killed": killed, "kill_idx": kill_idx, "rounds": rid}
+
+
+# --------------------------------------------------------------- case 1
+def run_kill25(n: int, replicas: int = 8, sessions: int = 24,
+               blocks: int = 4, alpha: float = 1.0) -> Dict[str, float]:
+    from repro.obs import Observability, parse_slo_specs
+    obs = Observability(perf_interval_s=1e9,
+                        slo_specs=parse_slo_specs("avail=0.9"))
+    chaos = ChaosInjector(
+        FaultSchedule(flake_rate=0.12, timeout_rate=0.05), seed=11)
+    drp = DynamicResourceProvisioner(
+        max_nodes=replicas, min_nodes=1, queue_threshold=10**9,
+        allocation_latency_s=(0.0, 0.0), idle_release_s=1e9)
+    router = build_router(replicas, hbm_blocks=6 * blocks,
+                          dram_blocks=24 * blocks, chaos=chaos,
+                          drp=drp, warmstart_objects=blocks, obs=obs)
+    drive(router, list(range(sessions)), 1, blocks)     # warm sessions
+    sids = zipf_sessions(n, sessions, alpha, seed=7)
+    kills = max(1, replicas // 4)
+    t0 = time.perf_counter()
+    out = drive(router, sids, 8, blocks,
+                kill_after=max(8, n // 3), kills=kills)
+    wall = time.perf_counter() - t0
+
+    f = router.faults
+    comp: Dict[int, int] = out["completions"]
+    # -- zero lost, exactly once -------------------------------------
+    lost = [r for r in range(len(sids)) if r not in comp]
+    dups = {r: c for r, c in comp.items() if c != 1}
+    if lost or dups:
+        raise RuntimeError(
+            f"chaos_kill25: lost={lost[:5]} ({len(lost)}) dup={dups} after "
+            f"killing {out['killed']} (requeued={f.requests_requeued}, "
+            f"stale_dropped={f.stale_completions_dropped})")
+    # -- the storm actually happened and was absorbed ----------------
+    if f.replicas_failed != kills or len(out["killed"]) != kills:
+        raise RuntimeError(
+            f"chaos_kill25: expected {kills} crashes, counted "
+            f"{f.replicas_failed} (killed={out['killed']})")
+    if f.requests_requeued == 0:
+        raise RuntimeError(
+            "chaos_kill25: the kill orphaned no in-flight requests — "
+            "the storm missed the serving path")
+    if f.backfills_requested != kills:
+        raise RuntimeError(
+            f"chaos_kill25: DRP back-fill not 1:1 — "
+            f"{f.backfills_requested} requests for {kills} crashes")
+    if len(router.stores) < replicas:
+        raise RuntimeError(
+            f"chaos_kill25: pool never recovered its width — "
+            f"{len(router.stores)}/{replicas} replicas at end of stream")
+    es = router.engine.stats
+    if es.flakes + es.timeouts == 0 or es.retries == 0:
+        raise RuntimeError(
+            f"chaos_kill25: injected transfer faults never fired "
+            f"(flakes={es.flakes} timeouts={es.timeouts} "
+            f"retries={es.retries}) — retry ladder untested")
+    # -- bounded hit-rate recovery -----------------------------------
+    hit_log: List[float] = out["hit_log"]
+    kill_idx: int = out["kill_idx"]
+    W = max(20, n // 15)
+    pre = sum(hit_log[max(0, kill_idx - W):kill_idx]) / min(W, kill_idx)
+    tail = hit_log[-W:]
+    post = sum(tail) / len(tail)
+    if post < pre - 0.15:
+        raise RuntimeError(
+            f"chaos_kill25: hit rate never recovered — pre-kill window "
+            f"{pre:.2f}, trailing window {post:.2f} (tolerance 0.15)")
+    recovery = None
+    for j in range(kill_idx, len(hit_log) - W + 1):
+        win = hit_log[j:j + W]
+        if sum(win) / W >= pre - 0.15:
+            recovery = j - kill_idx
+            break
+    # -- availability SLO held ---------------------------------------
+    snap = obs.slo.trackers["availability"].snapshot()
+    if snap["budget_remaining"] <= 0.0:
+        raise RuntimeError(
+            f"chaos_kill25: availability error budget exhausted "
+            f"(remaining={snap['budget_remaining']:.2%}) by "
+            f"{f.requests_requeued} orphaned requests")
+    return {
+        "served": float(len(comp)),
+        "rps": len(comp) / max(wall, 1e-9),
+        "kills": float(kills),
+        "requeued": float(f.requests_requeued),
+        "stale_dropped": float(f.stale_completions_dropped),
+        "quarantined": float(f.index_entries_quarantined),
+        "backfills": float(f.backfills_requested),
+        "warm_clones": float(router.warmstart.cloned),
+        "retries": float(es.retries),
+        "flakes": float(es.flakes),
+        "timeouts": float(es.timeouts),
+        "failovers": float(es.failovers),
+        "hit_pre": pre,
+        "hit_post": post,
+        "recovery_requests": float(-1 if recovery is None else recovery),
+        "avail_budget": snap["budget_remaining"],
+        "wall_s": wall,
+    }
+
+
+# --------------------------------------------------------------- case 2
+def run_idle_parity(n: int, replicas: int = 6, sessions: int = 16,
+                    blocks: int = 4, alpha: float = 1.0) -> Dict[str, float]:
+    """Attached-but-idle chaos plane must be bit-identical to no plane."""
+    sids = zipf_sessions(n, sessions, alpha, seed=7)
+    results = {}
+    t0 = time.perf_counter()
+    for mode in ("bare", "idle_chaos"):
+        chaos = ChaosInjector(FaultSchedule(), seed=3) \
+            if mode == "idle_chaos" else None
+        router = build_router(
+            replicas, hbm_blocks=6 * blocks, dram_blocks=24 * blocks,
+            chaos=chaos,
+            heartbeat_timeout_s=1e9 if mode == "idle_chaos" else None)
+        drive(router, list(range(sessions)), 1, blocks,
+              heartbeat=mode == "idle_chaos")
+        out = drive(router, sids, 8, blocks,
+                    heartbeat=mode == "idle_chaos")
+        results[mode] = (router, out)
+    wall = time.perf_counter() - t0
+    bare, idle = results["bare"][0], results["idle_chaos"][0]
+    if bare.assignment_log != idle.assignment_log:
+        a, b = bare.assignment_log, idle.assignment_log
+        d = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                 min(len(a), len(b)))
+        raise RuntimeError(
+            f"chaos_idle_parity: attached-but-idle chaos plane diverged "
+            f"from the bare router at decision {d}: "
+            f"bare={a[d:d + 3]} idle={b[d:d + 3]}")
+    if _contents(bare) != _contents(idle):
+        raise RuntimeError(
+            "chaos_idle_parity: idle chaos plane left different tier "
+            "contents than the bare router")
+    dirty = {k: v for k, v in idle.faults.snapshot().items() if v != 0.0}
+    if dirty:
+        raise RuntimeError(
+            f"chaos_idle_parity: idle injector touched fault counters: "
+            f"{dirty}")
+    served = len(results["idle_chaos"][1]["completions"])
+    return {"served": float(served), "rps": served / max(wall, 1e-9),
+            "decisions": float(len(bare.assignment_log)), "wall_s": wall}
+
+
+def fmt(extras: Dict[str, float], keys: List[str]) -> str:
+    return ";".join(f"{k}={extras[k]:.3g}" for k in keys if k in extras)
+
+
+def main(n: int = 2000) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    kill = run_kill25(n)
+    rows.append(("chaos_kill25",
+                 round(1e6 * kill["wall_s"] / max(kill["served"], 1), 2),
+                 fmt(kill, ["served", "kills", "requeued", "stale_dropped",
+                            "backfills", "retries", "flakes", "hit_pre",
+                            "hit_post", "recovery_requests", "avail_budget"])))
+    par = run_idle_parity(n)
+    rows.append(("chaos_idle_parity",
+                 round(1e6 * par["wall_s"] / max(par["served"], 1), 2),
+                 fmt(par, ["served", "decisions"])))
+    append_history("BENCH_chaos.json", {
+        "n": n,
+        "kill25": {k: round(v, 4) for k, v in kill.items()},
+        "idle_parity": {k: round(v, 4) for k, v in par.items()},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    n_arg = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
+    for row in main(n_arg):
+        print(",".join(map(str, row)))

@@ -61,6 +61,11 @@ def main() -> None:
         ("scheduler", "bench_scheduler", n_sched),
         ("serve_routing", "bench_serve_routing", n_serve),
         ("serve_batch", "bench_serve_batch", n_serve),
+        # Robustness plane: kills 25% of the replica pool mid-Zipf-stream
+        # and asserts zero lost requests, 1:1 DRP back-fill, bounded
+        # hit-rate recovery, and availability-SLO budget intact — plus the
+        # attached-but-idle chaos plane staying bit-identical to no plane.
+        ("chaos", "bench_chaos", n_serve),
         ("diffusion_tiers", "bench_diffusion_tiers", n_serve),
         ("dispatch_vec", "bench_dispatch_vec", n_idx),
         ("index_scale", "bench_index_scale", n_idx),

@@ -165,6 +165,13 @@ class DataAwareDispatcher:
         # E_set: executor registry + free list (FIFO "next free executor").
         self._executors: Dict[str, ExecutorState] = {}
         self._free: "OrderedDict[str, None]" = OrderedDict()
+        # Straggler dispatch penalties (robustness plane): executors named
+        # here lose cache-affinity *ties* — among free holders at the same
+        # maximal score, an unpenalized one wins; a penalized holder is
+        # still chosen when it is strictly best or the only live option.
+        # Tie resolution only, so an empty map (the default) leaves every
+        # decision bit-identical; fed by HeartbeatMonitor.stragglers().
+        self.penalties: Dict[str, float] = {}
         self.stats = SchedulerStats()
         # window-scan memoization: a failed scan stays failed until executor
         # states, the queue prefix, or the index change.
@@ -224,7 +231,13 @@ class DataAwareDispatcher:
     def deregister_executor(self, name: str) -> None:
         self._executors.pop(name, None)
         self._free.pop(name, None)
+        self.penalties.pop(name, None)
         self.index.drop_executor(name)
+        self._scan_dirty = True
+
+    def set_penalties(self, penalties: Dict[str, float]) -> None:
+        """Replace the straggler tie-penalty set (see ``self.penalties``)."""
+        self.penalties = dict(penalties)
         self._scan_dirty = True
 
     def executor_state(self, name: str) -> ExecutorState:
@@ -350,6 +363,7 @@ class DataAwareDispatcher:
         # is what keeps utilization from collapsing behind one hot node.
         scanned = 0
         executors = self._executors
+        pen = self.penalties
         for item in self._queue.values():
             if scanned >= self.window:
                 break
@@ -366,8 +380,14 @@ class DataAwareDispatcher:
                         continue
                     any_live = True
                     if st == ExecutorState.FREE:
-                        best_free = e
-                        break
+                        # Every holder scores 1 here, so "first free holder"
+                        # is pure tie-breaking: a penalized straggler yields
+                        # to any later unpenalized free holder.
+                        if not pen or e not in pen:
+                            best_free = e
+                            break
+                        if best_free is None:
+                            best_free = e
             else:
                 # tier-aware: an HBM-resident copy outweighs a disk-resident
                 # one, so among free holders the fastest-tier one wins.
@@ -384,6 +404,10 @@ class DataAwareDispatcher:
                         counts[e] = c
                         if st == ExecutorState.FREE and c > best_cnt:
                             best_free, best_cnt = e, c
+                        elif (pen and st == ExecutorState.FREE
+                                and c == best_cnt and best_free is not None
+                                and best_free in pen and e not in pen):
+                            best_free = e   # straggler loses the tie
             if best_free is not None:
                 return self._assign(best_free, item)
             # No live holder is free: the tail decision, evaluated on the

@@ -143,6 +143,20 @@ class CentralizedIndex:
             if self._listeners:
                 self._emit("remove", f, executor, None)
 
+    def quarantine_executor(self, executor: str) -> int:
+        """Crash semantics: ``drop_executor`` *plus* purge of the loose-
+        coherence queue.  A clean scale-down may let queued updates drain
+        (the executor's entries are already gone; applying them is
+        idempotent noise), but after a crash a queued *add* naming the dead
+        executor would resurrect a claim dispatch then routes to — so every
+        pending op naming it dies with it.  Returns the purged-op count."""
+        purged = sum(1 for item in self._pending if item[3] == executor)
+        if purged:
+            self._pending = deque(item for item in self._pending
+                                  if item[3] != executor)
+        self.drop_executor(executor)
+        return purged
+
     def publish(
         self,
         executor: str,

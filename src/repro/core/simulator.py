@@ -240,7 +240,7 @@ class Simulator:
 
     # event kinds ordered deterministically via a sequence counter
     def __init__(self, workload: Workload, config: SimConfig,
-                 profile: HardwareProfile, obs=None):
+                 profile: HardwareProfile, obs=None, chaos=None):
         self.wl = workload
         self.cfg = config
         self.hw = profile
@@ -313,6 +313,20 @@ class Simulator:
         self._series: List[TimePoint] = []
         self.interval_completion: Dict[int, float] = {}
         self._failures = sorted(config.failures)
+        # Chaos plane (runtime.chaos.ChaosInjector): crash times and
+        # straggle episodes are pre-drawn from the injector's seeded RNG at
+        # construction, so the event schedule is deterministic and an
+        # attached-but-idle injector leaves the run bit-identical (no RNG
+        # draws, no events).
+        self.chaos = chaos
+        self._sim_straggles: Dict[int, Tuple[float, float]] = {}
+        if chaos is not None and not chaos.idle:
+            horizon = max(1.0, workload.ideal_span_s)
+            self._failures = sorted(
+                self._failures
+                + chaos.draw_sim_crashes(config.max_nodes, horizon))
+            self._sim_straggles = chaos.draw_sim_straggles(
+                config.max_nodes, horizon)
         # Observability plane (repro.obs): when wired, every sample tick
         # publishes the DES's live state as gauges in the same dotted
         # namespace the serving path uses (perf.*, coherence.stale_claims)
@@ -325,6 +339,8 @@ class Simulator:
             bus = getattr(self.index, "bus", None)
             if bus is not None and hasattr(bus, "stats"):
                 obs.registry.register_source("coherence_bus", bus.stats)
+            if chaos is not None:
+                obs.registry.register_source("faults", chaos.stats)
 
     # ----------------------------------------------------------- event infra
     def _push(self, t: float, kind: str, payload: object = None) -> None:
@@ -543,7 +559,13 @@ class Simulator:
             self.stale_claims += 1
             if actual_local == 0:
                 self.misdirected += 1
-        return o + data_t + task.compute_time_s, engaged
+        compute_t = task.compute_time_s
+        if self._sim_straggles:
+            ep = self._sim_straggles.get(int(node.name[1:]))
+            if ep is not None and ep[0] <= self.now < ep[1]:
+                # Straggle episode: degraded service (slow node), not death.
+                compute_t *= self.chaos.schedule.straggle_factor
+        return o + data_t + compute_t, engaged
 
     def _find_peer(self, f: str, exclude: str) -> Optional[Node]:
         """Least-NIC-loaded live node holding f (per the data fetch policy)."""
@@ -707,6 +729,7 @@ class Simulator:
 
 def run_experiment(
     workload: Workload, config: SimConfig,
-    profile: Optional[HardwareProfile] = None, obs=None,
+    profile: Optional[HardwareProfile] = None, obs=None, chaos=None,
 ) -> SimResult:
-    return Simulator(workload, config, profile or teragrid_profile(), obs=obs).run()
+    return Simulator(workload, config, profile or teragrid_profile(),
+                     obs=obs, chaos=chaos).run()

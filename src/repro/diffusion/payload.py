@@ -44,7 +44,7 @@ from __future__ import annotations
 import hashlib
 import os
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -284,12 +284,23 @@ class RealPayload(PayloadBackend):
         spill_dir: Optional[str] = None,
         chunk_bytes: int = 64 * 1024 * 1024,
         device: Any = None,
+        corrupt_mode: str = "raise",
     ):
         super().__init__(measured)
+        if corrupt_mode not in ("raise", "recover"):
+            raise ValueError(f"unknown corrupt_mode {corrupt_mode!r}")
         self.name = name
         self.spill_dir = spill_dir
         self.chunk_bytes = max(1, int(chunk_bytes))
         self.device = device
+        # Serving-path degradation: "raise" surfaces a poisoned spill chunk
+        # as IOError (checkpoint/training semantics — corrupt state halts);
+        # "recover" drops the poisoned copy, fires ``on_corruption(obj)``
+        # (the router quarantines the index entry and re-fetches from a
+        # clean source), and the read returns None like a placeholder.
+        self.corrupt_mode = corrupt_mode
+        self.on_corruption: Optional[Callable[[str], None]] = None
+        self.corruptions_recovered = 0
         self._tiers: Dict[str, str] = {}
         self._templates: Dict[str, Any] = {}
         # leaves: in-memory ndarray/device-array, or _SpilledLeaf on disk
@@ -382,10 +393,25 @@ class RealPayload(PayloadBackend):
             self._leaves[obj] = self._home(obj, host, tier)
         self._tiers[obj] = tier
 
+    def _recover_corrupt(self, obj: str) -> None:
+        """Poisoned spill copy: drop it (remaining chunks freed), notify the
+        owner so the index entry quarantines and a re-fetch is queued."""
+        self.corruptions_recovered += 1
+        self.dropped(obj)
+        if self.on_corruption is not None:
+            self.on_corruption(obj)
+
     def get(self, obj: str) -> Optional[Any]:
         if obj not in self._leaves:
             return None
-        return _tree_rebuild(self._templates[obj], self._to_host(obj))
+        try:
+            host = self._to_host(obj)
+        except IOError:
+            if self.corrupt_mode != "recover":
+                raise
+            self._recover_corrupt(obj)
+            return None                 # degrades to placeholder semantics
+        return _tree_rebuild(self._templates[obj], host)
 
     def value(self, obj: str) -> Optional[Any]:
         """The payload in its *current* home (device arrays when resident in
@@ -394,7 +420,13 @@ class RealPayload(PayloadBackend):
             return None
         leaves = self._leaves[obj]
         if leaves and isinstance(leaves[0], _SpilledLeaf):
-            leaves = [self._read_spilled(s) for s in leaves]
+            try:
+                leaves = [self._read_spilled(s) for s in leaves]
+            except IOError:
+                if self.corrupt_mode != "recover":
+                    raise
+                self._recover_corrupt(obj)
+                return None
         return _tree_rebuild(self._templates[obj], leaves)
 
     def has(self, obj: str) -> bool:
@@ -415,7 +447,13 @@ class RealPayload(PayloadBackend):
             return
         old = self._leaves[obj]
         t0 = time.perf_counter()
-        host = self._to_host(obj)       # verified read out of the old home
+        try:
+            host = self._to_host(obj)   # verified read out of the old home
+        except IOError:
+            if self.corrupt_mode != "recover":
+                raise
+            self._recover_corrupt(obj)
+            return                      # no move recorded; copy is gone
         self._leaves[obj] = self._home(obj, host, tier)
         dt = time.perf_counter() - t0
         self._free_spill(old)

@@ -93,6 +93,13 @@ class TransferStats:
     payload_moves: int = 0          # real-mode fetches that moved actual bytes
     payload_bytes_moved: float = 0.0
     placeholder_fetches: int = 0    # real-mode fetches with no bytes to move
+    retries: int = 0                # resolution attempts repeated after a fault
+    flakes: int = 0                 # transient per-attempt failures absorbed
+    timeouts: int = 0               # per-flight deadline violations absorbed
+    failovers: int = 0              # source re-resolutions (retry or dead peer)
+    dead_dest_cancels: int = 0      # flights killed because the dest crashed
+    joiners_failed: int = 0         # single-flight joiners notified of failure
+    degraded_to_persistent: int = 0  # retry budget exhausted -> ladder floor
 
     def snapshot(self) -> Dict[str, float]:
         """Registry-source view (prefixed ``transfer.`` when adopted); the
@@ -118,6 +125,10 @@ class TransferEngine:
         use_peers: bool = True,
         speculative_slot_frac: float = 0.5,
         payload: str = "modeled",
+        timeout_s: Optional[float] = None,
+        max_retries: int = 3,
+        retry_backoff_s: float = 0.05,
+        chaos: Optional[Any] = None,
     ):
         if payload not in ("modeled", "real"):
             raise ValueError(f"payload must be 'modeled' or 'real': {payload!r}")
@@ -136,9 +147,20 @@ class TransferEngine:
         # Admission cap for the speculative class (prefetch / warm-start):
         # at most this fraction of the slot pool may carry speculation.
         self.speculative_slot_frac = speculative_slot_frac
+        # Robustness plane: a per-flight deadline (``timeout_s``, peers only
+        # — persistent is the degradation floor and may always be used), a
+        # bounded retry budget with exponential backoff, and an optional
+        # ChaosInjector consulted once per resolution attempt.  All four
+        # defaults leave resolution single-attempt and bit-identical to the
+        # pre-robustness engine.
+        self.timeout_s = timeout_s
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = retry_backoff_s
+        self.chaos = chaos
         self._inflight: Dict[Tuple[str, str], Transfer] = {}
         self._engaged: Dict[Tuple[str, str], List[Tuple[BandwidthResource, float]]] = {}
         self._cancel_listeners: List[Callable[[str, str, str], None]] = []
+        self._failure_listeners: List[Callable[[str, str, str, int], None]] = []
         self.stats = TransferStats()
         # Observability hook (repro.obs.TraceBuffer or None): every started
         # flight and real payload move records a structural span.  The
@@ -157,8 +179,86 @@ class TransferEngine:
     def persistent_payload(self, obj: str) -> Optional[Any]:
         return self._persistent_payloads.get(obj)
 
-    def deregister(self, name: str) -> None:
+    def deregister(self, name: str, now: Optional[float] = None) -> None:
+        """Clean scale-down exit.  Even a *clean* exit must evacuate the
+        flight plane: inbound flights keyed by the dead destination used to
+        hold their slot and engaged omega until their ready time drained,
+        and flights *sourced* from the departing peer would have completed
+        against a store that no longer exists — both leaks, both fixed by
+        routing through the shared evacuation path."""
+        self._evacuate(name, now)
+
+    def fail_replica(self, name: str, now: float) -> int:
+        """Crash exit: same evacuation as ``deregister`` but the affected
+        flights are failures, not scale-down bookkeeping — single-flight
+        joiners are notified through the failure listeners instead of
+        silently losing their transfer.  Returns the number of flights
+        touched (cancelled inbound + failed-over outbound)."""
+        return self._evacuate(name, now, crash=True)
+
+    def _evacuate(self, name: str, now: Optional[float],
+                  crash: bool = False) -> int:
+        # Store goes first so _pick_source can no longer resolve to the
+        # dead replica while we re-source its outbound flights.
         self.stores.pop(name, None)
+        if now is not None:
+            self.drain(now)
+        affected = 0
+        # Inbound: the destination died, so the copy has nowhere to land.
+        # cancel() releases the slot and engaged omega without crediting
+        # bytes (preserving started == completed + preempted); joiners of
+        # the single flight are told it is terminal instead of hanging.
+        for key in [k for k in self._inflight if k[0] == name]:
+            tr = self._inflight[key]
+            kind, shared = tr.kind, tr.shared_with
+            self.cancel(*key)
+            affected += 1
+            if crash:
+                self.stats.dead_dest_cancels += 1
+            if shared:
+                self.stats.joiners_failed += shared
+            for fn in self._failure_listeners:
+                fn(name, key[1], kind, shared)
+        # Outbound: flights reading *from* the dead peer fail over to the
+        # next-cheapest surviving source (peer -> peer -> persistent), the
+        # graceful-degradation ladder.  The dead source's engaged omega is
+        # released uncredited; the new source is engaged and charged from
+        # the failure point forward.
+        label = f"peer:{name}"
+        for key, tr in list(self._inflight.items()):
+            if tr.source != label:
+                continue
+            dst_store = self.stores.get(tr.dest)
+            if dst_store is None:
+                self.cancel(*key)   # destination is gone too: terminal
+                affected += 1
+                continue
+            for res, _nbytes in self._engaged.pop(key, ()):
+                res.end(0.0)
+            source, src_res = self._pick_source(tr.obj, tr.size_bytes,
+                                                tr.dest, dst_store)
+            restart = tr.start_s if now is None else max(now, tr.start_s)
+            cost = copy_time(tr.size_bytes, src_res, dst_store.nic,
+                             latency_s=self.latency_s)
+            src_res.begin()
+            dst_store.nic.begin()
+            self._engaged[key] = [(src_res, tr.size_bytes),
+                                  (dst_store.nic, 0.0)]
+            tr.source, tr.start_s, tr.ready_s = source, restart, restart + cost
+            self.stats.failovers += 1
+            if source == PERSISTENT:
+                self.stats.degraded_to_persistent += 1
+                self.stats.persistent_fetches += 1
+                self.stats.bytes_from_persistent += tr.size_bytes
+            else:
+                self.stats.peer_fetches += 1
+                self.stats.bytes_from_peers += tr.size_bytes
+            if self.trace is not None:
+                self.trace.record(-1, tr.obj, "failover", restart,
+                                  tr.ready_s, tr.dest, "",
+                                  (label, source, tr.kind))
+            affected += 1
+        return affected
 
     def drain(self, now: float) -> int:
         """Release bandwidth of transfers finished by ``now``; returns count."""
@@ -186,6 +286,12 @@ class TransferEngine:
     def add_cancel_listener(self, fn: Callable[[str, str, str], None]) -> None:
         """``fn(dest, obj, kind)`` fires when an in-flight copy is preempted."""
         self._cancel_listeners.append(fn)
+
+    def add_failure_listener(self, fn: Callable[[str, str, str, int], None]) -> None:
+        """``fn(dest, obj, kind, joiners)`` fires when a flight terminates in
+        failure (destination evacuated): every single-flight joiner that was
+        riding the transfer learns it is dead instead of waiting forever."""
+        self._failure_listeners.append(fn)
 
     def _speculative_inflight(self) -> int:
         return sum(1 for tr in self._inflight.values() if tr.kind != DEMAND)
@@ -365,9 +471,9 @@ class TransferEngine:
             self.stats.queue_wait_s += start - now
 
         dst_store = self.stores[dest]
-        source, src_res = self._pick_source(obj, size_bytes, dest, dst_store,
-                                            loc_cache)
-        cost = copy_time(size_bytes, src_res, dst_store.nic, latency_s=self.latency_s)
+        source, src_res, cost, backoff = self._resolve_with_retries(
+            obj, size_bytes, dest, dst_store, loc_cache, start)
+        start += backoff            # faulted attempts delay the real copy
         src_res.begin()
         dst_store.nic.begin()
         tr = Transfer(obj, size_bytes, dest, source, start, start + cost, kind)
@@ -391,6 +497,66 @@ class TransferEngine:
         if self.payload == "real":
             self._move_payload(tr, dst_store)
         return tr
+
+    def _resolve_with_retries(
+        self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore,
+        loc_cache: Optional[Dict[str, List[str]]], start: float,
+    ) -> Tuple[str, BandwidthResource, float, float]:
+        """Source resolution under the fault plane: returns
+        ``(source, src_res, cost, backoff)``.
+
+        Each attempt picks the cheapest source (excluding peers that already
+        faulted this resolution) and checks two fault gates: the per-flight
+        deadline (``timeout_s`` — a peer whose modeled copy would exceed it
+        is treated as timed out; persistent is exempt, it is the ladder
+        floor) and the chaos injector's per-attempt verdict.  A faulted
+        attempt adds one exponential-backoff step and, when the source was a
+        peer, fails over past it (``stats.failovers``).  When the retry
+        budget is spent the resolution degrades to persistent
+        unconditionally — bounded, never an unserved demand.  With no
+        ``timeout_s`` and no chaos this is exactly one attempt with zero
+        backoff: bit-identical to the pre-robustness resolution.
+        """
+        exclude: Optional[set] = None
+        backoff = 0.0
+        attempt = 0
+        while True:
+            source, src_res = self._pick_source(obj, size_bytes, dest,
+                                                dst_store, loc_cache, exclude)
+            cost = copy_time(size_bytes, src_res, dst_store.nic,
+                             latency_s=self.latency_s)
+            fault: Optional[str] = None
+            if (self.timeout_s is not None and source != PERSISTENT
+                    and cost > self.timeout_s):
+                fault = "timeout"
+            elif self.chaos is not None:
+                fault = self.chaos.transfer_fault(obj, dest, source, attempt)
+            if fault is None:
+                return source, src_res, cost, backoff
+            if fault == "timeout":
+                self.stats.timeouts += 1
+            else:
+                self.stats.flakes += 1
+            if self.trace is not None:
+                self.trace.record(-1, obj, "retry", start + backoff,
+                                  start + backoff, dest, "",
+                                  (source, fault, attempt))
+            if attempt >= self.max_retries:
+                # Retry budget exhausted: take the degradation floor.
+                if source != PERSISTENT:
+                    self.stats.degraded_to_persistent += 1
+                    source, src_res = PERSISTENT, self.persistent_link
+                    cost = copy_time(size_bytes, src_res, dst_store.nic,
+                                     latency_s=self.latency_s)
+                return source, src_res, cost, backoff
+            self.stats.retries += 1
+            backoff += self.retry_backoff_s * (2.0 ** attempt)
+            if source != PERSISTENT:
+                if exclude is None:
+                    exclude = set()
+                exclude.add(source[len("peer:"):])
+                self.stats.failovers += 1
+            attempt += 1
 
     def _move_payload(self, tr: Transfer, dst_store: TieredStore) -> None:
         """Real mode: copy the object's actual bytes from the chosen source
@@ -436,6 +602,7 @@ class TransferEngine:
     def _pick_source(
         self, obj: str, size_bytes: float, dest: str, dst_store: TieredStore,
         loc_cache: Optional[Dict[str, List[str]]] = None,
+        exclude: Optional[set] = None,
     ) -> Tuple[str, BandwidthResource]:
         """Cheapest of {least-loaded peer NIC, persistent store} by copy_time.
 
@@ -443,7 +610,8 @@ class TransferEngine:
         for the duration of one batch; per-candidate checks below stay live,
         and any holder admitted *during* the batch is excluded anyway by the
         in-flight check (its own copy has not landed), exactly as sequential
-        fetches would exclude it.
+        fetches would exclude it.  ``exclude`` names peers that already
+        faulted during the current resolution (retry failover).
         """
         best_peer: Optional[str] = None
         best_nic: Optional[BandwidthResource] = None
@@ -459,6 +627,8 @@ class TransferEngine:
                     candidates = loc_cache[obj] = sorted(self.index.locations(obj))
             for e in candidates:
                 if e == dest:
+                    continue
+                if exclude is not None and e in exclude:
                     continue
                 peer = self.stores.get(e)
                 if peer is None or obj not in peer:

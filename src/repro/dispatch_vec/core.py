@@ -381,6 +381,21 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 best_key, best_name = k, name
         return best_name
 
+    def _filter_penalized(self, ties: np.ndarray,
+                          names: List[str]) -> np.ndarray:
+        """Straggler tie rule, reference-equivalent: the reference's
+        steal-at-equal iteration ends on the first *unpenalized* executor to
+        reach the max (else the first overall), which is exactly the plain
+        reach-order tie-break restricted to the unpenalized subset when that
+        subset is non-empty."""
+        if not self.penalties or ties.size <= 1:
+            return ties
+        pen = self.penalties
+        unpen = [int(t) for t in ties if names[int(t)] not in pen]
+        if unpen and len(unpen) < ties.size:
+            return np.asarray(unpen, dtype=ties.dtype)
+        return ties
+
     def _choose_executor(self, row: int) -> str:
         """Best free executor for one item (phase-1 decision), reference-
         identical: weighted-count argmax among frees, else first free."""
@@ -390,6 +405,7 @@ class VectorizedDispatcher(DataAwareDispatcher):
         if mx <= 0.0:
             return names[0]
         ties = np.nonzero(vals == mx)[0]
+        ties = self._filter_penalized(ties, names)
         if ties.size == 1:
             return names[int(ties[0])]
         return self._tie_break(row, [names[i] for i in ties],
@@ -612,6 +628,7 @@ class VectorizedDispatcher(DataAwareDispatcher):
             if maxw[i] > 0.0:
                 ties_mask = active & (SwF[i] == maxw[i])
                 ties = np.nonzero(ties_mask)[0]
+                ties = self._filter_penalized(ties, free_names)
                 if ties.size == 1:
                     name = free_names[int(ties[0])]
                 else:

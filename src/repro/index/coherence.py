@@ -78,6 +78,20 @@ class CoherenceBus:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues)
 
+    def purge_executor(self, executor: str) -> int:
+        """Drop every queued op naming ``executor`` (crash quarantine).
+
+        Per-queue rebuild preserves relative order of the survivors, so the
+        monotone-due-time invariant the drains rely on is untouched.
+        Returns the number of ops purged."""
+        purged = 0
+        for sid, q in enumerate(self._queues):
+            kept = [op for op in q if op[3] != executor]
+            if len(kept) != len(q):
+                purged += len(q) - len(kept)
+                self._queues[sid] = deque(kept)
+        return purged
+
     def enqueue(
         self,
         now: float,

@@ -87,6 +87,13 @@ class ShardedIndex:
         self._listeners: List[Callable[[str, str, str, Optional[str]], None]] = []
         self.scan_workers = int(scan_workers)
         self.shard_rpc_latency_s = shard_rpc_latency_s
+        # Chaos-plane hook (runtime.chaos): when set, every enqueue_update
+        # consults it and a True verdict drops the update message on the
+        # floor — a lost shard RPC on the coherence wire.  Loose coherence
+        # already tolerates staleness (stale-claim accounting, publish
+        # re-sync); the hook makes that tolerance testable under injected
+        # loss.  None (default) costs nothing.
+        self.rpc_loss: Optional[Callable[[], bool]] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         if self.scan_workers > 0:
             self._pool = ThreadPoolExecutor(
@@ -190,6 +197,16 @@ class ShardedIndex:
         if removed:
             self.version += 1
 
+    def quarantine_executor(self, executor: str) -> int:
+        """Crash semantics: immediate entry withdrawal in every shard plus a
+        ``CoherenceBus`` purge of queued updates naming the dead executor —
+        without the purge a due *add* would re-point dispatch at a crashed
+        node.  Returns the purged-op count (listener-visible removals happen
+        through ``drop_executor`` as usual)."""
+        purged = self.bus.purge_executor(executor)
+        self.drop_executor(executor)
+        return purged
+
     def publish(
         self,
         executor: str,
@@ -252,6 +269,8 @@ class ShardedIndex:
     # -- loose coherence ------------------------------------------------------
     def enqueue_update(self, now: float, op: str, file: str, executor: str,
                        tier: Optional[str] = None) -> None:
+        if self.rpc_loss is not None and self.rpc_loss():
+            return                      # injected shard-RPC loss (counted)
         self.bus.enqueue(now, op, file, executor, self.ring.shard_of(file), tier)
 
     def apply_updates(self, now: float) -> int:

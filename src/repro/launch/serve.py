@@ -65,6 +65,15 @@ def main() -> None:
                          "'p99_ms=50:hit_rate=0.8:avail=0.999' — tracked "
                          "live (error budget + multi-window burn alerts) "
                          "and reported as slo.* metrics")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="seeded fault injection (robustness plane): replica "
+                         "crashes, stragglers, transfer flakes/timeouts, and "
+                         "KV-spill corruption at the serving-default mix; "
+                         "the run reports faults.* recovery counters")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    help="enable the heartbeat liveness plane: lapsed beats "
+                         "crash the replica, EWMA stragglers lose dispatch "
+                         "ties (seconds; implied 10.0 with --chaos)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -76,6 +85,13 @@ def main() -> None:
         obs = Observability(perf_interval_s=1.0,
                             trace_sample=args.trace_sample,
                             slo_specs=parse_slo_specs(args.slo))
+    chaos = None
+    heartbeat_timeout = args.heartbeat_timeout
+    if args.chaos is not None:
+        from ..runtime.chaos import ChaosInjector, FaultSchedule
+        chaos = ChaosInjector(FaultSchedule.serving_default(), seed=args.chaos)
+        if heartbeat_timeout is None:
+            heartbeat_timeout = 10.0
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
                           min_replicas=args.min_replicas, cache_cap=args.cache_cap,
                           max_sessions=args.max_sessions,
@@ -83,7 +99,8 @@ def main() -> None:
                           eviction=args.eviction,
                           dispatcher_impl=args.dispatcher,
                           batch_drain=args.batch_drain,
-                          obs=obs)
+                          obs=obs, chaos=chaos,
+                          heartbeat_timeout_s=heartbeat_timeout)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
@@ -108,6 +125,16 @@ def main() -> None:
           # window-only percentiles (exact over the latency reservoir's
           # most recent samples, blind to older ones) — labeled as such.
           f"win_p50={r.p50_s * 1e3:.1f}ms win_p99={r.p99_s * 1e3:.1f}ms")
+    if chaos is not None:
+        f = srv.router.faults
+        lost = len(srv.router._requests) + srv.router.queue_length()
+        print(f"chaos: crashed={f.replicas_failed} "
+              f"requeued={f.requests_requeued} "
+              f"stale_dropped={f.stale_completions_dropped} "
+              f"quarantined={f.index_entries_quarantined} "
+              f"backfills={f.backfills_requested} "
+              f"corruptions_recovered={f.payload_corruptions_recovered} "
+              f"lost_requests={lost}")
     if obs is not None:
         paths = obs.write_snapshot(args.metrics_dir)
         m = obs.collect_all()

@@ -87,6 +87,13 @@ class HeartbeatMonitor:
             return []
         return [n for n, t in times.items() if t > self.straggler_factor * med]
 
+    def forget(self, name: str) -> None:
+        """Worker left the fleet (crash or scale-down): stop tracking it so
+        its stale EWMA cannot skew the straggler median and a re-registered
+        namesake starts with a clean window."""
+        with self._lock:
+            self.workers.pop(name, None)
+
     def alive(self) -> List[str]:
         with self._lock:
             return [n for n, w in self.workers.items() if not w.lost]

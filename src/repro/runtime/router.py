@@ -35,6 +35,8 @@ from ..diffusion.tiers import TieredStore, TierSpec, default_tier_weights
 from ..diffusion.transfer import TransferEngine
 from ..index.warmstart import WarmStartReport, WarmStartStats, clone_hottest
 from ..obs.registry import P2Quantile
+from .chaos import FaultStats
+from .fault_tolerance import HeartbeatMonitor
 
 __all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "LatencyReservoir",
            "ReplicaStore", "RoutedRequest", "RouterStats"]
@@ -357,6 +359,26 @@ class CacheAffinityRouter:
         # transfer -> completion, batch drains as structural spans) into
         # its trace ring.  Decisions are identical either way.  ----
         obs: Optional[Any] = None,
+        # ---- robustness plane (failure domain).  All default OFF: with no
+        # timeout, no chaos injector, and no heartbeat monitor the serving
+        # path is bit-identical to the pre-robustness router (the chaos
+        # parity bench gates on it).
+        #   transfer_timeout_s     — per-flight peer-copy deadline; a peer
+        #       source whose copy_time exceeds it is treated as dead and the
+        #       fetch retries against the next-cheapest source.
+        #   transfer_max_retries   — retry budget per fetch before the
+        #       resolution degrades unconditionally to persistent storage.
+        #   chaos                  — runtime.chaos.ChaosInjector; strict
+        #       no-op while its schedule is idle.
+        #   heartbeat_timeout_s    — enables the HeartbeatMonitor liveness
+        #       source (None = no monitor); missed beats crash the replica
+        #       through fail_replica, EWMA stragglers lose dispatch ties.
+        transfer_timeout_s: Optional[float] = None,
+        transfer_max_retries: int = 3,
+        transfer_retry_backoff_s: float = 0.05,
+        chaos: Optional[Any] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        straggler_factor: float = 2.0,
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
@@ -403,7 +425,11 @@ class CacheAffinityRouter:
             self.engine = TransferEngine(
                 self.index, self.persistent_link,
                 max_inflight=transfer_max_inflight, use_peers=use_peer_transfer,
-                payload=transfer_payload)
+                payload=transfer_payload,
+                timeout_s=transfer_timeout_s,
+                max_retries=transfer_max_retries,
+                retry_backoff_s=transfer_retry_backoff_s,
+                chaos=chaos)
             if prefetch_depth > 0:
                 self.prefetcher = Prefetcher(self.engine, object_size_fn)
         self.prefetch_depth = prefetch_depth
@@ -418,6 +444,23 @@ class CacheAffinityRouter:
         self._pending_provisions: List[ProvisionRequest] = []
         self._next_replica = 0
         self.stats = RouterStats()
+        # Failure-domain accounting island.  Always allocated (counters are
+        # cheap); the chaos injector, when attached, adopts it so injection
+        # and recovery counters land in one ``faults.*`` snapshot.
+        self.faults = FaultStats()
+        self.chaos = chaos
+        if chaos is not None:
+            chaos.bind(self.faults)
+            if hasattr(self.index, "rpc_loss"):
+                # Sharded coherence wire: chaos may drop update RPCs.
+                self.index.rpc_loss = chaos.rpc_lost
+        self.monitor: Optional[HeartbeatMonitor] = (
+            HeartbeatMonitor(heartbeat_timeout_s, straggler_factor)
+            if heartbeat_timeout_s is not None else None)
+        # Poisoned copies awaiting re-fetch: recovery is deferred to tick()
+        # so a corruption detected mid-read never mutates the store it was
+        # detected inside of (re-entrancy hazard).
+        self._corrupt_refetch: List[Tuple[str, str]] = []
         # Observability stub path: hooks test `self._trace is not None` /
         # `self._perf is not None` once each — with obs=None nothing is
         # allocated or computed on the hot path (tests/test_obs.py asserts
@@ -439,6 +482,7 @@ class CacheAffinityRouter:
         reg.register_source("router", self.stats)
         reg.register_source("dispatch", self.dispatcher.stats)
         reg.register_source("warmstart", self.warmstart)
+        reg.register_source("faults", self.faults)
         if self.engine is not None:
             reg.register_source("transfer", self.engine.stats)
             self.engine.trace = self._trace     # flight/payload spans
@@ -467,6 +511,7 @@ class CacheAffinityRouter:
         name: Optional[str] = None,
         capacity_bytes: Optional[float] = None,
         eviction: Optional[str] = None,
+        now: Optional[float] = None,
     ) -> str:
         if name is None:
             name = f"replica{self._next_replica}"
@@ -481,9 +526,17 @@ class CacheAffinityRouter:
             nic_bw_bytes_per_s=self.nic_bw_bytes_per_s,
         )
         if self._payload_factory is not None:
-            self.stores[name].tiers.attach_payload(self._payload_factory(name))
+            backend = self._payload_factory(name)
+            if hasattr(backend, "on_corruption"):
+                # Degrade-don't-die: a poisoned spill chunk drops the copy
+                # and queues a re-fetch instead of failing the request.
+                backend.on_corruption = (
+                    lambda obj, _n=name: self._note_corruption(_n, obj))
+            self.stores[name].tiers.attach_payload(backend)
         if self.engine is not None:
             self.engine.register(name, self.stores[name].tiers)
+        if self.monitor is not None:
+            self.monitor.register(name, now)
         self.dispatcher.register_executor(name)
         # idle clock starts at first observation (None), NOT at 0.0 — under
         # wall-clock time a 0.0 stamp would make a fresh replica look idle
@@ -495,8 +548,144 @@ class CacheAffinityRouter:
         self.dispatcher.deregister_executor(name)   # drops its index entries
         if self.engine is not None:
             self.engine.deregister(name)
+        if self.monitor is not None:
+            self.monitor.forget(name)
+        if self.chaos is not None:
+            self.chaos.forget(name)
         self.stores.pop(name, None)
         self._idle_since.pop(name, None)
+
+    def fail_replica(self, name: str, now: Optional[float] = None
+                     ) -> List[RoutedRequest]:
+        """Replica crash — distinct from ``remove_replica`` (graceful
+        scale-down, which assumes the replica drained its work first).
+
+        Crash semantics, in order:
+          1. every in-flight request dispatched to the dead replica is
+             orphaned: reset to undispatched state and re-submitted exactly
+             once (the ``_finish`` guard drops any stale completion the dead
+             replica might still report, so accounting stays at-most-once);
+          2. the index quarantines immediately — live entries drop *and*
+             queued coherence ops naming the dead executor are purged, so a
+             delayed "add" can never resurrect a claim on a crashed store;
+          3. the transfer engine evacuates: inbound flights cancel (slots/ω
+             released, single-flight joiners notified of terminal failure),
+             outbound flights fail over to the next-cheapest source;
+          4. the DRP back-fills the lost capacity 1:1 (the replacement
+             warm-starts from surviving peers via the usual scale-up path).
+
+        Returns the orphaned requests (already re-queued).
+        """
+        now = time.monotonic() if now is None else now
+        if name not in self.stores:
+            return []
+        self.faults.replicas_failed += 1
+        if self.monitor is not None:
+            self.monitor.forget(name)
+        if self.chaos is not None:
+            self.chaos.forget(name)
+        orphans = [r for r in self._requests.values()
+                   if r.replica == name and r.finish_time_s is None
+                   and r.dispatch_time_s is not None]
+        # Quarantine before deregister: entry count is observable only while
+        # the executor's map still exists.
+        self.faults.index_entries_quarantined += len(self.index.cached_at(name))
+        quarantine = getattr(self.index, "quarantine_executor", None)
+        if quarantine is not None:
+            self.faults.bus_ops_purged += quarantine(name)
+        self.dispatcher.deregister_executor(name)   # idempotent second drop
+        if self.engine is not None:
+            self.engine.fail_replica(name, now)
+        self.stores.pop(name, None)
+        self._idle_since.pop(name, None)
+        if self._stop is not None:
+            self._stop(name)
+        for r in orphans:
+            self.faults.requests_requeued += 1
+            if self._slo is not None:
+                self._slo.record_failure(now)   # availability burn
+            # Reset to pre-dispatch state; the hit/miss work done on the
+            # dead replica is lost and will be re-done (and re-counted)
+            # wherever the request lands next.
+            r.replica = None
+            r.dispatch_time_s = None
+            r.hits = 0
+            r.misses = 0
+            r.sources = {}
+            r.restore_cost_s = 0.0
+            self.dispatcher.submit(r)
+        if self._trace is not None:
+            self._trace.record(-1, name, "failure", now, now, name, "",
+                               (len(orphans),))
+        if self.drp is not None:
+            self.drp.registered = max(0, self.drp.registered - 1)
+            req = self.drp.request(1, now)     # 1:1 capacity back-fill
+            if req is not None:
+                self._pending_provisions.append(req)
+                self.faults.backfills_requested += 1
+        return orphans
+
+    # ------------------------------------------------- liveness / heartbeats
+    def record_heartbeat(self, name: str, step_time_s: Optional[float] = None,
+                         now: Optional[float] = None) -> None:
+        """Feed the liveness source; ``step_time_s`` drives EWMA straggler
+        detection (a straggling replica stops winning cache-affinity ties)."""
+        if self.monitor is not None:
+            self.monitor.heartbeat(
+                name, step_time_s,
+                time.monotonic() if now is None else now)
+
+    def check_liveness(self, now: Optional[float] = None) -> List[str]:
+        """Crash replicas whose heartbeat lapsed; refresh straggler
+        penalties.  Returns the names failed this call."""
+        if self.monitor is None:
+            return []
+        now = time.monotonic() if now is None else now
+        lost = [n for n in self.monitor.check(now) if n in self.stores]
+        for name in lost:
+            self.faults.heartbeat_losses += 1
+            self.fail_replica(name, now)
+        strag = {n: 1.0 for n in self.monitor.stragglers()
+                 if n in self.stores}
+        if strag != self.dispatcher.penalties:
+            self.dispatcher.set_penalties(strag)
+        self.faults.straggler_penalties = len(strag)
+        return lost
+
+    # ------------------------------------------------- corruption / brown-out
+    def _note_corruption(self, replica: str, obj: str) -> None:
+        """Payload backend detected a poisoned spill chunk (sha256 mismatch)
+        while reading ``obj``.  Recovery is deferred to the next tick: drop
+        the copy, quarantine its index entry, re-fetch from a clean source."""
+        self.faults.payload_corruptions_recovered += 1
+        self._corrupt_refetch.append((replica, obj))
+
+    def _drain_corrupt_refetch(self, now: float) -> None:
+        pending, self._corrupt_refetch = self._corrupt_refetch, []
+        for replica, obj in pending:
+            store = self.stores.get(replica)
+            if store is None:
+                continue                    # replica died meanwhile
+            if obj in store:
+                store.drop(obj)             # withdraws the index entry too
+            if self.engine is not None:
+                self.engine.fetch(obj, self.object_size_fn(obj), replica,
+                                  now, allow_queue=True)
+                self.faults.refetches_issued += 1
+
+    def _browned_out(self, now: float) -> bool:
+        """Failure-storm brown-out: when the availability SLO's fast burn
+        rate fires, shed speculative traffic (prefetch warms, scale-up
+        warm-starts) so recovery bandwidth goes to demand fetches."""
+        if self._slo is None:
+            return False
+        tracker = self._slo.trackers.get("availability")
+        if tracker is None:
+            return False
+        fast, _slow = tracker.burn_rates(now)
+        active = fast >= tracker.spec.fire_burn
+        self.faults.brownout_active = 1 if active else 0
+        return active
 
     def replicas(self) -> List[str]:
         return list(self.stores)
@@ -531,6 +720,8 @@ class CacheAffinityRouter:
         now = time.monotonic() if now is None else now
         if self.engine is not None:
             self.engine.drain(now)      # release bandwidth of landed copies
+        if self._corrupt_refetch:
+            self._drain_corrupt_refetch(now)
         self._complete_provisions(now)
         self._maybe_release(now)
         out = self._drain_notify(now)
@@ -710,12 +901,16 @@ class CacheAffinityRouter:
         # targets the post-batch queue: the whole burst was already
         # decided, so speculation goes to work actually still waiting.
         if self.prefetcher is not None:
-            for replica, _request in pairs:
-                if self.dispatcher.queue_length() == 0:
-                    break
-                for item in self.dispatcher.peek(self.prefetch_depth):
-                    self.prefetcher.warm(
-                        replica, self.dispatcher.objects_of(item), now)
+            if pairs and self._browned_out(now) \
+                    and self.dispatcher.queue_length() > 0:
+                self.faults.brownout_sheds += 1
+            else:
+                for replica, _request in pairs:
+                    if self.dispatcher.queue_length() == 0:
+                        break
+                    for item in self.dispatcher.peek(self.prefetch_depth):
+                        self.prefetcher.warm(
+                            replica, self.dispatcher.objects_of(item), now)
 
     def _start(self, replica: str, requests: List[RoutedRequest], now: float,
                miss_sink: Optional[List[Tuple]] = None,
@@ -845,8 +1040,12 @@ class CacheAffinityRouter:
         # of the batch's own deferred store mutations.
         if self.prefetcher is not None and miss_sink is None \
                 and self.dispatcher.queue_length() > 0:
-            for item in self.dispatcher.peek(self.prefetch_depth):
-                self.prefetcher.warm(replica, self.dispatcher.objects_of(item), now)
+            if self._browned_out(now):
+                self.faults.brownout_sheds += 1
+            else:
+                for item in self.dispatcher.peek(self.prefetch_depth):
+                    self.prefetcher.warm(replica,
+                                         self.dispatcher.objects_of(item), now)
         return Assignment(replica, requests)
 
     def _hit_cost(self, store: ReplicaStore, replica: str, obj: str,
@@ -894,6 +1093,13 @@ class CacheAffinityRouter:
     # ------------------------------------------------------------- complete
     def _finish(self, request: RoutedRequest, now: float) -> Optional[str]:
         """Completion bookkeeping; returns the freed replica (if still ours)."""
+        if request.dispatch_time_s is None or request.finish_time_s is not None:
+            # At-most-once: a crashed replica reporting a completion for a
+            # request that was already requeued (dispatch_time_s reset by
+            # fail_replica) — or a double complete() — must not double-count.
+            # The requeued request completes wherever it was re-dispatched.
+            self.faults.stale_completions_dropped += 1
+            return None
         request.finish_time_s = now
         self._requests.pop(request.request_id, None)
         self.stats.completed += 1
@@ -972,15 +1178,20 @@ class CacheAffinityRouter:
             self._pending_provisions.remove(req)
             self.drp.complete(req)
             for _ in range(req.nodes):
-                name = self.add_replica()
+                name = self.add_replica(now=now)
                 self.stats.scale_ups += 1
                 if self._spawn is not None:
                     self._spawn(name)
                 if self.warmstart_objects > 0:
                     # Scale-up happened because load is high — exactly when a
                     # cold replica's miss streak hurts most.  Clone the
-                    # hottest peer-held objects in before it takes work.
-                    self.warm_start(name, now)
+                    # hottest peer-held objects in before it takes work —
+                    # unless a failure storm browned us out, in which case
+                    # the bandwidth belongs to demand recovery.
+                    if self._browned_out(now):
+                        self.faults.brownout_sheds += 1
+                    else:
+                        self.warm_start(name, now)
 
     def _maybe_release(self, now: float) -> None:
         if self.drp is None or self.dispatcher.queue_length() > 0:

@@ -135,6 +135,17 @@ class DiffusionServer:
         # paper's live performance metrics accumulate in its PerfMeter.
         # None (default) is the zero-overhead stub path.
         obs: Optional[Any] = None,
+        # chaos: a runtime.chaos.ChaosInjector drives seeded fault injection
+        # (replica crashes, stragglers, transfer flakes, spill corruption)
+        # through the per-step chaos tick.  Attached-but-idle (schedule with
+        # all rates 0) is a strict no-op: the serving stream is bit-identical
+        # to chaos=None (bench_chaos gates on it).
+        chaos: Optional[Any] = None,
+        # heartbeat_timeout_s enables the liveness plane: replicas heartbeat
+        # every step, lapsed beats crash them through fail_replica, and EWMA
+        # stragglers lose cache-affinity dispatch ties.
+        heartbeat_timeout_s: Optional[float] = None,
+        straggler_factor: float = 2.0,
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
@@ -180,11 +191,18 @@ class DiffusionServer:
             batch_drain=batch_drain,
             transfer_payload=payload if tier_specs is not None else "modeled",
             payload_factory=(
+                # Serving path degrades on a poisoned spill chunk instead of
+                # failing the request: drop the copy, quarantine, re-fetch.
                 (lambda name: RealPayload(name=name, measured=self.measured,
-                                          spill_dir=spill_dir))
+                                          spill_dir=spill_dir,
+                                          corrupt_mode="recover"))
                 if payload == "real" and tier_specs is not None else None),
             obs=obs,
+            chaos=chaos,
+            heartbeat_timeout_s=heartbeat_timeout_s,
+            straggler_factor=straggler_factor,
         )
+        self.chaos = chaos
         self.batch_drain = batch_drain
         self.replicas: Dict[str, Replica] = {}
         for _ in range(min_replicas):
@@ -345,10 +363,47 @@ class DiffusionServer:
         self.stats.served += 1
         self.stats.response_times.append(req.response_time_s)
 
+    # -------------------------------------------------------------- chaos
+    def chaos_tick(self, now: Optional[float] = None) -> List[str]:
+        """One failure-domain step: feed heartbeats (straggle-inflated when
+        chaos says so), crash this step's victims, corrupt a spilled chunk.
+        Called once per ``step()``; safe (and a strict no-op) with no chaos
+        injector and no heartbeat monitor attached.  Returns replicas
+        crashed this tick."""
+        now = time.time() if now is None else now
+        chaos = self.chaos
+        if self.router.monitor is not None:
+            for name in self.router.replicas():
+                factor = chaos.service_factor(name) if chaos is not None else 1.0
+                self.router.record_heartbeat(name, 1.0 * factor, now)
+            self.router.check_liveness(now)
+        if chaos is None or chaos.idle:
+            return []
+        victims, _fresh = chaos.begin_step(self.router.replicas())
+        for name in victims:
+            self.router.fail_replica(name, now)
+        self._inject_corruption(chaos)
+        return victims
+
+    def _inject_corruption(self, chaos: Any) -> None:
+        """Flip one byte in one spilled KV chunk (sha256 will catch it on
+        the next read; recover mode turns that into a drop + re-fetch)."""
+        from .chaos import flip_spill_byte
+        for store in self.router.stores.values():
+            backend = store.tiers.payload
+            spilled = [obj for obj, leaves in getattr(backend, "_leaves",
+                                                      {}).items()
+                       if leaves and hasattr(leaves[0], "chunks")]
+            victim = chaos.corruption_victim(spilled)
+            if victim is not None:
+                flip_spill_byte(backend, victim)
+
     def step(self) -> int:
         """Execute routed work until queue and assignments drain. Returns served."""
         served = 0
         idle_rounds = 0
+        if self.chaos is not None or self.router.monitor is not None:
+            self.chaos_tick(time.time())
         while self._ready or self.router.queue_length() > 0:
             if not self._ready:
                 # delayed requests: replicas all freed by now, re-run phase 1
@@ -365,8 +420,12 @@ class DiffusionServer:
                 wave, self._ready = self._ready, []
                 finished: List[RoutedRequest] = []
                 for assignment in wave:
-                    replica = self.replicas[assignment.replica]
+                    replica = self.replicas.get(assignment.replica)
                     for routed in assignment.requests:
+                        if replica is None \
+                                or routed.replica != assignment.replica:
+                            continue    # crashed from under the assignment;
+                            #             the router already requeued it
                         self._run_request(replica, routed)
                         served += 1
                         finished.append(routed)
@@ -374,8 +433,10 @@ class DiffusionServer:
                     self.router.complete_batch(finished, now=time.time()))
                 continue
             assignment = self._ready.pop(0)
-            replica = self.replicas[assignment.replica]
+            replica = self.replicas.get(assignment.replica)
             for routed in assignment.requests:
+                if replica is None or routed.replica != assignment.replica:
+                    continue            # crashed from under the assignment
                 self._run_request(replica, routed)
                 served += 1
                 self._ready.extend(self.router.complete(routed, now=time.time()))

@@ -1,0 +1,392 @@
+"""Failure-domain robustness plane tests: chaos injection, crash recovery,
+transfer retry/failover, straggler penalties, and corruption degradation.
+
+All pure accounting (no model, no JAX): routers are driven in virtual time
+exactly like the serving benches, and the property test interleaves crashes
+with a live request stream asserting the exactly-once contract end to end.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.index import CentralizedIndex
+from repro.core.provisioner import DynamicResourceProvisioner
+from repro.diffusion.tiers import TierSpec, TieredStore
+from repro.diffusion.transfer import BandwidthResource, TransferEngine
+from repro.index.sharded import ShardedIndex
+from repro.runtime.chaos import ChaosInjector, FaultSchedule, flip_spill_byte
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+
+def make_router(replicas=2, **kw):
+    r = CacheAffinityRouter(policy="good-cache-compute", **kw)
+    for _ in range(replicas):
+        r.add_replica(now=0.0)
+    return r
+
+
+def finished_of(wave, router):
+    """The serve loop's crash filter: a request re-routed from under its
+    assignment must not be reported by the dead replica."""
+    return [rr for a in wave for rr in a.requests
+            if rr.replica == a.replica and a.replica in router.stores]
+
+
+# ------------------------------------------------------------- crash recovery
+class TestFailReplica:
+    def test_orphans_requeued_and_completed_exactly_once(self):
+        r = make_router(replicas=2)
+        rr = RoutedRequest(0, ("kv:a",))
+        r.enqueue(rr, now=1.0)
+        wave = r.tick(1.0)
+        assert len(wave) == 1
+        dead = wave[0].replica
+        orphans = r.fail_replica(dead, now=2.0)
+        assert [o.request_id for o in orphans] == [0]
+        assert r.faults.replicas_failed == 1
+        assert r.faults.requests_requeued == 1
+        assert dead not in r.stores
+        # The dead replica's stale completion is dropped, not double-counted
+        # (complete() still runs its tick, which re-dispatches the orphan).
+        wave = r.complete(rr, now=2.5)
+        assert rr.finish_time_s is None
+        assert r.faults.stale_completions_dropped == 1
+        assert len(wave) == 1 and wave[0].replica != dead
+        r.complete(rr, now=4.0)
+        assert rr.finish_time_s is not None
+        assert r.stats.completed == 1
+        # A second (duplicate) completion is also stale.
+        r.complete(rr, now=5.0)
+        assert r.faults.stale_completions_dropped == 2
+        assert r.stats.completed == 1
+
+    def test_crash_quarantines_index_immediately(self):
+        r = make_router(replicas=2)
+        rr = RoutedRequest(0, ("kv:a", "kv:b"))
+        r.enqueue(rr, now=1.0)
+        (a,) = r.tick(1.0)
+        r.complete(rr, now=1.5)
+        dead = a.replica
+        assert r.index.cached_at(dead) != set()
+        r.fail_replica(dead, now=2.0)
+        assert r.index.cached_at(dead) == set()
+        for obj in ("kv:a", "kv:b"):
+            assert dead not in r.index.locations(obj)
+        assert r.faults.index_entries_quarantined == 2
+
+    def test_drp_backfills_crash_one_to_one(self):
+        drp = DynamicResourceProvisioner(
+            max_nodes=2, queue_threshold=10**9,
+            allocation_latency_s=(0.0, 0.0), idle_release_s=1e9)
+        r = make_router(replicas=2, provisioner=drp)
+        dead = sorted(r.replicas())[0]
+        r.fail_replica(dead, now=1.0)
+        assert r.faults.backfills_requested == 1
+        assert len(r.stores) == 1
+        r.tick(2.0)                     # zero-latency provision lands
+        assert len(r.stores) == 2
+        assert r.stats.scale_ups == 1
+
+    def test_fail_unknown_replica_is_a_noop(self):
+        r = make_router(replicas=1)
+        assert r.fail_replica("nope", now=1.0) == []
+        assert r.faults.replicas_failed == 0
+
+
+# ------------------------------------------------------------------- liveness
+class TestHeartbeats:
+    def test_lapsed_heartbeat_crashes_the_replica(self):
+        r = make_router(replicas=2, heartbeat_timeout_s=5.0)
+        names = sorted(r.replicas())
+        r.record_heartbeat(names[1], now=8.0)   # names[0] last beat at t=0
+        lost = r.check_liveness(now=9.0)
+        assert lost == [names[0]]
+        assert r.faults.heartbeat_losses == 1
+        assert names[0] not in r.stores and names[1] in r.stores
+
+    @pytest.mark.parametrize("impl", ["reference", "vectorized"])
+    def test_straggler_loses_ties_but_keeps_strict_wins(self, impl):
+        r = make_router(replicas=2, dispatcher_impl=impl)
+        names = sorted(r.replicas())
+        for name in names:              # equal cache affinity on both
+            r.stores[name].admit("kv:hot", 1.0)
+        r.dispatcher.set_penalties({names[0]: 1.0})
+        rr = RoutedRequest(0, ("kv:hot",))
+        r.enqueue(rr, now=1.0)
+        (a,) = r.tick(1.0)
+        assert a.replica == names[1]    # unpenalized wins the tie
+        r.complete(rr, now=1.5)
+        # Strictly-best still wins even while penalized: only the straggler
+        # holds kv:only, and affinity beats a cold peer.
+        r.stores[names[0]].admit("kv:only", 1.0)
+        rr2 = RoutedRequest(1, ("kv:only",))
+        r.enqueue(rr2, now=2.0)
+        (a2,) = r.tick(2.0)
+        assert a2.replica == names[0]
+
+    def test_ewma_straggler_feeds_dispatch_penalty(self):
+        r = make_router(replicas=3, heartbeat_timeout_s=100.0,
+                        straggler_factor=2.0)
+        names = sorted(r.replicas())
+        for t in range(1, 6):
+            for name in names:
+                step = 5.0 if name == names[0] else 1.0
+                r.record_heartbeat(name, step_time_s=step, now=float(t))
+        r.check_liveness(now=6.0)
+        assert set(r.dispatcher.penalties) == {names[0]}
+        assert r.faults.straggler_penalties == 1
+
+
+# ---------------------------------------------------------- transfer retries
+def engine_fixture(stores=("r0", "r1", "r2"), **kw):
+    idx = CentralizedIndex()
+    link = BandwidthResource("gpfs", 10.0)
+    eng = TransferEngine(idx, link, **kw)
+    out = {}
+    for name in stores:
+        st_ = TieredStore(name, [TierSpec("hbm", 100.0)], index=idx,
+                          nic_bw_bytes_per_s=100.0)
+        out[name] = st_
+        eng.register(name, st_)
+    return idx, link, eng, out
+
+
+class TestRetryLadder:
+    def test_flakes_respect_budget_then_degrade_to_persistent(self):
+        # flake_rate=1.0: every attempt faults.  Two peers hold the object,
+        # max_retries=1 -> attempt 0 (peer) retries, attempt 1 (other peer)
+        # exhausts the budget and the resolution degrades to persistent.
+        chaos = ChaosInjector(FaultSchedule(flake_rate=1.0), seed=1)
+        _, _, eng, stores = engine_fixture(max_retries=1,
+                                           retry_backoff_s=0.1, chaos=chaos)
+        stores["r0"].admit("obj", 10.0)
+        stores["r1"].admit("obj", 10.0)
+        tr = eng.fetch("obj", 10.0, "r2", now=0.0)
+        assert tr.source == "persistent"
+        assert eng.stats.retries == 1            # budget, never exceeded
+        assert eng.stats.flakes == 2             # both attempts faulted
+        assert eng.stats.degraded_to_persistent == 1
+        assert tr.start_s >= 0.1                 # backoff anchored the start
+
+    def test_deterministic_timeout_fails_over_to_persistent(self):
+        # Peer copy of 10 B at ~10 B/s shared -> ~1s >> timeout; persistent
+        # is the ladder floor and exempt from the deadline.
+        _, _, eng, stores = engine_fixture(timeout_s=1e-3)
+        stores["r0"].admit("obj", 10.0)
+        tr = eng.fetch("obj", 10.0, "r1", now=0.0)
+        assert tr.source == "persistent"
+        assert eng.stats.timeouts == 1
+        assert eng.stats.failovers == 1
+        assert eng.stats.retries == 1
+
+    def test_no_timeout_no_chaos_is_single_attempt(self):
+        _, _, eng, stores = engine_fixture()
+        stores["r0"].admit("obj", 10.0)
+        tr = eng.fetch("obj", 10.0, "r1", now=0.0)
+        assert tr.source == "peer:r0"
+        assert tr.start_s == 0.0                 # zero backoff
+        assert eng.stats.retries == 0
+        assert eng.stats.flakes == 0 and eng.stats.timeouts == 0
+
+    def test_dead_destination_cancels_and_notifies_joiners(self):
+        failures = []
+        _, link, eng, stores = engine_fixture()
+        eng.add_failure_listener(
+            lambda dest, obj, kind, joiners: failures.append(
+                (dest, obj, kind, joiners)))
+        eng.fetch("obj", 10.0, "r1", now=0.0)
+        eng.fetch("obj", 10.0, "r1", now=0.1)    # single-flight joiner
+        assert eng.stats.shared == 1
+        eng.fail_replica("r1", now=0.2)
+        assert eng.stats.dead_dest_cancels == 1
+        assert eng.stats.joiners_failed == 1
+        assert failures == [("r1", "obj", "demand", 1)]
+        eng.drain(1e12)
+        assert link.omega == 0 and eng.slots_in_use() == 0
+        assert eng.stats.started == eng.stats.completed + eng.stats.preempted
+
+    def test_dead_source_fails_over_outbound_flights(self):
+        _, _, eng, stores = engine_fixture()
+        stores["r0"].admit("obj", 50.0)
+        tr = eng.fetch("obj", 50.0, "r1", now=0.0)   # ~0.5s peer copy
+        assert tr.source == "peer:r0"
+        eng.fail_replica("r0", now=0.1)              # mid-flight
+        assert tr.source == "persistent"         # re-resolved past the dead peer
+        assert eng.stats.failovers >= 1
+        assert stores["r0"].nic.omega == 0       # dead NIC fully released
+        eng.drain(1e12)
+        assert eng.stats.started == eng.stats.completed + eng.stats.preempted
+
+
+# ---------------------------------------------------------------- chaos inert
+class TestChaosInertness:
+    def test_idle_injector_consumes_no_rng_and_counts_nothing(self):
+        chaos = ChaosInjector(FaultSchedule(), seed=5)
+        state = chaos.rng.getstate()
+        assert chaos.idle
+        assert chaos.begin_step(["r0", "r1"]) == ([], [])
+        assert chaos.transfer_fault("o", "r0", "persistent", 0) is None
+        assert chaos.rpc_lost() is False
+        assert chaos.corruption_victim(["o"]) is None
+        assert chaos.service_factor("r0") == 1.0
+        assert chaos.rng.getstate() == state     # strictly no RNG consumed
+        assert all(v == 0.0 for v in chaos.stats.snapshot().values())
+
+    def test_serving_default_schedule_is_not_idle(self):
+        assert not FaultSchedule.serving_default().idle
+
+
+# --------------------------------------------------------- shard-RPC loss
+def test_sharded_rpc_loss_drops_updates_without_corrupting_state():
+    idx = ShardedIndex(shards=2, coherence_delay_s=0.0)
+    lose = {"on": True}
+    idx.rpc_loss = lambda: lose["on"]
+    idx.enqueue_update(0.0, "add", "kv:a", "r0", tier="hbm")
+    idx.apply_updates(1.0)
+    assert idx.locations("kv:a") == set()        # update was dropped
+    lose["on"] = False
+    idx.enqueue_update(2.0, "add", "kv:a", "r0", tier="hbm")
+    idx.apply_updates(3.0)
+    assert idx.locations("kv:a") == {"r0"}
+
+
+# ------------------------------------------------------- payload corruption
+class TestCorruptionRecovery:
+    def test_recover_mode_drops_poisoned_copy_and_notifies(self, tmp_path):
+        from repro.diffusion.payload import RealPayload
+        fired = []
+        p = RealPayload("t", spill_dir=str(tmp_path), chunk_bytes=512,
+                        corrupt_mode="recover")
+        p.on_corruption = fired.append
+        arr = np.arange(1024, dtype=np.float32)
+        p.put("kv:x", arr, "dram")
+        p.moved("kv:x", "disk")
+        assert flip_spill_byte(p, "kv:x")
+        assert p.get("kv:x") is None             # degrades, does not raise
+        assert p.corruptions_recovered == 1
+        assert fired == ["kv:x"]
+        assert not p.has("kv:x")                 # poisoned copy dropped
+        assert list(tmp_path.glob("*.kv")) == [] # spill chunks freed
+
+    def test_raise_mode_still_raises(self, tmp_path):
+        from repro.diffusion.payload import RealPayload
+        p = RealPayload("t", spill_dir=str(tmp_path), chunk_bytes=512)
+        p.put("kv:x", np.arange(64, dtype=np.float32), "dram")
+        p.moved("kv:x", "disk")
+        assert flip_spill_byte(p, "kv:x")
+        with pytest.raises(IOError, match="corrupt"):
+            p.get("kv:x")
+
+    def test_router_requeues_refetch_on_next_tick(self):
+        r = make_router(replicas=2,
+                        tier_specs=[TierSpec("hbm", 100.0)],
+                        object_size_fn=lambda o: 1.0)
+        name = sorted(r.replicas())[0]
+        r.stores[name].admit("kv:x", 1.0)
+        r._note_corruption(name, "kv:x")
+        assert r.faults.payload_corruptions_recovered == 1
+        r.tick(5.0)                              # deferred recovery drains
+        assert r.faults.refetches_issued == 1
+        assert r.engine.stats.started >= 1
+
+
+# ------------------------------------------------------------- DES chaos
+def test_simulator_absorbs_predrawn_chaos():
+    """The DES folds the injector's pre-drawn crash hazard into its failure
+    events and still completes every task; an idle injector changes nothing."""
+    from repro.core import SimConfig, provisioning_workload, run_experiment
+
+    wl = provisioning_workload(num_tasks=600)
+    base = run_experiment(wl, SimConfig(policy="first-available", max_nodes=8))
+    chaos = ChaosInjector(
+        FaultSchedule(crash_rate=0.01, max_crashes=2, min_survivors=1,
+                      straggle_rate=0.2, straggle_factor=3.0,
+                      straggle_steps=4), seed=3)
+    res = run_experiment(wl, SimConfig(policy="first-available", max_nodes=8),
+                         chaos=chaos)
+    assert res.tasks_done == 600                  # no lost work under chaos
+    assert chaos.stats.crashes_injected == 2
+    assert res.wet_s >= base.wet_s                # faults never speed it up
+    idle = ChaosInjector(FaultSchedule(), seed=3)
+    same = run_experiment(wl, SimConfig(policy="first-available", max_nodes=8),
+                          chaos=idle)
+    assert same.wet_s == base.wet_s               # idle injector is inert
+
+
+# --------------------------------------------------------- chaos soup (prop)
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=99),   # op selector
+              st.integers(min_value=0, max_value=5),    # session id
+              st.integers(min_value=0, max_value=3),    # replica selector
+              st.floats(min_value=0.01, max_value=0.5)),  # time advance
+    min_size=5, max_size=60))
+def test_chaos_soup_never_loses_or_duplicates_requests(ops):
+    """Random crash / submit / complete / tick / scale interleavings: every
+    submitted request completes exactly once, the index never names a dead
+    executor, and the transfer engine returns every engaged unit."""
+    drp = DynamicResourceProvisioner(
+        max_nodes=4, queue_threshold=10**9,
+        allocation_latency_s=(0.0, 0.0), idle_release_s=1e9)
+    r = CacheAffinityRouter(
+        policy="good-cache-compute",
+        object_size_fn=lambda o: 1.0,
+        tier_specs=[TierSpec("hbm", 50.0), TierSpec("dram", 100.0, 50.0)],
+        persistent_bw_bytes_per_s=10.0, nic_bw_bytes_per_s=100.0,
+        provisioner=drp)
+    for _ in range(3):
+        r.add_replica(now=0.0)
+    now, rid = 1.0, 0
+    waves = []
+    done = {}
+    objs = set()
+    for op, s, d, dt in ops:
+        now += dt
+        if op < 35:
+            req_objs = (f"kv:s{s}:a", f"kv:s{s}:b")
+            objs.update(req_objs)
+            r.enqueue(RoutedRequest(rid, req_objs, submit_time_s=now),
+                      now=now)
+            rid += 1
+        elif op < 60 and waves:
+            a = waves.pop(0)
+            runnable = finished_of([a], r)
+            for rr in runnable:
+                done[rr.request_id] = done.get(rr.request_id, 0) + 1
+            waves.extend(r.complete_batch(runnable, now=now))
+        elif op < 75:
+            waves.extend(r.tick(now))
+        elif op < 88:
+            live = sorted(r.stores)
+            if len(live) > 1:
+                dead = live[d % len(live)]
+                r.fail_replica(dead, now=now)
+                assert r.index.cached_at(dead) == set()
+                assert dead not in r.replicas()
+        else:
+            if len(r.stores) < 4:
+                r.add_replica(now=now)
+        for obj in objs:                 # quarantine holds at every step
+            assert r.index.locations(obj) <= set(r.stores)
+    # Final pump: run everything outstanding to completion.
+    for _ in range(500):
+        if not waves and r.queue_length() == 0 and not r._requests:
+            break
+        finished = finished_of(waves, r)
+        for rr in finished:
+            done[rr.request_id] = done.get(rr.request_id, 0) + 1
+        waves = list(r.complete_batch(finished, now=now)) if finished else []
+        waves.extend(r.tick(now))
+        now += 0.5
+    assert not r._requests and r.queue_length() == 0
+    assert sorted(done) == list(range(rid))          # zero lost
+    assert all(c == 1 for c in done.values())        # exactly once
+    r.engine.drain(now=1e12)
+    assert r.engine.slots_in_use() == 0
+    assert r.persistent_link.omega == 0
+    for st_ in r.stores.values():
+        assert st_.tiers.nic.omega == 0
+    es = r.engine.stats
+    assert es.started == es.completed + es.preempted

@@ -362,21 +362,38 @@ def test_transfer_engine_no_omega_leak(ops, max_inflight):
     for op, o, d, dt in ops:
         now += dt
         obj, dest = f"o{o}", f"r{d}"
-        if op < 40:
+        if op < 35:
             eng.fetch(obj, 10.0, dest, now)
-        elif op < 55:
+        elif op < 50:
             eng.fetch(obj, 10.0, dest, now, kind="prefetch")
-        elif op < 65:
+        elif op < 60:
             eng.fetch(obj, 10.0, dest, now, kind="warmstart",
                       allow_queue=True)
-        elif op < 80:
+        elif op < 70:
             eng.cancel(dest, obj)
-        elif op < 90:
+        elif op < 78:
             eng.drain(now)
-        else:
+        elif op < 86:
             eng.fetch_batch([(obj, 10.0, dest),
                              (f"o{(o + 1) % 8}", 10.0, f"r{(d + 1) % 3}")],
                             now)
+        else:
+            # Crash / clean exit mid-traffic, then rebirth: the evacuation
+            # path must cancel inbound flights, fail outbound flights over
+            # to surviving sources, and release the dead NIC completely —
+            # a fresh same-name store then rejoins the pool.
+            old = stores[dest]
+            if op < 93:
+                eng.fail_replica(dest, now)
+            else:
+                eng.deregister(dest, now)
+            idx.drop_executor(dest)
+            assert old.nic.omega == 0       # dead NIC fully released
+            st_ = TieredStore(dest, [TierSpec("hbm", 40.0),
+                                     TierSpec("dram", 80.0, 50.0)],
+                              index=idx, nic_bw_bytes_per_s=100.0)
+            stores[dest] = st_
+            eng.register(dest, st_)
         # the engagement map mirrors the inflight map exactly, always
         assert set(eng._engaged) == set(eng._inflight)
         assert link.omega >= 0
