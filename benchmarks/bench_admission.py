@@ -1,0 +1,325 @@
+"""Overload robustness benchmark: multi-tenant admission under spiky load.
+
+Two gating cases drive ``CacheAffinityRouter`` through the same
+round-based virtual-time serving harness as ``bench_chaos``:
+
+  * ``admission_overload`` — four Zipf prefix-reuse tenants with distinct
+    per-tenant SLOs share a small replica pool; tenant ``t3`` (the hog)
+    offers ~3x the load of each light tenant, and a seeded chaos schedule
+    injects 2x arrival spikes on top.  The sustained over-capacity stream
+    latches the overload dead band; the row asserts the full fairness
+    contract:
+      - the storm actually happened: overload latched, arrival spikes
+        fired, and load was shed;
+      - zero unaccounted requests: per tenant (and in aggregate),
+        ``served + shed + rejected == offered`` and every completion is
+        observed exactly once;
+      - shedding is credit-ordered: the hog ends with the lowest credit
+        and the highest shed fraction — light tenants lose strictly less;
+      - the light tenants' SLOs hold: each light tenant's window p99 stays
+        inside its declared target while the hog (whose own queueing blew
+        its budget) does not bound it;
+      - per-tenant tier quotas hold on every replica store: resident bytes
+        never exceed the quota plus one straddling object.
+  * ``admission_idle_parity`` — the strict no-op contract: the identical
+    seeded multi-tenant stream through a bare router vs. a router with an
+    attached-but-never-overloaded ``AdmissionController``.  Assignment
+    logs and final per-replica tier contents must be bit-identical, every
+    request pure pass-through (no degrades/sheds/rejects), and the
+    dispatcher's tenant weights never engaged.
+
+Any violated invariant raises -> ERROR row -> the ``run.py --smoke``
+gate and CI fail (the same contract as ``bench_chaos``).
+
+Writes ``BENCH_admission.json`` with an appended ``history`` entry per
+run; ``overload.rps`` / ``idle_parity.rps`` are under the regression
+sentinel's declared-metric watch.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+if __package__ in (None, ""):
+    sys.path.insert(0, "src")
+    sys.path.insert(0, "benchmarks")
+    from bench_util import append_history, zipf_sessions
+else:
+    from .bench_util import append_history, zipf_sessions
+
+from repro.diffusion.tiers import TierSpec
+from repro.obs.slo import parse_slo_specs
+from repro.runtime.admission import AdmissionController
+from repro.runtime.chaos import ChaosInjector, FaultSchedule
+from repro.runtime.router import CacheAffinityRouter, RoutedRequest
+
+BLOCK = 2.0 * 1024**2
+TENANTS = ("t0", "t1", "t2", "t3")      # t3 is the hog: ~3x each light load
+ARRIVAL_WEIGHTS = (1.0, 1.0, 1.0, 3.0)
+SLOS = {                                # distinct targets feed the credit
+    "t0": "p99_ms=100",                 # formula per tenant; the hog signed
+    "t1": "p99_ms=150",                 # a tight latency SLO it cannot meet
+    "t2": "p99_ms=200",                 # at 3x load, so its own burn is what
+    "t3": "p99_ms=25",                  # collapses its credit
+}
+
+
+def build_router(replicas: int, hbm_blocks: int, dram_blocks: int,
+                 admission: Optional[AdmissionController] = None,
+                 chaos: Optional[ChaosInjector] = None) -> CacheAffinityRouter:
+    router = CacheAffinityRouter(
+        policy="good-cache-compute",
+        window=512,
+        max_object_replicas=2 * replicas,
+        object_size_fn=lambda obj: BLOCK,
+        tier_specs=[TierSpec("hbm", hbm_blocks * BLOCK),
+                    TierSpec("dram", dram_blocks * BLOCK, 64e9)],
+        persistent_bw_bytes_per_s=4e9,
+        nic_bw_bytes_per_s=16e9,
+        log_assignments=True,
+        admission=admission,
+        chaos=chaos,
+    )
+    for _ in range(replicas):
+        router.add_replica()
+    return router
+
+
+def _contents(router: CacheAffinityRouter) -> Dict[str, Dict[str, str]]:
+    return {name: store.tiers.contents()
+            for name, store in router.stores.items()}
+
+
+def tenant_stream(n: int, sessions: int, alpha: float,
+                  seed: int) -> List[Tuple[str, int]]:
+    """``n`` (tenant, session) arrivals: tenants drawn by offered-load
+    weight (the hog 3x each light), sessions Zipf-skewed *within* each
+    tenant so every tenant has its own hot head and long tail."""
+    rng = random.Random(seed)
+    tenants = rng.choices(TENANTS, weights=ARRIVAL_WEIGHTS, k=n)
+    per = {t: iter(zipf_sessions(tenants.count(t), sessions, alpha,
+                                 seed + 13 * i))
+           for i, t in enumerate(TENANTS)}
+    return [(t, next(per[t])) for t in tenants]
+
+
+def drive(router: CacheAffinityRouter, stream: List[Tuple[str, int]],
+          batch: int, blocks: int, chaos: Optional[ChaosInjector] = None,
+          decode_s: float = 0.004) -> Dict[int, int]:
+    """The bench_chaos round pump with tenant-labeled arrivals and the
+    chaos arrival-spike multiplier applied to each burst (virtual time).
+    Returns per-request completion counts (shed/rejected requests never
+    complete — the controller's per-tenant counters account for them)."""
+    t = 1000.0
+    completions: Dict[int, int] = {}
+    rid = 0
+    i = 0
+    wave: List = []
+    stall = 0
+    while (i < len(stream) or router.queue_length() > 0
+           or router.pending_admission() > 0 or wave):
+        before = len(completions)
+        finished = [rr for a in wave for rr in a.requests
+                    if rr.replica == a.replica and a.replica in router.stores]
+        for rr in finished:
+            completions[rr.request_id] = completions.get(rr.request_id, 0) + 1
+        nxt = list(router.complete_batch(finished, now=t)) if finished else []
+        mult = 1
+        if chaos is not None:
+            chaos.begin_step(router.replicas())
+            mult = max(1, round(chaos.arrival_multiplier()))
+        burst = stream[i:i + batch * mult]
+        i += len(burst)
+        for tenant, sid in burst:
+            objs = tuple(f"kv:{tenant}:s{sid}:b{b}" for b in range(blocks))
+            router.enqueue(RoutedRequest(rid, objs, submit_time_s=t,
+                                         tenant=tenant), now=t)
+            rid += 1
+        nxt.extend(router.tick(t))
+        wave = nxt
+        t += decode_s
+        stall = 0 if (len(completions) != before or wave) else stall + 1
+        if stall > 200:
+            raise RuntimeError(
+                f"admission drive stalled: {len(stream) - i} unsubmitted, "
+                f"queue={router.queue_length()} "
+                f"backpressured={router.pending_admission()}")
+    return completions
+
+
+# --------------------------------------------------------------- case 1
+def run_overload(n: int, replicas: int = 3, sessions: int = 12,
+                 blocks: int = 4, alpha: float = 1.0) -> Dict[str, float]:
+    slo_specs = {t: parse_slo_specs(s) for t, s in SLOS.items()}
+    quota = 0.6 * (6 * blocks + 24 * blocks) * BLOCK   # 60% of one store
+    adm = AdmissionController(
+        TENANTS, slo_specs_by_tenant=slo_specs,
+        max_queue=64, min_queue=2,
+        # control interval matched to the virtual round step (0.004s):
+        # adapt every ~3 rounds, not the wall-clock default
+        adapt_interval_s=0.012,
+        tier_quota_bytes={t: quota for t in TENANTS})
+    chaos = ChaosInjector(
+        FaultSchedule(spike_rate=0.25, spike_multiplier=2.0, spike_steps=3,
+                      start_step=2), seed=11)
+    router = build_router(replicas, hbm_blocks=6 * blocks,
+                          dram_blocks=24 * blocks, admission=adm, chaos=chaos)
+    stream = tenant_stream(n, sessions, alpha, seed=7)
+    t0 = time.perf_counter()
+    comp = drive(router, stream, batch=4, blocks=blocks, chaos=chaos)
+    wall = time.perf_counter() - t0
+
+    # -- the storm actually happened ---------------------------------
+    spikes = router.faults.spikes_injected
+    if adm.overload_enters == 0 or adm.sheds == 0 or spikes == 0:
+        raise RuntimeError(
+            f"admission_overload: the overload never materialized "
+            f"(enters={adm.overload_enters} sheds={adm.sheds} "
+            f"spikes={spikes}) — the storm missed the admission plane")
+    # -- exactly-once completion, zero unaccounted -------------------
+    dups = {r: c for r, c in comp.items() if c != 1}
+    if dups:
+        raise RuntimeError(f"admission_overload: duplicate completions {dups}")
+    offered = served = shed = rejected = 0
+    for name, st in adm.tenants.items():
+        if (st.submitted != st.served + st.shed + st.rejected
+                or st.queued or st.inflight):
+            raise RuntimeError(
+                f"admission_overload: tenant {name} leaks requests — "
+                f"offered={st.submitted} served={st.served} shed={st.shed} "
+                f"rejected={st.rejected} queued={st.queued} "
+                f"inflight={st.inflight}")
+        offered += st.submitted
+        served += st.served
+        shed += st.shed
+        rejected += st.rejected
+    if offered != len(stream) or served != len(comp):
+        raise RuntimeError(
+            f"admission_overload: accounting drifted from the harness — "
+            f"offered={offered}/{len(stream)} served={served}/{len(comp)}")
+    # -- credit-ordered shedding: the hog loses first and most -------
+    credits = adm.credits()
+    fracs = {t: (adm.tenants[t].shed + adm.tenants[t].rejected)
+             / max(1, adm.tenants[t].submitted) for t in TENANTS}
+    lights = [t for t in TENANTS if t != "t3"]
+    if any(credits["t3"] >= credits[t] for t in lights):
+        raise RuntimeError(
+            f"admission_overload: the hog did not end lowest-credit — "
+            f"credits={ {t: round(c, 3) for t, c in credits.items()} }")
+    if any(fracs["t3"] <= fracs[t] for t in lights):
+        raise RuntimeError(
+            f"admission_overload: load loss not credit-ordered — "
+            f"shed+reject fractions="
+            f"{ {t: round(f, 3) for t, f in fracs.items()} }")
+    if any(adm.tenants["t3"].shed < adm.tenants[t].shed for t in lights):
+        raise RuntimeError(
+            f"admission_overload: the lowest-credit tenant was not shed "
+            f"first — sheds={ {t: adm.tenants[t].shed for t in TENANTS} }")
+    # -- light tenants' p99 SLOs held under the storm ----------------
+    p99 = {t: adm.tenants[t].win_p99_s() for t in TENANTS}
+    for t in lights:
+        target = next(s.target for s in slo_specs[t] if s.kind == "latency")
+        if p99[t] > target:
+            raise RuntimeError(
+                f"admission_overload: light tenant {t} blew its SLO — "
+                f"win_p99={p99[t] * 1e3:.1f}ms > target {target * 1e3:.0f}ms")
+    # -- per-store tenant quotas held --------------------------------
+    for name, store in router.stores.items():
+        for t, b in store.tiers.tenant_bytes.items():
+            if b > quota + BLOCK + 1e-6:
+                raise RuntimeError(
+                    f"admission_overload: tenant {t} exceeded its tier "
+                    f"quota on {name}: {b:.0f} > {quota:.0f} + one object")
+    return {
+        "offered": float(offered),
+        "served": float(served),
+        "shed": float(shed),
+        "rejected": float(rejected),
+        "rps": served / max(wall, 1e-9),
+        "overload_enters": float(adm.overload_enters),
+        "spikes": float(spikes),
+        "hog_shed_frac": fracs["t3"],
+        "light_shed_frac": max(fracs[t] for t in lights),
+        "hog_credit": credits["t3"],
+        "light_credit_min": min(credits[t] for t in lights),
+        "hog_p99_ms": p99["t3"] * 1e3,
+        "light_p99_max_ms": max(p99[t] for t in lights) * 1e3,
+        "wall_s": wall,
+    }
+
+
+# --------------------------------------------------------------- case 2
+def run_idle_parity(n: int, replicas: int = 4, sessions: int = 12,
+                    blocks: int = 4, alpha: float = 1.0) -> Dict[str, float]:
+    """Attached-but-idle admission plane must be bit-identical to none."""
+    stream = tenant_stream(n, sessions, alpha, seed=7)
+    results = {}
+    t0 = time.perf_counter()
+    for mode in ("bare", "idle_admission"):
+        adm = AdmissionController(TENANTS) if mode == "idle_admission" else None
+        router = build_router(replicas, hbm_blocks=6 * blocks,
+                              dram_blocks=24 * blocks, admission=adm)
+        # batch 2 vs capacity 4: the dead band never latches
+        drive(router, stream, batch=2, blocks=blocks)
+        results[mode] = (router, adm)
+    wall = time.perf_counter() - t0
+    bare, idle = results["bare"][0], results["idle_admission"][0]
+    adm = results["idle_admission"][1]
+    if bare.assignment_log != idle.assignment_log:
+        a, b = bare.assignment_log, idle.assignment_log
+        d = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                 min(len(a), len(b)))
+        raise RuntimeError(
+            f"admission_idle_parity: attached-but-idle controller diverged "
+            f"from the bare router at decision {d}: "
+            f"bare={a[d:d + 3]} idle={b[d:d + 3]}")
+    if _contents(bare) != _contents(idle):
+        raise RuntimeError(
+            "admission_idle_parity: idle admission plane left different "
+            "tier contents than the bare router")
+    if (adm.admits != n or adm.degrades or adm.sheds or adm.rejects
+            or adm.overloaded or adm.queue_depth()):
+        raise RuntimeError(
+            f"admission_idle_parity: controller was not pure pass-through "
+            f"(admits={adm.admits}/{n} degrades={adm.degrades} "
+            f"sheds={adm.sheds} rejects={adm.rejects})")
+    if idle.dispatcher.tenant_weights:
+        raise RuntimeError(
+            "admission_idle_parity: tenant dispatch weights engaged "
+            "without overload")
+    return {"served": float(n), "rps": n / max(wall, 1e-9),
+            "decisions": float(len(bare.assignment_log)), "wall_s": wall}
+
+
+def fmt(extras: Dict[str, float], keys: List[str]) -> str:
+    return ";".join(f"{k}={extras[k]:.3g}" for k in keys if k in extras)
+
+
+def main(n: int = 2000) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    over = run_overload(n)
+    rows.append(("admission_overload",
+                 round(1e6 * over["wall_s"] / max(over["served"], 1), 2),
+                 fmt(over, ["offered", "served", "shed", "rejected",
+                            "overload_enters", "spikes", "hog_shed_frac",
+                            "light_shed_frac", "hog_credit", "hog_p99_ms",
+                            "light_p99_max_ms"])))
+    par = run_idle_parity(n)
+    rows.append(("admission_idle_parity",
+                 round(1e6 * par["wall_s"] / max(par["served"], 1), 2),
+                 fmt(par, ["served", "decisions"])))
+    append_history("BENCH_admission.json", {
+        "n": n,
+        "overload": {k: round(v, 4) for k, v in over.items()},
+        "idle_parity": {k: round(v, 4) for k, v in par.items()},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    n_arg = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
+    for row in main(n_arg):
+        print(",".join(map(str, row)))

@@ -66,6 +66,12 @@ def main() -> None:
         # hit-rate recovery, and availability-SLO budget intact — plus the
         # attached-but-idle chaos plane staying bit-identical to no plane.
         ("chaos", "bench_chaos", n_serve),
+        # Overload robustness plane: four Zipf tenants (one 3x hog) with
+        # distinct SLOs under chaos arrival spikes — asserts credit-ordered
+        # shedding, light-tenant p99-within-SLO, exact shed/reject/serve
+        # accounting, per-store tenant tier quotas, and the attached-but-
+        # idle controller staying bit-identical to admission=None.
+        ("admission", "bench_admission", n_serve),
         ("diffusion_tiers", "bench_diffusion_tiers", n_serve),
         ("dispatch_vec", "bench_dispatch_vec", n_idx),
         ("index_scale", "bench_index_scale", n_idx),

@@ -172,6 +172,13 @@ class DataAwareDispatcher:
         # Tie resolution only, so an empty map (the default) leaves every
         # decision bit-identical; fed by HeartbeatMonitor.stragglers().
         self.penalties: Dict[str, float] = {}
+        # Per-tenant dispatch weights (overload-fairness plane): while the
+        # admission controller holds its overload latch, phase-2 pick order
+        # prefers higher-credit tenants among items at the same cache score.
+        # Score ordering is untouched — weight only reorders equal-score
+        # picks — and an empty map (the default, and whenever the overload
+        # latch clears) leaves every decision bit-identical.
+        self.tenant_weights: Dict[str, float] = {}
         self.stats = SchedulerStats()
         # window-scan memoization: a failed scan stays failed until executor
         # states, the queue prefix, or the index change.
@@ -239,6 +246,16 @@ class DataAwareDispatcher:
         """Replace the straggler tie-penalty set (see ``self.penalties``)."""
         self.penalties = dict(penalties)
         self._scan_dirty = True
+
+    def set_tenant_weights(self, weights: Dict[str, float]) -> None:
+        """Replace the per-tenant pick-order weights (see
+        ``self.tenant_weights``); the admission pump sets shares while
+        overloaded and clears to {} when the latch releases."""
+        self.tenant_weights = dict(weights)
+        self._scan_dirty = True
+
+    def _tenant_w(self, item: Any) -> float:
+        return self.tenant_weights.get(getattr(item, "tenant", "") or "", 0.0)
 
     def executor_state(self, name: str) -> ExecutorState:
         return self._executors[name]
@@ -519,6 +536,12 @@ class DataAwareDispatcher:
         picked: List[Any] = []
         cached = self.index.cached_at(executor)
         scored: List[Tuple[float, int, Any]] = []
+        tw = self.tenant_weights
+        # Weighted mode collects every perfect hit in traversal order, then
+        # picks by (-tenant weight, traversal order): with uniform weights
+        # the first m are exactly the items the unweighted early-break path
+        # would have dispatched.
+        perfect: List[Tuple[float, int, Any]] = []
         if cached:
             # Fast path: only items demanding an object this executor caches
             # can score > 0; restrict to the first W queue positions.
@@ -544,13 +567,20 @@ class DataAwareDispatcher:
                     frac = hits / len(objects)
                     self.stats.tasks_scanned += 1
                     if frac >= 1.0:
-                        picked.append(item)
-                        if len(picked) >= m:
-                            break
+                        if tw:
+                            perfect.append((-self._tenant_w(item),
+                                            len(perfect), item))
+                        else:
+                            picked.append(item)
+                            if len(picked) >= m:
+                                break
                     else:
                         scored.append((frac, seq, item))
                 if len(picked) >= m:
                     break
+        if tw and perfect:
+            perfect.sort(key=lambda p: (p[0], p[1]))
+            picked = [it for _, _, it in perfect[:m]]
 
         for it in picked:
             self.stats.perfect_hits += 1
@@ -559,8 +589,12 @@ class DataAwareDispatcher:
             self.set_state(executor, ExecutorState.BUSY)
             return picked
 
-        # Highest-scoring partial hits next (ordered by score then FIFO).
-        scored.sort(key=lambda s: (-s[0], s[1]))
+        # Highest-scoring partial hits next (ordered by score then FIFO;
+        # tenant weight breaks equal-score ties while overloaded).
+        if tw:
+            scored.sort(key=lambda s: (-s[0], -self._tenant_w(s[2]), s[1]))
+        else:
+            scored.sort(key=lambda s: (-s[0], s[1]))
         for frac, _, item in scored:
             if len(picked) >= m:
                 break

@@ -62,6 +62,17 @@ class DynamicResourceProvisioner:
         self.pending: List[ProvisionRequest] = []
         self.total_requested = 0
         self.total_released = 0
+        # Demand-aware scale-down floor: the node count currently-admitted
+        # (non-shed) demand needs.  A queue valley right after an admission
+        # shed episode must not over-shrink the pool below what the work
+        # still held under backpressure requires — the router's admission
+        # pump keeps this current; 0 (default) preserves min_nodes-only
+        # release semantics.
+        self.demand_floor = 0
+
+    @property
+    def _release_floor(self) -> int:
+        return max(self.min_nodes, self.demand_floor)
 
     # ------------------------------------------------------------ allocation
     def _latency(self) -> float:
@@ -122,12 +133,12 @@ class DynamicResourceProvisioner:
 
     # --------------------------------------------------------------- release
     def should_release(self, idle_since_s: float, now: float) -> bool:
-        if self.registered <= self.min_nodes:
+        if self.registered <= self._release_floor:
             return False
         return (now - idle_since_s) >= self.idle_release_s
 
     def release(self, nodes: int = 1) -> int:
-        n = min(nodes, max(0, self.registered - self.min_nodes))
+        n = min(nodes, max(0, self.registered - self._release_floor))
         self.registered -= n
         self.total_released += n
         if self.policy == "exponential":

@@ -181,6 +181,15 @@ class TieredStore:
         self._promo_log: Optional[Dict[str, Tuple[str, int]]] = None
         self.deferred_applied = 0       # intents that became relocations
         self.deferred_coalesced = 0     # intents absorbed by a later intent
+        # Per-tenant admission quotas (the overload-fairness plane): with
+        # quotas set, a *fresh* placement whose tenant is already at its
+        # resident-byte cap passes through uncached instead of evicting
+        # other tenants' working sets.  None (default) = zero extra work.
+        self._tenant_quota: Optional[Dict[str, float]] = None
+        self._tenant_of: Optional[Callable[[str], Optional[str]]] = None
+        self._tenant_owner: Dict[str, str] = {}   # resident obj -> tenant
+        self.tenant_bytes: Dict[str, float] = {}  # resident bytes per tenant
+        self.quota_refusals = 0
 
     def snapshot(self) -> Dict[str, float]:
         """Registry-source view of this store's counters.
@@ -196,6 +205,7 @@ class TieredStore:
             "drops": float(self.drops),
             "deferred_applied": float(self.deferred_applied),
             "deferred_coalesced": float(self.deferred_coalesced),
+            "quota_refusals": float(self.quota_refusals),
         }
         for tier, n in self.hits_by_tier.items():
             out[f"hits_by_tier.{tier}"] = float(n)
@@ -205,6 +215,19 @@ class TieredStore:
         """Wire a payload backend after construction (the router builds its
         stores internally); already-resident objects stay placeholders."""
         self.payload = backend
+
+    def set_tenant_quotas(self, quotas: Dict[str, float],
+                          tenant_of: Callable[[str], Optional[str]]) -> None:
+        """Cap each tenant's resident bytes on this store.
+
+        ``tenant_of`` maps an object to its owning tenant (None = untracked,
+        never refused).  A fresh admit for a tenant already at its cap is
+        refused at ``_place`` (pass-through, counted in ``quota_refusals``),
+        so resident bytes never exceed ``quota + one object``.  Relocations
+        (promote / demote / victim cascade) of already-resident objects are
+        never quota-checked — they move bytes between tiers, not tenants."""
+        self._tenant_quota = dict(quotas)
+        self._tenant_of = tenant_of
 
     # -- queries --------------------------------------------------------------
     def __contains__(self, obj: str) -> bool:
@@ -377,6 +400,7 @@ class TieredStore:
             return
         self.tiers[i].cache.remove(obj)
         size = self._sizes.pop(obj, 0.0)
+        self._tenant_forget(obj, size)
         self.drops += 1
         if self.index is not None:
             self.index.remove(obj, self.name)
@@ -396,7 +420,42 @@ class TieredStore:
         return self.index.publish(self.name, self.contents())
 
     # -- placement machinery --------------------------------------------------
+    def _quota_admit(self, obj: str, size: float) -> bool:
+        """Fresh-placement quota gate: charge the owning tenant, or refuse.
+
+        Admission is allowed while the tenant is strictly *under* its cap, so
+        resident bytes are bounded by ``quota + one object`` — the last admit
+        may straddle the line but the next one is refused."""
+        t = self._tenant_of(obj) if self._tenant_of is not None else None
+        if t is None:
+            return True
+        q = self._tenant_quota.get(t)
+        if q is not None and self.tenant_bytes.get(t, 0.0) >= q:
+            return False
+        self._tenant_owner[obj] = t
+        self.tenant_bytes[t] = self.tenant_bytes.get(t, 0.0) + size
+        return True
+
+    def _tenant_forget(self, obj: str, size: float) -> None:
+        t = self._tenant_owner.pop(obj, None)
+        if t is not None:
+            self.tenant_bytes[t] = max(0.0, self.tenant_bytes.get(t, 0.0) - size)
+
     def _place(self, obj: str, size: float, start: int, dropped: List[str]) -> None:
+        if (self._tenant_quota is not None and obj not in self._tenant_owner
+                and not self._quota_admit(obj, size)):
+            # Tenant at cap: same pass-through exit as fitting no tier.
+            self.quota_refusals += 1
+            size_dropped = self._sizes.pop(obj, 0.0)
+            dropped.append(obj)
+            self.drops += 1
+            if self.index is not None:
+                self.index.remove(obj, self.name)
+            if self._on_drop is not None:
+                self._on_drop(obj, size_dropped)
+            if self.payload is not None:
+                self.payload.dropped(obj)
+            return
         for i in range(start, len(self.tiers)):
             tier = self.tiers[i]
             if size > tier.spec.capacity_bytes:
@@ -418,6 +477,7 @@ class TieredStore:
             return
         # No tier from `start` down can hold it: it leaves the node entirely.
         size_dropped = self._sizes.pop(obj, 0.0)
+        self._tenant_forget(obj, size_dropped)
         dropped.append(obj)
         self.drops += 1
         if self.index is not None:

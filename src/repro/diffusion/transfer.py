@@ -44,6 +44,7 @@ exact DES/dry-run backend and ``"real"`` only adds measurement.
 
 from __future__ import annotations
 
+import random as _random
 import time as _time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -128,6 +129,8 @@ class TransferEngine:
         timeout_s: Optional[float] = None,
         max_retries: int = 3,
         retry_backoff_s: float = 0.05,
+        retry_jitter_frac: float = 0.0,
+        jitter_seed: int = 0,
         chaos: Optional[Any] = None,
     ):
         if payload not in ("modeled", "real"):
@@ -156,6 +159,15 @@ class TransferEngine:
         self.timeout_s = timeout_s
         self.max_retries = max(0, int(max_retries))
         self.retry_backoff_s = retry_backoff_s
+        # Deterministic backoff jitter: each retry step is scaled by a
+        # seeded draw in [1 - frac, 1 + frac] so the synchronized retries
+        # of a mass failover spread out instead of thundering-herding the
+        # one surviving source.  frac = 0.0 (default) allocates no RNG and
+        # keeps the exact legacy ladder; the same seed replays the same
+        # jitter sequence (determinism pinned by test_diffusion).
+        self.retry_jitter_frac = max(0.0, float(retry_jitter_frac))
+        self._jitter_rng = (_random.Random(jitter_seed)
+                            if self.retry_jitter_frac > 0.0 else None)
         self.chaos = chaos
         self._inflight: Dict[Tuple[str, str], Transfer] = {}
         self._engaged: Dict[Tuple[str, str], List[Tuple[BandwidthResource, float]]] = {}
@@ -550,7 +562,11 @@ class TransferEngine:
                                      latency_s=self.latency_s)
                 return source, src_res, cost, backoff
             self.stats.retries += 1
-            backoff += self.retry_backoff_s * (2.0 ** attempt)
+            step = self.retry_backoff_s * (2.0 ** attempt)
+            if self._jitter_rng is not None:
+                step *= 1.0 + self.retry_jitter_frac * (
+                    2.0 * self._jitter_rng.random() - 1.0)
+            backoff += step
             if source != PERSISTENT:
                 if exclude is None:
                     exclude = set()

@@ -722,8 +722,19 @@ class VectorizedDispatcher(DataAwareDispatcher):
                 held = cols[self._presence[erow, cols] > 0]
                 return min(self._col_obj[c] for c in held)
 
-            perf_rows = sorted(perfect.tolist(),
-                               key=lambda r: (fstar(r), self._row_key[r]))
+            tw = self.tenant_weights
+            if tw:
+                # Weighted overload mode: same generalization as the
+                # reference engine — tenant weight first, then the exact
+                # (first-cached-object, key) traversal order within a weight.
+                perf_rows = sorted(
+                    perfect.tolist(),
+                    key=lambda r: (-self._tenant_w(
+                        self._queue[self._row_key[r]]),
+                        fstar(r), self._row_key[r]))
+            else:
+                perf_rows = sorted(perfect.tolist(),
+                                   key=lambda r: (fstar(r), self._row_key[r]))
             for r in perf_rows[:m]:
                 item = self._queue[self._row_key[r]]
                 self.stats.perfect_hits += 1
@@ -736,7 +747,15 @@ class VectorizedDispatcher(DataAwareDispatcher):
             # ordered by (-score, FIFO seq) exactly as the reference sort.
             prows = cand[~perfect_mask]
             if prows.size:
-                order = np.lexsort((self._row_seq[prows], -frac[~perfect_mask]))
+                if tw:
+                    wvec = np.array(
+                        [self._tenant_w(self._queue[self._row_key[int(r)]])
+                         for r in prows], dtype=np.float64)
+                    order = np.lexsort((self._row_seq[prows], -wvec,
+                                        -frac[~perfect_mask]))
+                else:
+                    order = np.lexsort((self._row_seq[prows],
+                                        -frac[~perfect_mask]))
                 for oi in order:
                     if len(picked) >= m:
                         break

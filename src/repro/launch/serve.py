@@ -70,6 +70,20 @@ def main() -> None:
                          "crashes, stragglers, transfer flakes/timeouts, and "
                          "KV-spill corruption at the serving-default mix; "
                          "the run reports faults.* recovery counters")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="multi-tenant admission plane: sessions map onto N "
+                         "tenants (t0..tN-1) with credit-based backpressure, "
+                         "deadline-aware load shedding and per-tenant tier "
+                         "quotas; with --chaos the overload fault mix "
+                         "(arrival spikes) replaces the serving default")
+    ap.add_argument("--slo-per-tenant", default="",
+                    help="with --tenants: per-tenant SLOs feeding the credit "
+                         "formula, same grammar as --slo (every tenant gets "
+                         "its own board)")
+    ap.add_argument("--tenant-quota-frac", type=float, default=0.5,
+                    help="with --tenants: per-tenant resident-session quota "
+                         "as a fraction of --max-sessions per replica "
+                         "(0 disables the tier quota)")
     ap.add_argument("--heartbeat-timeout", type=float, default=None,
                     help="enable the heartbeat liveness plane: lapsed beats "
                          "crash the replica, EWMA stragglers lose dispatch "
@@ -89,7 +103,12 @@ def main() -> None:
     heartbeat_timeout = args.heartbeat_timeout
     if args.chaos is not None:
         from ..runtime.chaos import ChaosInjector, FaultSchedule
-        chaos = ChaosInjector(FaultSchedule.serving_default(), seed=args.chaos)
+        # With tenants the overload mix (arrival spikes + light faults)
+        # drives the admission plane; single-tenant keeps the pinned
+        # serving-default chaos smoke draws untouched.
+        schedule = (FaultSchedule.overload_default() if args.tenants > 0
+                    else FaultSchedule.serving_default())
+        chaos = ChaosInjector(schedule, seed=args.chaos)
         if heartbeat_timeout is None:
             heartbeat_timeout = 10.0
     srv = DiffusionServer(cfg, policy=args.policy, max_replicas=args.replicas,
@@ -100,7 +119,10 @@ def main() -> None:
                           dispatcher_impl=args.dispatcher,
                           batch_drain=args.batch_drain,
                           obs=obs, chaos=chaos,
-                          heartbeat_timeout_s=heartbeat_timeout)
+                          heartbeat_timeout_s=heartbeat_timeout,
+                          tenants=args.tenants,
+                          slo_per_tenant=args.slo_per_tenant,
+                          tenant_quota_frac=args.tenant_quota_frac)
     rng = np.random.default_rng(0)
     prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=(16,))
                for i in range(args.sessions)}
@@ -108,8 +130,12 @@ def main() -> None:
     burst = max(1, args.batch_size) if args.batch_drain else 1
     served = 0
     for i in range(args.requests):
-        sid = sids[int(rng.integers(0, len(sids)))]
-        srv.submit(sid, prompts[sid], max_new_tokens=args.new_tokens)
+        # Chaos arrival spikes multiply the offered load for the step: the
+        # extra submissions are what drive the admission plane into its
+        # overload latch (1.0 outside an episode — identical stream).
+        for _ in range(max(1, round(srv.arrival_multiplier()))):
+            sid = sids[int(rng.integers(0, len(sids)))]
+            srv.submit(sid, prompts[sid], max_new_tokens=args.new_tokens)
         if (i + 1) % burst == 0 or i + 1 == args.requests:
             served += srv.step()
             if (obs is not None and args.metrics_every > 0
@@ -125,6 +151,21 @@ def main() -> None:
           # window-only percentiles (exact over the latency reservoir's
           # most recent samples, blind to older ones) — labeled as such.
           f"win_p50={r.p50_s * 1e3:.1f}ms win_p99={r.p99_s * 1e3:.1f}ms")
+    if srv.admission is not None:
+        adm = srv.admission
+        a = adm.snapshot()
+        print(f"admission: admits={int(a['admits'])} "
+              f"degrades={int(a['degrades'])} sheds={int(a['sheds'])} "
+              f"rejects={int(a['rejects'])} "
+              f"overload_enters={int(a['overload_enters'])} "
+              f"spikes={int(srv.router.faults.spikes_injected)}")
+        for name in sorted(adm.tenants):
+            st = adm.tenants[name]
+            print(f"tenant {name}: offered={st.submitted} served={st.served} "
+                  f"shed={st.shed} rejected={st.rejected} "
+                  f"credit={st.credit:.2f} share={st.share:.2f} "
+                  f"win_p99={st.win_p99_s() * 1e3:.1f}ms "
+                  f"hit_rate={st.hit_rate:.0%}")
     if chaos is not None:
         f = srv.router.faults
         lost = len(srv.router._requests) + srv.router.queue_length()

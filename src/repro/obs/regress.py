@@ -93,6 +93,13 @@ DECLARED_METRICS: Dict[str, Tuple[MetricSpec, ...]] = {
         MetricSpec("measured_gbps.hbm->dram"),
         MetricSpec("measured_gbps.disk->hbm"),
     ),
+    "BENCH_admission.json": (
+        # Wall-clock throughput of the overload storm and the idle-parity
+        # pump; the fairness invariants themselves are hard per-run raises
+        # in the bench, so only the perf trajectory needs the sentinel.
+        MetricSpec("overload.rps", rel_floor=0.30),
+        MetricSpec("idle_parity.rps", rel_floor=0.30),
+    ),
 }
 
 

@@ -61,6 +61,8 @@ class FaultStats:
     transfer_faults_injected: int = 0
     corruptions_injected: int = 0
     rpc_losses_injected: int = 0
+    spikes_injected: int = 0            # arrival-spike episodes begun
+    spike_active: int = 0               # gauge: spike episode in progress
     # -- recovery (router / payload plane) -----------------------------------
     replicas_failed: int = 0            # fail_replica invocations
     requests_requeued: int = 0          # orphans re-enqueued exactly once
@@ -98,13 +100,17 @@ class FaultSchedule:
     timeout_rate: float = 0.0       # P(injected timeout) per fetch attempt
     corrupt_rate: float = 0.0       # P(one spill bit-flip) per step
     rpc_loss_rate: float = 0.0      # P(dropped shard update) per enqueue
+    spike_rate: float = 0.0         # P(arrival-spike onset) per step
+    spike_multiplier: float = 2.0   # offered-load multiplier while spiking
+    spike_steps: int = 3            # how long a spike episode lasts
     start_step: int = 0             # steps of grace before chaos begins
 
     @property
     def idle(self) -> bool:
         return (self.crash_rate <= 0.0 and self.straggle_rate <= 0.0
                 and self.flake_rate <= 0.0 and self.timeout_rate <= 0.0
-                and self.corrupt_rate <= 0.0 and self.rpc_loss_rate <= 0.0)
+                and self.corrupt_rate <= 0.0 and self.rpc_loss_rate <= 0.0
+                and self.spike_rate <= 0.0)
 
     @classmethod
     def serving_default(cls) -> "FaultSchedule":
@@ -115,6 +121,18 @@ class FaultSchedule:
                    straggle_rate=0.05, straggle_factor=3.0, straggle_steps=4,
                    flake_rate=0.15, timeout_rate=0.05,
                    corrupt_rate=0.25, rpc_loss_rate=0.05, start_step=2)
+
+    @classmethod
+    def overload_default(cls) -> "FaultSchedule":
+        """The multi-tenant overload mix (``--chaos SEED --tenants N``):
+        arrival spikes drive the admission plane past its overload latch
+        while a light fault mix keeps the recovery path honest.  Kept
+        separate from ``serving_default`` so the single-tenant chaos smoke's
+        seeded draws stay pinned."""
+        return cls(straggle_rate=0.04, straggle_factor=2.0, straggle_steps=3,
+                   flake_rate=0.10, timeout_rate=0.03,
+                   spike_rate=0.25, spike_multiplier=2.0, spike_steps=3,
+                   start_step=2)
 
 
 class ChaosInjector:
@@ -133,6 +151,7 @@ class ChaosInjector:
         self._step = 0
         self._crashed = 0
         self._straggling: Dict[str, int] = {}   # name -> steps remaining
+        self._spike_left = 0                    # arrival-spike steps remaining
 
     @property
     def idle(self) -> bool:
@@ -143,7 +162,7 @@ class ChaosInjector:
         any injections already counted."""
         for f in ("crashes_injected", "straggles_injected",
                   "transfer_faults_injected", "corruptions_injected",
-                  "rpc_losses_injected"):
+                  "rpc_losses_injected", "spikes_injected"):
             setattr(stats, f, getattr(stats, f) + getattr(self.stats, f))
         self.stats = stats
 
@@ -162,8 +181,19 @@ class ChaosInjector:
             self._straggling[name] -= 1
             if self._straggling[name] <= 0:
                 del self._straggling[name]
+        if self._spike_left > 0:
+            self._spike_left -= 1
+            if self._spike_left == 0:
+                self.stats.spike_active = 0
         if self._step <= s.start_step:
             return [], []
+        # Arrival-spike onset (overload plane): rate guard BEFORE the RNG so
+        # spike-free schedules draw nothing extra from a pinned seed.
+        if (s.spike_rate > 0.0 and self._spike_left == 0
+                and self.rng.random() < s.spike_rate):
+            self._spike_left = s.spike_steps
+            self.stats.spikes_injected += 1
+            self.stats.spike_active = 1
         names = sorted(alive)
         victims: List[str] = []
         if s.crash_rate > 0.0 and self._crashed < s.max_crashes:
@@ -186,6 +216,15 @@ class ChaosInjector:
                     fresh.append(name)
             self.stats.straggles_injected += len(fresh)
         return victims, fresh
+
+    def arrival_multiplier(self) -> float:
+        """Offered-load multiplier for the current step (1.0 = no spike).
+
+        Pure read — the episode state advances in ``begin_step``, so probing
+        here any number of times never touches the RNG."""
+        if self._spike_left > 0:
+            return self.schedule.spike_multiplier
+        return 1.0
 
     def service_factor(self, name: str) -> float:
         """Current service-time multiplier for a replica (1.0 = healthy)."""

@@ -35,10 +35,12 @@ from ..diffusion.tiers import TieredStore, TierSpec, default_tier_weights
 from ..diffusion.transfer import TransferEngine
 from ..index.warmstart import WarmStartReport, WarmStartStats, clone_hottest
 from ..obs.registry import P2Quantile
+from .admission import AdmissionController, AdmissionVerdict
 from .chaos import FaultStats
 from .fault_tolerance import HeartbeatMonitor
 
-__all__ = ["POLICIES", "Assignment", "CacheAffinityRouter", "LatencyReservoir",
+__all__ = ["POLICIES", "AdmissionController", "AdmissionVerdict",
+           "Assignment", "CacheAffinityRouter", "LatencyReservoir",
            "ReplicaStore", "RoutedRequest", "RouterStats"]
 
 
@@ -59,6 +61,12 @@ class RoutedRequest:
     # transfer source ("peer:<name>"/"persistent"), filled by the router.
     sources: Dict[str, str] = field(default_factory=dict)
     restore_cost_s: float = 0.0         # swap-in + transfer time still to pay
+    # Multi-tenant admission plane: the paying tenant ("" = the implicit
+    # "default" account) and an optional absolute deadline — under overload
+    # the admission controller sheds past-deadline requests before fresh
+    # ones (runtime/admission.py).
+    tenant: str = ""
+    deadline_s: Optional[float] = None
 
     @property
     def key(self) -> int:
@@ -376,9 +384,23 @@ class CacheAffinityRouter:
         transfer_timeout_s: Optional[float] = None,
         transfer_max_retries: int = 3,
         transfer_retry_backoff_s: float = 0.05,
+        #   transfer_retry_jitter_s — deterministic (seeded) jitter fraction
+        #       on the retry backoff ladder so a mass failover's synchronized
+        #       retries don't thundering-herd one surviving source; 0.0
+        #       (default) keeps the exact legacy ladder.
+        transfer_retry_jitter_frac: float = 0.0,
+        transfer_jitter_seed: int = 0,
         chaos: Optional[Any] = None,
         heartbeat_timeout_s: Optional[float] = None,
         straggler_factor: float = 2.0,
+        # ---- overload robustness plane (multi-tenant admission).  None
+        # (default) is a strict no-op: enqueue dispatches exactly as before
+        # and returns ACCEPTED unconditionally.  An AdmissionController
+        # turns enqueue into the backpressure contract (ACCEPTED / DEGRADED
+        # / REJECTED), sheds deadline-expired and over-share work under
+        # overload (lowest credit first), biases pick-item dispatch ties by
+        # tenant share, and caps per-tenant tier bytes on every store.
+        admission: Optional[AdmissionController] = None,
     ):
         self.index = index if index is not None else CentralizedIndex()
         self.tier_specs = list(tier_specs) if tier_specs is not None else None
@@ -408,6 +430,7 @@ class CacheAffinityRouter:
         self.eviction = eviction
         self.object_size_fn = object_size_fn
         self.drp = provisioner
+        self.admission = admission
         self._payload_factory = payload_factory
         self._spawn = spawn_replica
         self._stop = stop_replica
@@ -429,6 +452,8 @@ class CacheAffinityRouter:
                 timeout_s=transfer_timeout_s,
                 max_retries=transfer_max_retries,
                 retry_backoff_s=transfer_retry_backoff_s,
+                retry_jitter_frac=transfer_retry_jitter_frac,
+                jitter_seed=transfer_jitter_seed,
                 chaos=chaos)
             if prefetch_depth > 0:
                 self.prefetcher = Prefetcher(self.engine, object_size_fn)
@@ -492,6 +517,9 @@ class CacheAffinityRouter:
         if bus is not None and hasattr(bus, "stats"):
             reg.register_source("coherence", bus.stats)
         reg.register_callable("tiers", self._tiers_snapshot)
+        if self.admission is not None:
+            reg.register_source("admission", self.admission)
+            reg.register_callable("tenant", self._tenant_snapshot)
 
     def _tiers_snapshot(self) -> Dict[str, float]:
         """Fleet aggregate of every replica store's per-tier counters."""
@@ -500,6 +528,19 @@ class CacheAffinityRouter:
             for k, v in store.tiers.snapshot().items():
                 out[k] = out.get(k, 0.0) + v
         return out
+
+    def _tenant_snapshot(self) -> Dict[str, float]:
+        """The ``tenant.*`` island: per-tenant accounts, with resident
+        tier bytes refreshed from the stores' quota accounting (lazy —
+        snapshot-time only, nothing on the request path)."""
+        adm = self.admission
+        totals: Dict[str, float] = {}
+        for store in self.stores.values():
+            for t, b in store.tiers.tenant_bytes.items():
+                totals[t] = totals.get(t, 0.0) + b
+        for name, st in adm.tenants.items():
+            st.tier_bytes = totals.get(name, 0.0)
+        return adm.tenants_snapshot()
 
     @property
     def policy(self) -> str:
@@ -533,6 +574,13 @@ class CacheAffinityRouter:
                 backend.on_corruption = (
                     lambda obj, _n=name: self._note_corruption(_n, obj))
             self.stores[name].tiers.attach_payload(backend)
+        if self.admission is not None:
+            quotas = self.admission.store_quotas()
+            if quotas:
+                # One tenant's working set cannot evict above its share:
+                # the store refuses placements past the tenant's byte cap.
+                self.stores[name].tiers.set_tenant_quotas(
+                    quotas, self.admission.tenant_of_object)
         if self.engine is not None:
             self.engine.register(name, self.stores[name].tiers)
         if self.monitor is not None:
@@ -691,19 +739,40 @@ class CacheAffinityRouter:
         return list(self.stores)
 
     # --------------------------------------------------------------- submit
-    def enqueue(self, request: RoutedRequest, now: Optional[float] = None) -> None:
+    def enqueue(self, request: RoutedRequest,
+                now: Optional[float] = None) -> AdmissionVerdict:
         """Queue a request without running the drain — the batch-drain entry
         point: callers enqueue a burst, then ``tick()`` once so the whole
-        burst is decided in a single window scan."""
+        burst is decided in a single window scan.
+
+        Returns the admission verdict (the backpressure contract).  With no
+        admission controller attached the verdict is ``ACCEPTED``
+        unconditionally and the path is bit-identical to the pre-admission
+        router.  ``REJECTED`` requests are refused at the edge — counted on
+        the tenant's account and traced as a ``shed`` span, never silently
+        dropped."""
         now = time.monotonic() if now is None else now
         if request.submit_time_s == 0.0:
             request.submit_time_s = now
+        verdict = AdmissionVerdict.ACCEPTED
+        if self.admission is not None:
+            verdict = self.admission.on_submit(request, now)
+            if verdict is AdmissionVerdict.REJECTED:
+                self._shed_span(request, now, "rejected")
+                return verdict
         self._requests[request.request_id] = request
-        self.dispatcher.submit(request)
+        if verdict is AdmissionVerdict.ACCEPTED:
+            self.dispatcher.submit(request)
+        # DEGRADED: admitted into the controller's bounded tenant queue;
+        # tick()'s admission pump releases it by credit share (or sheds it).
         if self.drp is not None:
-            req = self.drp.on_queue_change(now, self.dispatcher.queue_length())
+            depth = self.dispatcher.queue_length()
+            if self.admission is not None:
+                depth += self.admission.queue_depth()
+            req = self.drp.on_queue_change(now, depth)
             if req is not None:
                 self._pending_provisions.append(req)
+        return verdict
 
     def submit(self, request: RoutedRequest, now: Optional[float] = None) -> List[Assignment]:
         """Enqueue a request; returns any assignments routable right away."""
@@ -714,6 +783,11 @@ class CacheAffinityRouter:
     def queue_length(self) -> int:
         return self.dispatcher.queue_length()
 
+    def pending_admission(self) -> int:
+        """Requests held under backpressure in tenant queues (0 without an
+        admission controller — or whenever it is not overloaded)."""
+        return self.admission.queue_depth() if self.admission is not None else 0
+
     # ----------------------------------------------------------- main pump
     def tick(self, now: Optional[float] = None) -> List[Assignment]:
         """Drive elasticity + phase-1 routing; returns new assignments."""
@@ -723,6 +797,8 @@ class CacheAffinityRouter:
         if self._corrupt_refetch:
             self._drain_corrupt_refetch(now)
         self._complete_provisions(now)
+        if self.admission is not None:
+            self._admission_pump(now)
         self._maybe_release(now)
         out = self._drain_notify(now)
         if self._perf is not None:
@@ -734,6 +810,47 @@ class CacheAffinityRouter:
             self._perf.on_sample(now, float(n),
                                  float(n - self.dispatcher.free_count()))
         return out
+
+    def _shed_span(self, request: RoutedRequest, now: float,
+                   reason: str) -> None:
+        """Trace a shed/rejected request: wall time from submit to the shed
+        decision, so the critical-path analyzer can attribute rejected-vs-
+        served time.  Request-attributed (never sampled out)."""
+        if self._trace is not None:
+            t0 = request.submit_time_s or now
+            self._trace.record(request.request_id, "shed", "shed",
+                               t0, now, "", "",
+                               (request.tenant or "default", reason))
+
+    def _admission_pump(self, now: float) -> None:
+        """Overload control loop, once per tick: adapt (dead-band credit
+        controller), shed its victims, release queued work into the
+        dispatcher by credit share, refresh tenant dispatch-tie weights."""
+        adm = self.admission
+        capacity = max(1, len(self.stores)) * max(1, self.pickup_batch)
+        victims = adm.adapt(now, queued=self.dispatcher.queue_length(),
+                            capacity=capacity)
+        for r in victims:
+            self._requests.pop(r.request_id, None)
+            self._shed_span(r, now, "shed")
+        if adm.queue_depth() > 0:
+            if adm.overloaded:
+                # keep the dispatcher fed to ~2x pool headroom; the rest
+                # waits under backpressure in the tenant queues
+                budget = max(0, 2 * capacity - self.dispatcher.queue_length())
+            else:
+                budget = adm.queue_depth()   # overload cleared: drain fully
+            for r in adm.release(now, budget):
+                self.dispatcher.submit(r)
+        # Tenant-weighted pick-item ties engage only while overloaded (and
+        # clear after), so a controller that never saw overload leaves the
+        # dispatch sequence bit-identical to admission=None.
+        if adm.overloaded and len(adm.tenants) > 1:
+            weights = {n: st.share for n, st in adm.tenants.items()}
+            if weights != self.dispatcher.tenant_weights:
+                self.dispatcher.set_tenant_weights(weights)
+        elif self.dispatcher.tenant_weights:
+            self.dispatcher.set_tenant_weights({})
 
     def _drain_notify(self, now: float) -> List[Assignment]:
         if self.batch_drain:
@@ -1108,6 +1225,10 @@ class CacheAffinityRouter:
             if self._slo is not None:
                 self._slo.on_complete(now, request.response_time_s,
                                       request.hits, request.misses)
+            if self.admission is not None:
+                self.admission.on_complete(request.tenant or "default", now,
+                                           request.response_time_s,
+                                           request.hits, request.misses)
         replica = request.replica
         if self._trace is not None:
             # Root span: submit -> finish, closing the request's causal chain.
@@ -1196,6 +1317,16 @@ class CacheAffinityRouter:
     def _maybe_release(self, now: float) -> None:
         if self.drp is None or self.dispatcher.queue_length() > 0:
             return
+        if self.admission is not None:
+            # Admitted (non-shed) demand still waiting under backpressure
+            # keeps its capacity: a valley right after a shed episode must
+            # not over-shrink the pool.  Feed the DRP's demand floor and
+            # skip release entirely while tenant queues are backlogged.
+            pending = self.admission.queue_depth()
+            self.drp.demand_floor = math.ceil(
+                pending / max(1.0, self.drp.tasks_per_node_target))
+            if pending > 0:
+                return
         for name in list(self.stores):
             if self.dispatcher.executor_state(name) != ExecutorState.FREE:
                 continue

@@ -29,7 +29,8 @@ from ..diffusion.payload import MeasuredBandwidth, RealPayload
 from ..diffusion.tiers import TierSpec
 from ..models import cache_init, init_params, make_decode_step, make_prefill_step
 from ..models.sharding import ShardCtx
-from .router import Assignment, CacheAffinityRouter, RoutedRequest
+from .router import (Assignment, AdmissionController, CacheAffinityRouter,
+                     RoutedRequest)
 
 
 @dataclass
@@ -42,6 +43,8 @@ class Request:
     finish_time_s: Optional[float] = None
     replica: Optional[str] = None
     prefix_hit: bool = False
+    tenant: str = ""                # multi-tenant admission account
+    verdict: Optional[Any] = None   # AdmissionVerdict when admission is on
 
     @property
     def response_time_s(self) -> Optional[float]:
@@ -146,6 +149,19 @@ class DiffusionServer:
         # stragglers lose cache-affinity dispatch ties.
         heartbeat_timeout_s: Optional[float] = None,
         straggler_factor: float = 2.0,
+        # Multi-tenant overload plane: tenants > 0 builds an
+        # AdmissionController over tenants t0..t{n-1} — requests carry a
+        # tenant label, enqueue becomes a backpressure contract, and under
+        # overload the lowest-credit tenant sheds first.  slo_per_tenant
+        # (the ``p99_ms=50:hit_rate=0.8`` CLI grammar) gives every tenant
+        # its own SLO board feeding the credit formula;
+        # tenant_quota_frac > 0 caps each tenant's resident session slots
+        # at frac * max_sessions per replica.  An explicit ``admission``
+        # instance overrides all three.
+        admission: Optional[AdmissionController] = None,
+        tenants: int = 0,
+        slo_per_tenant: str = "",
+        tenant_quota_frac: float = 0.0,
         ctx: ShardCtx = ShardCtx(),
         seed: int = 0,
     ):
@@ -170,6 +186,19 @@ class DiffusionServer:
                 TierSpec("hbm", float(max_sessions), eviction=eviction),
                 TierSpec("dram", float(host_cache_sessions), eviction=eviction),
             ]
+        self._tenants = int(tenants)
+        if admission is None and tenants > 0:
+            from ..obs.slo import parse_slo_specs
+            names = [f"t{i}" for i in range(tenants)]
+            specs = parse_slo_specs(slo_per_tenant) if slo_per_tenant else None
+            admission = AdmissionController(
+                names,
+                slo_specs_by_tenant=(
+                    {n: specs for n in names} if specs else None),
+                tier_quota_bytes=(
+                    {n: tenant_quota_frac * max_sessions for n in names}
+                    if tenant_quota_frac > 0.0 else None),
+            )
         self.router = CacheAffinityRouter(
             policy=policy,
             window=64,
@@ -201,7 +230,9 @@ class DiffusionServer:
             chaos=chaos,
             heartbeat_timeout_s=heartbeat_timeout_s,
             straggler_factor=straggler_factor,
+            admission=admission,
         )
+        self.admission = admission
         self.chaos = chaos
         self.batch_drain = batch_drain
         self.replicas: Dict[str, Replica] = {}
@@ -243,24 +274,41 @@ class DiffusionServer:
         return self.measured.bandwidth("dram", "hbm")
 
     # ------------------------------------------------------------ submit
+    def tenant_of_session(self, session_id: str) -> str:
+        """Stable session → tenant assignment ("" when single-tenant):
+        trailing digits modulo the tenant count, so seeded workloads land
+        the same sessions on the same tenants every run."""
+        if self._tenants <= 0:
+            return ""
+        digits = "".join(ch for ch in session_id if ch.isdigit())
+        h = int(digits) if digits else sum(session_id.encode())
+        return f"t{h % self._tenants}"
+
+    def arrival_multiplier(self) -> float:
+        """Chaos arrival-spike factor for this step (1.0 = no spike) — the
+        workload driver multiplies its offered load by it."""
+        return self.chaos.arrival_multiplier() if self.chaos is not None else 1.0
+
     def submit(self, session_id: str, prompt: np.ndarray,
-               max_new_tokens: int = 8) -> Request:
+               max_new_tokens: int = 8,
+               tenant: Optional[str] = None) -> Request:
         now = time.time()
+        tenant = self.tenant_of_session(session_id) if tenant is None else tenant
         req = Request(self._req_id, session_id, prompt, max_new_tokens,
-                      submit_time_s=now)
+                      submit_time_s=now, tenant=tenant)
         self._req_id += 1
         routed = RoutedRequest(req.request_id, (session_object(session_id),),
-                               payload=req, submit_time_s=now)
-        if self.batch_drain:
-            # Batch plane: only enqueue — step() drains the accumulated
-            # burst through one single-scan notify_batch per tick.
-            self.router.enqueue(routed, now=now)
-        else:
+                               payload=req, submit_time_s=now, tenant=tenant)
+        # enqueue carries the backpressure contract; a REJECTED request is
+        # refused at the edge (counted + traced), never silently dropped.
+        req.verdict = self.router.enqueue(routed, now=now)
+        if not self.batch_drain:
             # The router runs phase 1 (and DRP scaling) immediately;
             # execution happens in step().  Requests whose policy delays
             # dispatch stay in the wait queue until a replica frees and
-            # picks them (phase 2).
-            self._ready.extend(self.router.submit(routed, now=now))
+            # picks them (phase 2).  (Batch plane: only enqueue — step()
+            # drains the accumulated burst in one notify_batch per tick.)
+            self._ready.extend(self.router.tick(now))
         return req
 
     # ------------------------------------------------------------- serve
@@ -404,7 +452,8 @@ class DiffusionServer:
         idle_rounds = 0
         if self.chaos is not None or self.router.monitor is not None:
             self.chaos_tick(time.time())
-        while self._ready or self.router.queue_length() > 0:
+        while (self._ready or self.router.queue_length() > 0
+               or self.router.pending_admission() > 0):
             if not self._ready:
                 # delayed requests: replicas all freed by now, re-run phase 1
                 self._ready.extend(self.router.tick(time.time()))

@@ -616,3 +616,38 @@ def test_tier_spec_from_roofline_pins_the_mapping():
     assert (hbm.capacity_bytes, dram.capacity_bytes) == (1024.0, 2048.0)
     # the calibration path must NOT trip dryrun's 512-fake-device env hack
     assert os.environ.get("XLA_FLAGS") == flags_before
+
+
+# ------------------------------------------------------- retry backoff jitter
+def _flaky_backoff(jitter_seed, frac):
+    """Total accumulated retry backoff with every attempt flaking."""
+    from repro.runtime.chaos import ChaosInjector, FaultSchedule
+    idx = CentralizedIndex()
+    link = BandwidthResource("gpfs", 10.0)
+    chaos = ChaosInjector(FaultSchedule(flake_rate=1.0), seed=1)
+    eng = TransferEngine(idx, link, max_retries=2, retry_backoff_s=0.1,
+                         retry_jitter_frac=frac, jitter_seed=jitter_seed,
+                         chaos=chaos)
+    stores = {}
+    for name in ("r0", "r1", "r2"):
+        stores[name] = TieredStore(name, [TierSpec("hbm", 100.0)], index=idx,
+                                   nic_bw_bytes_per_s=100.0)
+        eng.register(name, stores[name])
+    stores["r0"].admit("obj", 10.0)
+    stores["r1"].admit("obj", 10.0)
+    return eng.fetch("obj", 10.0, "r2", now=0.0).start_s
+
+
+def test_retry_backoff_jitter_deterministic_under_seed():
+    legacy = _flaky_backoff(jitter_seed=3, frac=0.0)
+    assert legacy > 0.0                      # the ladder did back off
+    # frac=0 allocates no RNG: the seed is irrelevant, ladder is exact legacy
+    assert _flaky_backoff(jitter_seed=99, frac=0.0) == legacy
+    a = _flaky_backoff(jitter_seed=3, frac=0.5)
+    b = _flaky_backoff(jitter_seed=3, frac=0.5)
+    c = _flaky_backoff(jitter_seed=4, frac=0.5)
+    assert a == b                            # same seed: identical jitter
+    assert a != c                            # different seed: different draws
+    # every step is scaled within [1-frac, 1+frac] of the legacy ladder
+    assert legacy * 0.5 <= a <= legacy * 1.5
+    assert legacy * 0.5 <= c <= legacy * 1.5

@@ -180,3 +180,22 @@ def test_delayed_request_served_after_holder_frees():
     after = r.complete(busy[0].requests[0], now=2.0)
     assert len(after) == 1 and after[0].replica == home
     assert after[0].requests[0].hits == 1
+
+
+def test_scale_down_refuses_to_drop_below_admitted_demand():
+    """The DRP demand floor: a queue valley right after a shed episode must
+    not shrink the pool below what still-admitted (non-shed) work needs."""
+    drp = DynamicResourceProvisioner(max_nodes=4, min_nodes=1,
+                                     idle_release_s=0.0,
+                                     allocation_latency_s=(0.0, 0.0))
+    drp.registered = 3
+    drp.demand_floor = 2
+    assert drp.should_release(0.0, 100.0)       # 3 > floor: one may go
+    assert drp.release(5) == 1                  # clamped at the floor
+    assert drp.registered == 2
+    assert not drp.should_release(0.0, 1000.0)  # at the floor: held
+    assert drp.release(5) == 0
+    drp.demand_floor = 0                        # backlog drained
+    assert drp.should_release(0.0, 1000.0)      # min_nodes=1 allows 2 -> 1
+    assert drp.release(5) == 1 and drp.registered == 1
+    assert not drp.should_release(0.0, 1e9)     # min-capacity floor holds
